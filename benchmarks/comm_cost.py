@@ -1,0 +1,75 @@
+"""Paper Table 3: critical-path communication (W bytes, S messages).
+
+Compares MFBC's 3D decomposition (replication c = pod axis) against the
+2D-only baseline (c = 1 — what a CombBLAS-style square-grid code does),
+from two sources:
+
+* the analytic §5.2/§5.3 model at Blue-Waters scale (4096 cores) for the
+  paper's graphs (Orkut / LiveJournal / Patents sizes), and
+* HLO-measured per-device collective bytes of the compiled distributed BC
+  step from the dry-run artifacts (512-chip mesh), which realizes the same
+  ratio structurally.
+"""
+from __future__ import annotations
+
+import glob
+import math
+import json
+import os
+from typing import Dict, List
+
+from repro.spgemm.cost_model import best_replication, w_mfbc
+
+# (name, n, m, diameter) — Table 2 of the paper.
+PAPER_GRAPHS = [
+    ("orkut", 3_100_000, 117_000_000, 9),
+    ("livejournal", 4_800_000, 70_000_000, 16),
+    ("patents", 3_800_000, 16_500_000, 22),
+]
+
+
+def table3_model(p=4096, nb=512, word=8) -> List[Dict]:
+    """One batch of ``nb`` sources (paper Table 3 setting).
+
+    With the batch size fixed at 512, the useful replication is
+    c = nb·n/m (Theorem 5.1's n_b = c·m/n inverted); the 2D baseline is
+    c = 1. Per-batch bytes: 4·nb·n·word/√(pc) frontier movement +
+    c·m·word/p adjacency replication (charged fully to this batch —
+    conservative against MFBC).
+    """
+    rows = []
+    for name, n, m, d in PAPER_GRAPHS:
+        c3 = max(1, min(int(nb * n / m), p))
+
+        def batch_bytes(c):
+            front = 4.0 * nb * n * word / math.sqrt(p * c)
+            adj = c * m * word / p
+            return front + (adj if c > 1 else 0.0)
+
+        def batch_msgs(c):
+            return d * math.sqrt(p / c) * math.log2(p)
+
+        w2, w3 = batch_bytes(1), batch_bytes(c3)
+        rows.append({
+            "graph": name, "n": n, "m": m, "d": d, "c_3d": c3,
+            "W_2d_GB": w2 / 1e9, "W_3d_GB": w3 / 1e9,
+            "S_2d": batch_msgs(1), "S_3d": batch_msgs(c3),
+            "ratio_W": w2 / max(w3, 1e-9),
+        })
+    return rows
+
+
+def measured_bc_collectives(dryrun_dir="results/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              "mfbc_paper__*.json"))):
+        rec = json.load(open(path))
+        if not rec.get("ok"):
+            continue
+        rows.append({
+            "cell": f"{rec['shape']}@{rec['mesh']}",
+            "wire_GB_per_dev": rec["collectives"]["wire_bytes"] / 1e9,
+            "msgs_per_dev": rec["collectives"]["messages"],
+            "flops_per_dev": rec["flops_per_device"],
+        })
+    return rows

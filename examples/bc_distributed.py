@@ -1,0 +1,40 @@
+"""Distributed MFBC on a multi-pod device mesh (Theorem 5.1 layout).
+
+Runs the shard_map production step on 8 emulated devices — a (2, 2, 2)
+(pod, data, model) mesh with the adjacency replicated across pods (the
+paper's replication factor c) — and verifies against the oracle.
+
+  PYTHONPATH=src python examples/bc_distributed.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import numpy as np
+
+from repro.core.brandes_ref import brandes_bc
+from repro.core.dist_bc import dist_mfbc
+from repro.graphs.generators import erdos_renyi
+from repro.spgemm.cost_model import best_replication
+
+
+def main():
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    g = erdos_renyi(48, 0.15, seed=7, weighted=True, max_weight=9)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+          f"graph n={g.n} m={g.m}")
+
+    c = best_replication(g.n, g.m, 8, mem_bytes=1 << 30)
+    print(f"cost-model replication factor c* = {c} (pod axis realizes c=2)")
+
+    lam = dist_mfbc(g, mesh, nb=16)
+    ref = brandes_bc(g)
+    np.testing.assert_allclose(lam, ref, rtol=1e-4, atol=1e-6)
+    print("distributed λ == Brandes oracle ✓")
+    print("top-3:", np.argsort(lam)[::-1][:3].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Train a GNN (GCN) with the real neighbor sampler, and an equivariant
+NequIP-class model on molecule batches.
+
+  PYTHONPATH=src python examples/gnn_train.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.generators import erdos_renyi
+from repro.graphs.sampler import NeighborSampler, SamplerSpec, batch_molecules
+from repro.models import gnn as G
+from repro.optim import adamw
+from repro.train.train_lib import make_generic_train_step
+
+
+def train_gcn_sampled():
+    g = erdos_renyi(500, 0.02, seed=0)
+    spec = SamplerSpec(batch_nodes=16, fanout=(5, 3))
+    sampler = NeighborSampler(g, spec, seed=1)
+    cfg = G.GCNConfig("gcn-sampled", d_in=16, d_hidden=16, n_classes=4)
+    feats = np.random.default_rng(0).normal(size=(g.n + 1, 16)).astype(np.float32)
+    labels = np.random.default_rng(1).integers(0, 4, g.n + 1).astype(np.int32)
+
+    def make_batch(step):
+        rng = np.random.default_rng(step)
+        seeds = rng.choice(g.n, spec.batch_nodes, replace=False)
+        sub = sampler.sample(seeds.astype(np.int64))
+        ids = np.minimum(sub["node_ids"], g.n)
+        x = feats[ids]
+        deg = np.bincount(sub["dst"], minlength=ids.shape[0])
+        return {"x": jnp.asarray(x), "src": jnp.asarray(sub["src"]),
+                "dst": jnp.asarray(sub["dst"]),
+                "deg": jnp.asarray(deg, jnp.float32),
+                "labels": jnp.asarray(labels[ids]),
+                "label_mask": jnp.asarray(sub["seed_mask"])}
+
+    def loss(params, batch):
+        return G.node_ce_loss("gcn", cfg, params, batch)
+
+    init_fn, step_fn = make_generic_train_step(
+        loss, lambda k: G.gcn_init(cfg, k), adamw.AdamWConfig(lr=5e-3))
+    state = init_fn(jax.random.key(0))
+    losses = []
+    for step in range(40):
+        state, m = step_fn(state, make_batch(step))
+        losses.append(float(m["loss"]))
+    print(f"GCN (neighbor-sampled): loss {losses[0]:.3f} -> "
+          f"{np.mean(losses[-5:]):.3f}")
+    assert np.mean(losses[-5:]) < losses[0]
+
+
+def train_nequip():
+    cfg = G.NequIPConfig("nequip-demo", n_layers=3, channels=16, d_in=8)
+    params = G.nequip_init(cfg, jax.random.key(0))
+
+    n_graphs_static = 8 + 1  # static under jit (batch dim of the readout)
+
+    def loss(params, batch):
+        batch = dict(batch, n_graphs=n_graphs_static)
+        return G.energy_mse_loss(cfg, params, batch)
+
+    init_fn, step_fn = make_generic_train_step(
+        loss, lambda k: G.nequip_init(cfg, k), adamw.AdamWConfig(lr=2e-3))
+    state = init_fn(jax.random.key(1))
+    # a fixed dataset of molecules with fixed target energies
+    mol = batch_molecules(8, 6, 12, d_in=8, seed=0)
+    mol.pop("n_graphs")
+    batch = {k: jnp.asarray(v) if isinstance(v, np.ndarray) else v
+             for k, v in mol.items()}
+    losses = []
+    for step in range(60):
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+    print(f"NequIP (molecules):     loss {np.mean(losses[:5]):.3f} -> "
+          f"{np.mean(losses[-5:]):.3f}")
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+if __name__ == "__main__":
+    train_gcn_sampled()
+    train_nequip()
+    print("GNN training converges ✓")

@@ -1,0 +1,51 @@
+"""Serve a small LM with batched requests: prefill + decode + KV cache.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+def main():
+    cfg = T.TransformerConfig(
+        name="serve-demo", n_layers=4, d_model=256, n_heads=8, n_kv=2,
+        d_ff=1024, vocab=8192, head_dim=32, window_pattern=(64, None))
+    params = T.init_params(cfg, jax.random.key(0))
+    batch, prompt_len, gen_len = 8, 48, 32
+    max_len = prompt_len + gen_len
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
+                          jnp.int32)
+
+    prefill = jax.jit(lambda p, t, c: T.prefill(cfg, p, t, c))
+    decode = jax.jit(lambda p, t, pos, c: T.decode_step(cfg, p, t, pos, c))
+
+    cache = T.init_cache(cfg, batch, max_len)
+    logits, cache = prefill(params, prompts, cache)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    t0 = time.time()
+    toks = [tok]
+    for i in range(gen_len - 1):
+        logits, cache = decode(params, tok, jnp.int32(prompt_len + i), cache)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks.append(tok)
+    out = jnp.concatenate(toks, axis=1)
+    dt = time.time() - t0
+    print(f"served {batch} requests x {gen_len} tokens "
+          f"({batch * gen_len / dt:,.0f} tok/s incl. compile of decode)")
+    # decode must agree with teacher-forced forward on the same sequence
+    full = T.forward(cfg, params, jnp.concatenate([prompts, out[:, :-1]], 1))
+    redecoded = jnp.argmax(full[:, prompt_len - 1:], -1)
+    match = float(jnp.mean((redecoded == out).astype(jnp.float32)))
+    print(f"decode/forward agreement: {match:.3f}")
+    assert match > 0.99
+    print("KV-cache decode is consistent ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps
+with checkpoint/restart fault tolerance and gradient compression.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import LMDataConfig, LMPipeline
+from repro.models.transformer import TransformerConfig
+from repro.optim import adamw
+from repro.optim.grad_compress import CompressConfig
+from repro.train.fault import ChaosConfig, Supervisor
+from repro.train.train_lib import make_lm_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    args = ap.parse_args()
+
+    # ~100M-class decoder-only LM (gemma2-family block structure)
+    cfg = TransformerConfig(
+        name="lm100m", n_layers=args.layers, d_model=args.d_model,
+        n_heads=8, n_kv=4, d_ff=4 * args.d_model, vocab=32768,
+        head_dim=64, block_style="sandwich", act="gelu",
+        attn_softcap=50.0, final_softcap=30.0, scale_embeddings=True,
+        window_pattern=(256, None))
+    opt = adamw.AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    init_fn, step_fn = make_lm_train_step(cfg, opt,
+                                          compress_cfg=CompressConfig("int8"))
+    pipe = LMPipeline(LMDataConfig(vocab=cfg.vocab, batch=4, seq=256))
+
+    state = init_fn(jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"params: {n / 1e6:.1f}M")
+
+    losses = []
+
+    def do_step(st, step):
+        st, m = step_fn(st, pipe.batch(step))
+        losses.append(float(m["loss"]))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"lr {float(m['lr']):.2e}")
+        return st
+
+    ckpt_dir = tempfile.mkdtemp(prefix="lm100m_ckpt_")
+    try:
+        sup = Supervisor(ckpt_dir, save_every=25)
+        # inject one failure mid-run to demonstrate restart
+        state = sup.run(init_state=state, step_fn=do_step,
+                        n_steps=args.steps,
+                        chaos=ChaosConfig(fail_at_steps=(args.steps // 2,)))
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    first, last = losses[0], np.mean(losses[-10:])
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"(survived 1 injected failure)")
+    assert last < first
+    print("training converges ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — MFBC: communication-efficient betweenness centrality on TPU pods.
+
+Reproduction + extension of Solomonik, Besta, Vella, Hoefler,
+"Scaling Betweenness Centrality using Communication-Efficient Sparse
+Matrix Multiplication" (SC'17).
+"""
+
+__version__ = "1.0.0"

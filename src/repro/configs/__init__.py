@@ -1,0 +1,5 @@
+from repro.configs.base import ArchSpec, Cell, StepBundle
+from repro.configs.registry import ARCHS, all_cells, get_arch
+
+__all__ = ["ArchSpec", "Cell", "StepBundle", "ARCHS", "all_cells",
+           "get_arch"]

@@ -1,0 +1,636 @@
+"""Config system: architectures × input-shape cells.
+
+Each assigned architecture provides an ``ArchSpec`` with:
+
+* ``config(smoke=False)``  — the exact published configuration (or a tiny
+  reduced config of the same family for CPU smoke tests);
+* ``cells()``              — its input-shape cells (the 4 assigned shapes);
+* ``build(cell, policy, smoke)`` — a ``StepBundle``: the step function to
+  lower, abstract (ShapeDtypeStruct, sharded) arguments, while-body trip
+  counts for the HLO collective scaling, and the analytic MODEL_FLOPS.
+
+The dry-run lowers ``bundle.fn`` against ``bundle.abstract_args`` on the
+production meshes; smoke tests call ``bundle.concrete_args`` and execute
+one real step on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.sharding.rules import NO_SHARDING, ShardingPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    shape_id: str
+    kind: str  # train | prefill | decode | serve | retrieval
+    batch: int
+    seq: int = 0
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    abstract_args: Tuple
+    trip_counts: Dict[str, int]
+    model_flops: float
+    donate: Tuple[int, ...] = ()
+    concrete_args: Optional[Callable] = None  # key -> args (smoke tests)
+    check: Optional[Callable] = None  # outputs -> None (smoke assertions)
+
+
+class ArchSpec:
+    arch_id: str = ""
+    family: str = ""
+
+    def config(self, smoke: bool = False):
+        raise NotImplementedError
+
+    def cells(self) -> Dict[str, Cell]:
+        raise NotImplementedError
+
+    def build(self, cell: Cell, policy: ShardingPolicy = NO_SHARDING,
+              smoke: bool = False) -> StepBundle:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# LM family.
+# ---------------------------------------------------------------------------
+
+LM_CELLS = {
+    "train_4k": Cell("train_4k", "train", batch=256, seq=4096),
+    "prefill_32k": Cell("prefill_32k", "prefill", batch=32, seq=32768),
+    "decode_32k": Cell("decode_32k", "decode", batch=128, seq=32768),
+    "long_500k": Cell("long_500k", "decode", batch=1, seq=524288),
+}
+
+LM_SMOKE_CELLS = {
+    "train_4k": Cell("train_4k", "train", batch=2, seq=64),
+    "prefill_32k": Cell("prefill_32k", "prefill", batch=2, seq=64),
+    "decode_32k": Cell("decode_32k", "decode", batch=2, seq=64),
+    "long_500k": Cell("long_500k", "decode", batch=1, seq=128),
+}
+
+
+class LMArch(ArchSpec):
+    family = "lm"
+
+    def __init__(self, arch_id: str, full_cfg: Callable[[], T.TransformerConfig],
+                 smoke_cfg: Callable[[], T.TransformerConfig]):
+        self.arch_id = arch_id
+        self._full = full_cfg
+        self._smoke = smoke_cfg
+
+    def config(self, smoke: bool = False) -> T.TransformerConfig:
+        return self._smoke() if smoke else self._full()
+
+    def cells(self) -> Dict[str, Cell]:
+        return LM_CELLS
+
+    def build(self, cell: Cell, policy: ShardingPolicy = NO_SHARDING,
+              smoke: bool = False, unroll: bool = False,
+              layers_override: int = 0) -> StepBundle:
+        cfg = self.config(smoke)
+        if unroll:
+            cfg = dataclasses.replace(cfg, unroll=True)
+        if layers_override:
+            cfg = dataclasses.replace(cfg, n_layers=layers_override)
+        if policy.mesh is not None:
+            # production dtype policy: bf16 params/grads/KV-cache, f32
+            # optimizer moments + loss (perf iteration 1, EXPERIMENTS §Perf)
+            cfg = dataclasses.replace(cfg, dtype=jnp.bfloat16)
+        cache_dtype = jnp.bfloat16 if policy.mesh is not None else jnp.float32
+        c = (LM_SMOKE_CELLS if smoke else LM_CELLS)[cell.shape_id]
+        B, S = c.batch, c.seq
+        n_active = cfg.n_active_params()
+        aparams = T.abstract_params(cfg, policy)
+
+        def batch_sh_for(shape):
+            return policy.named_for_shape(("batch",) + (None,) * (len(shape) - 1),
+                                          shape)
+
+        tok_t = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+
+        if c.kind == "train":
+            # production knobs (EXPERIMENTS.md §Perf): 8-bit Adam moments
+            # + chunked CE on-mesh; plain f32/unchunked on CPU smoke
+            opt_cfg = adamw.AdamWConfig(
+                moment_dtype="int8" if policy.mesh is not None else "f32")
+            ce_chunks = 8 if policy.mesh is not None else 1
+
+            def step(params, opt_state, tokens, targets):
+                loss, grads = jax.value_and_grad(
+                    lambda p: T.loss_fn(cfg, p, tokens, targets, policy,
+                                        chunks=ce_chunks)
+                )(params)
+                params, opt_state, metrics = adamw.update(opt_cfg, grads,
+                                                          opt_state, params)
+                return params, opt_state, {"loss": loss, **metrics}
+
+            args = (aparams,
+                    adamw.abstract_state(aparams, opt_cfg.moment_dtype),
+                    tok_t((B, S), sharding=batch_sh_for((B, S))),
+                    tok_t((B, S), sharding=batch_sh_for((B, S))))
+
+            def concrete(key):
+                p = T.init_params(cfg, key)
+                toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+                return (p, adamw.init_state(p, opt_cfg.moment_dtype), toks,
+                        toks)
+
+            def check(out):
+                _, _, m = out
+                assert np.isfinite(float(m["loss"])), m
+
+            trips = {} if cfg.unroll else {"while": cfg.n_layers}
+            return StepBundle(step, args, trips,
+                              6.0 * n_active * B * S, donate=(0, 1),
+                              concrete_args=concrete, check=check)
+
+        if c.kind == "prefill":
+            def step(params, tokens, cache):
+                return T.prefill(cfg, params, tokens, cache, policy)
+
+            cache = T.cache_abstract(cfg, B, S, policy, dtype=cache_dtype)
+            args = (aparams, tok_t((B, S), sharding=batch_sh_for((B, S))),
+                    cache)
+
+            def concrete(key):
+                p = T.init_params(cfg, key)
+                toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+                return (p, toks, T.init_cache(cfg, B, S, policy))
+
+            def check(out):
+                logits, _ = out
+                assert np.all(np.isfinite(np.asarray(logits)))
+
+            trips = {} if cfg.unroll else {"while": cfg.n_layers}
+            return StepBundle(step, args, trips,
+                              2.0 * n_active * B * S, donate=(2,),
+                              concrete_args=concrete, check=check)
+
+        # decode
+        def step(params, token, pos, cache):
+            return T.decode_step(cfg, params, token, pos, cache, policy)
+
+        cache = T.cache_abstract(cfg, B, S, policy, dtype=cache_dtype)
+        args = (aparams, tok_t((B, 1), sharding=batch_sh_for((B, 1))),
+                jax.ShapeDtypeStruct((), jnp.int32), cache)
+
+        def concrete(key):
+            p = T.init_params(cfg, key)
+            tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+            return (p, tok, jnp.int32(S // 2),
+                    T.init_cache(cfg, B, S, policy))
+
+        def check(out):
+            logits, _ = out
+            assert np.all(np.isfinite(np.asarray(logits)))
+
+        # decode attention also reads O(B·S·kv·hd) cache bytes; FLOPs are
+        # 2·N_active per token + attention dot 4·B·S·K·hd·g
+        attn_flops = 4.0 * B * S * cfg.n_kv * cfg.hd * (cfg.n_heads // cfg.n_kv)
+        trips = {} if cfg.unroll else {"while": cfg.n_layers}
+        return StepBundle(step, args, trips,
+                          2.0 * n_active * B + cfg.n_layers * attn_flops,
+                          donate=(3,), concrete_args=concrete, check=check)
+
+
+# ---------------------------------------------------------------------------
+# GNN family.
+# ---------------------------------------------------------------------------
+
+GNN_CELLS = {
+    "full_graph_sm": Cell("full_graph_sm", "train", batch=1,
+                          meta=dict(n=2708, e=10556, d=1433, classes=7)),
+    "minibatch_lg": Cell("minibatch_lg", "train", batch=1024,
+                         meta=dict(n=232965, e=114615892, d=602, classes=41,
+                                   fanout=(15, 10))),
+    "ogb_products": Cell("ogb_products", "train", batch=1,
+                         meta=dict(n=2449029, e=61859140, d=100, classes=47)),
+    "molecule": Cell("molecule", "train", batch=128,
+                     meta=dict(n=30, e=64, d=16, classes=2)),
+}
+
+GNN_SMOKE_META = {
+    "full_graph_sm": dict(n=60, e=240, d=32, classes=7),
+    "minibatch_lg": dict(n=200, e=800, d=16, classes=5, fanout=(3, 2),
+                         batch=8),
+    "ogb_products": dict(n=120, e=480, d=12, classes=4),
+    "molecule": dict(n=6, e=12, d=8, classes=2, batch=4),
+}
+
+
+class GNNArch(ArchSpec):
+    family = "gnn"
+
+    def __init__(self, arch_id: str, kind: str, full_hp: Dict[str, Any],
+                 smoke_hp: Dict[str, Any]):
+        self.arch_id = arch_id
+        self.kind = kind  # gcn | gin | gat | nequip
+        self.full_hp = full_hp
+        self.smoke_hp = smoke_hp
+
+    def config(self, smoke: bool = False, **dims):
+        hp = dict(self.smoke_hp if smoke else self.full_hp)
+        hp.update(dims)
+        cls = {"gcn": G.GCNConfig, "gin": G.GINConfig, "gat": G.GATConfig,
+               "nequip": G.NequIPConfig}[self.kind]
+        return cls(name=self.arch_id, **hp)
+
+    def cells(self) -> Dict[str, Cell]:
+        return GNN_CELLS
+
+    def _abstract_batch(self, cell: Cell, meta, policy: ShardingPolicy):
+        """ShapeDtypeStructs of the padded graph batch for this cell."""
+        if cell.shape_id == "minibatch_lg":
+            from repro.graphs.sampler import SamplerSpec
+            bn = meta.get("batch", 1024)
+            spec = SamplerSpec(bn, tuple(meta["fanout"]))
+            n1 = spec.node_budget + 1
+            E = spec.edge_budget
+        elif cell.shape_id == "molecule":
+            bsz = meta.get("batch", 128)
+            n1 = bsz * meta["n"] + 1
+            E = bsz * meta["e"]
+        else:
+            n1 = meta["n"] + 1
+            E = meta["e"]
+        if policy.mesh is not None:
+            # pad node/edge counts to mesh-divisible sizes (padding nodes
+            # are isolated; padding edges hit the dummy slot)
+            n1 = -(-n1 // 512) * 512
+            E = -(-E // 512) * 512
+        node_sh = policy.named(("model", None))
+        edge_sh = policy.named(("batch",))
+        nvec_sh = policy.named(("model",))
+        sds = jax.ShapeDtypeStruct
+        b = {
+            "x": sds((n1, meta["d"]), jnp.float32, sharding=node_sh),
+            "src": sds((E,), jnp.int32, sharding=edge_sh),
+            "dst": sds((E,), jnp.int32, sharding=edge_sh),
+            "labels": sds((n1,), jnp.int32, sharding=nvec_sh),
+        }
+        if self.kind == "gcn":
+            b["deg"] = sds((n1,), jnp.float32, sharding=nvec_sh)
+        if self.kind == "gat":
+            b["edge_pad"] = sds((E,), jnp.bool_, sharding=edge_sh)
+        if self.kind == "nequip":
+            b["pos"] = sds((n1, 3), jnp.float32, sharding=node_sh)
+        if cell.shape_id == "molecule":
+            bsz = meta.get("batch", 128)
+            b["graph_ids"] = sds((n1,), jnp.int32, sharding=nvec_sh)
+            b["n_graphs"] = bsz + 1
+            b["labels"] = sds((bsz + 1,), jnp.int32)
+        return b, n1, E
+
+    def _concrete_batch(self, cell: Cell, meta, key):
+        rng = np.random.default_rng(0)
+        ab, n1, E = self._abstract_batch(cell, meta, NO_SHARDING)
+        ab.pop("n_graphs", None)
+        b = {}
+        for k, v in ab.items():
+            if not hasattr(v, "shape"):
+                b[k] = v
+            elif v.dtype == jnp.int32 and k == "labels":
+                b[k] = jnp.asarray(rng.integers(0, meta["classes"], v.shape),
+                                   jnp.int32)
+            elif k in ("src", "dst"):
+                b[k] = jnp.asarray(rng.integers(0, n1 - 1, v.shape), jnp.int32)
+            elif k == "graph_ids":
+                per = (n1 - 1) // (meta.get("batch", 1))
+                gid = np.minimum(np.arange(n1) // max(per, 1),
+                                 meta.get("batch", 1))
+                b[k] = jnp.asarray(gid, jnp.int32)
+            elif k == "edge_pad":
+                b[k] = jnp.zeros(v.shape, bool)
+            else:
+                b[k] = jnp.asarray(rng.normal(size=v.shape), jnp.float32)
+        if self.kind == "gcn":
+            deg = np.bincount(np.asarray(b["dst"]), minlength=n1)
+            b["deg"] = jnp.asarray(deg, jnp.float32)
+        return b
+
+    def _flops(self, meta, n1, E) -> float:
+        d = meta["d"]
+        if self.kind == "gcn":
+            h = self.full_hp.get("d_hidden", 16)
+            fwd = 2.0 * (n1 * d * h + E * h) * self.full_hp.get("n_layers", 2)
+        elif self.kind == "gin":
+            h = self.full_hp.get("d_hidden", 64)
+            L = self.full_hp.get("n_layers", 5)
+            fwd = 2.0 * L * (E * h + 2 * n1 * h * h) + 2.0 * n1 * d * h
+        elif self.kind == "gat":
+            h = self.full_hp.get("d_hidden", 8) * self.full_hp.get("n_heads", 8)
+            fwd = 2.0 * self.full_hp.get("n_layers", 2) * (n1 * d * h + 3 * E * h)
+        else:  # nequip
+            C = self.full_hp.get("channels", 32)
+            L = self.full_hp.get("n_layers", 5)
+            fwd = 2.0 * L * (E * C * (9 + 13 * 6) + 3 * n1 * C * C * 13)
+        return 3.0 * fwd  # train ~ 3x forward
+
+    def build(self, cell: Cell, policy: ShardingPolicy = NO_SHARDING,
+              smoke: bool = False) -> StepBundle:
+        meta = dict(GNN_SMOKE_META[cell.shape_id] if smoke
+                    else GNN_CELLS[cell.shape_id].meta)
+        is_mol = cell.shape_id == "molecule"
+        cfg = self.config(
+            smoke, d_in=meta["d"],
+            **({"n_out": meta["classes"], "readout": "node"}
+               if self.kind == "nequip" and not is_mol else
+               {"n_out": 1} if self.kind == "nequip" else
+               {"n_classes": meta["classes"]}))
+        opt_cfg = adamw.AdamWConfig(weight_decay=0.0)
+        ab, n1, E = self._abstract_batch(cell, meta, policy)
+        static_ng = ab.pop("n_graphs", None)  # static int, closed over
+
+        def loss(params, batch):
+            if static_ng is not None:
+                batch = dict(batch, n_graphs=static_ng)
+            if self.kind == "nequip" and is_mol:
+                e = G.nequip_forward(cfg, params, batch)[:, 0]
+                lbl = batch["labels"].astype(jnp.float32)
+                return jnp.mean(jnp.square(e - lbl))
+            logits = G.FORWARD[self.kind](cfg, params, batch)
+            if is_mol and logits.shape[0] != batch["labels"].shape[0]:
+                # graph classification: pool node logits (GIN pools itself)
+                logits = jax.ops.segment_sum(logits, batch["graph_ids"],
+                                             batch["n_graphs"])
+            labels = batch["labels"]
+            logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+            gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                                       labels[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        def step(params, opt_state, batch):
+            lv, grads = jax.value_and_grad(loss)(params, batch)
+            params, opt_state, metrics = adamw.update(opt_cfg, grads,
+                                                      opt_state, params)
+            return params, opt_state, {"loss": lv, **metrics}
+
+        key0 = jax.random.key(0)
+        params0 = G.INIT[self.kind](cfg, key0)
+        aparams = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params0)
+        args = (aparams, adamw.abstract_state(aparams), ab)
+
+        def concrete(key):
+            p = G.INIT[self.kind](cfg, key)
+            return (p, adamw.init_state(p), self._concrete_batch(cell, meta,
+                                                                 key))
+
+        def check(out):
+            _, _, m = out
+            assert np.isfinite(float(m["loss"])), m
+
+        return StepBundle(step, args, {}, self._flops(meta, n1, E),
+                          donate=(0, 1), concrete_args=concrete, check=check)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family (xDeepFM).
+# ---------------------------------------------------------------------------
+
+RECSYS_CELLS = {
+    "train_batch": Cell("train_batch", "train", batch=65536),
+    "serve_p99": Cell("serve_p99", "serve", batch=512),
+    "serve_bulk": Cell("serve_bulk", "serve", batch=262144),
+    "retrieval_cand": Cell("retrieval_cand", "retrieval", batch=1,
+                           meta=dict(n_candidates=1_000_000)),
+}
+
+RECSYS_SMOKE_CELLS = {
+    "train_batch": Cell("train_batch", "train", batch=32),
+    "serve_p99": Cell("serve_p99", "serve", batch=8),
+    "serve_bulk": Cell("serve_bulk", "serve", batch=64),
+    "retrieval_cand": Cell("retrieval_cand", "retrieval", batch=1,
+                           meta=dict(n_candidates=512)),
+}
+
+
+class RecsysArch(ArchSpec):
+    family = "recsys"
+    arch_id = "xdeepfm"
+
+    def config(self, smoke: bool = False) -> R.XDeepFMConfig:
+        if smoke:
+            return R.XDeepFMConfig("xdeepfm-smoke", n_fields=6,
+                                   vocab_per_field=50, embed_dim=8,
+                                   cin_layers=(8, 8), mlp_layers=(16, 16))
+        return R.XDeepFMConfig("xdeepfm", n_fields=39,
+                               vocab_per_field=1_000_000, embed_dim=10,
+                               cin_layers=(200, 200, 200),
+                               mlp_layers=(400, 400))
+
+    def cells(self) -> Dict[str, Cell]:
+        return RECSYS_CELLS
+
+    def build(self, cell: Cell, policy: ShardingPolicy = NO_SHARDING,
+              smoke: bool = False) -> StepBundle:
+        cfg = self.config(smoke)
+        c = (RECSYS_SMOKE_CELLS if smoke else RECSYS_CELLS)[cell.shape_id]
+        B = c.batch
+        sds = jax.ShapeDtypeStruct
+        shapes = R.init_shapes(cfg)
+
+        def mk_abs(pair):
+            shape, logical = pair
+            sh = policy.named(logical) if policy.mesh is not None else None
+            return sds(shape, jnp.float32, sharding=sh)
+
+        aparams = jax.tree.map(
+            mk_abs, shapes,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple))
+        batch_sh = policy.named(("batch", None, None))
+        ids_t = sds((B, cfg.n_fields, cfg.multi_hot), jnp.int32,
+                    sharding=batch_sh)
+        # fwd flops: CIN dominates: 2 sum_k (B H_k m D + B H_k m D H_{k+1})
+        m, D = cfg.n_fields, cfg.embed_dim
+        prev = m
+        fl = 0.0
+        for h in cfg.cin_layers:
+            fl += 2.0 * B * prev * m * D * (1 + h)
+            prev = h
+        d_mlp = m * D
+        for h in cfg.mlp_layers:
+            fl += 2.0 * B * d_mlp * h
+            d_mlp = h
+
+        if c.kind == "train":
+            opt_cfg = adamw.AdamWConfig(weight_decay=0.0)
+
+            def step(params, opt_state, ids, labels):
+                lv, grads = jax.value_and_grad(
+                    lambda p: R.bce_loss(cfg, p, ids, labels, policy))(params)
+                params, opt_state, metrics = adamw.update(
+                    opt_cfg, grads, opt_state, params)
+                return params, opt_state, {"loss": lv, **metrics}
+
+            args = (aparams, adamw.abstract_state(aparams), ids_t,
+                    sds((B,), jnp.float32, sharding=policy.named(("batch",))))
+
+            def concrete(key):
+                p = R.init_params(cfg, key)
+                rng = np.random.default_rng(0)
+                ids = jnp.asarray(rng.integers(0, cfg.total_vocab,
+                                               (B, cfg.n_fields, 1)), jnp.int32)
+                lbl = jnp.asarray(rng.integers(0, 2, B), jnp.float32)
+                return (p, adamw.init_state(p), ids, lbl)
+
+            def check(out):
+                _, _, metrics = out
+                assert np.isfinite(float(metrics["loss"]))
+
+            return StepBundle(step, args, {}, 3.0 * fl, donate=(0, 1),
+                              concrete_args=concrete, check=check)
+
+        if c.kind == "serve":
+            def step(params, ids):
+                return R.forward(cfg, params, ids, policy)
+
+            args = (aparams, ids_t)
+
+            def concrete(key):
+                p = R.init_params(cfg, key)
+                rng = np.random.default_rng(1)
+                return (p, jnp.asarray(rng.integers(
+                    0, cfg.total_vocab, (B, cfg.n_fields, 1)), jnp.int32))
+
+            def check(out):
+                assert np.all(np.isfinite(np.asarray(out)))
+
+            return StepBundle(step, args, {}, fl, concrete_args=concrete,
+                              check=check)
+
+        # retrieval
+        N = (cell if not smoke else RECSYS_SMOKE_CELLS[cell.shape_id]) \
+            .meta["n_candidates"]
+
+        def step(params, qids, cids):
+            return R.retrieval_score(cfg, params, qids, cids, policy)
+
+        cand_sh = policy.named(("batch", None, None))
+        args = (aparams,
+                sds((1, cfg.n_fields, cfg.multi_hot), jnp.int32),
+                sds((N, cfg.n_fields, cfg.multi_hot), jnp.int32,
+                    sharding=cand_sh))
+
+        def concrete(key):
+            p = R.init_params(cfg, key)
+            rng = np.random.default_rng(2)
+            q = jnp.asarray(rng.integers(0, cfg.total_vocab,
+                                         (1, cfg.n_fields, 1)), jnp.int32)
+            cd = jnp.asarray(rng.integers(0, cfg.total_vocab,
+                                          (N, cfg.n_fields, 1)), jnp.int32)
+            return (p, q, cd)
+
+        def check(out):
+            assert np.all(np.isfinite(np.asarray(out)))
+
+        fl_ret = 2.0 * N * (cfg.n_fields * cfg.embed_dim + cfg.embed_dim)
+        return StepBundle(step, args, {}, fl_ret, concrete_args=concrete,
+                          check=check)
+
+
+# ---------------------------------------------------------------------------
+# The paper's own architecture: MFBC batch step.
+# ---------------------------------------------------------------------------
+
+BC_CELLS = {
+    "bc_web_256k": Cell("bc_web_256k", "train", batch=8192,
+                        meta=dict(n=262144, iters=8)),
+    "bc_dense_64k": Cell("bc_dense_64k", "train", batch=16384,
+                         meta=dict(n=65536, iters=6)),
+}
+
+BC_SMOKE_CELLS = {
+    "bc_web_256k": Cell("bc_web_256k", "train", batch=8,
+                        meta=dict(n=48, iters=6)),
+    "bc_dense_64k": Cell("bc_dense_64k", "train", batch=12,
+                         meta=dict(n=32, iters=5)),
+}
+
+
+class BCArch(ArchSpec):
+    """MFBC itself, on the production mesh (Theorem 5.1 layout)."""
+
+    family = "bc"
+    arch_id = "mfbc_paper"
+
+    def config(self, smoke: bool = False):
+        return {"use_kernel": not smoke}
+
+    def cells(self) -> Dict[str, Cell]:
+        return BC_CELLS
+
+    def build(self, cell: Cell, policy: ShardingPolicy = NO_SHARDING,
+              smoke: bool = False, unroll: bool = False) -> StepBundle:
+        from repro.core import dist_bc
+
+        c = (BC_SMOKE_CELLS if smoke else BC_CELLS)[cell.shape_id]
+        n, nb, iters = c.meta["n"], c.batch, c.meta["iters"]
+        sds = jax.ShapeDtypeStruct
+
+        if policy.mesh is not None:
+            mesh = policy.mesh
+            pod = "pod" if "pod" in mesh.axis_names else None
+            cfg = dist_bc.BCMeshConfig(n=n, nb=nb, iters_bf=iters,
+                                       iters_br=iters, pod_axis=pod,
+                                       use_kernel=False, block=1024,
+                                       unroll=unroll)
+            step = dist_bc.build_mfbc_step(mesh, cfg)
+            sh_a, sh_at, sh_src, sh_val = dist_bc.input_shardings(mesh, cfg)
+            args = (sds((n, n), jnp.float32, sharding=sh_a),
+                    sds((n, n), jnp.float32, sharding=sh_at),
+                    sds((nb,), jnp.int32, sharding=sh_src),
+                    sds((nb,), jnp.bool_, sharding=sh_val))
+            trips = {} if unroll else {"while": iters}
+            return StepBundle(step, args, trips,
+                              self._flops(n, nb, iters), concrete_args=None)
+
+        # smoke: single device, non-distributed jitted batch
+        from repro.core.mfbc import mfbc_batch
+        from repro.core.adjacency import DenseAdj
+
+        def step(a, sources, valid):
+            return mfbc_batch(DenseAdj(a, block=256), sources, valid,
+                              iterate="fori", max_iters_bf=iters,
+                              max_iters_br=iters)[0]
+
+        args = (sds((n, n), jnp.float32), sds((nb,), jnp.int32),
+                sds((nb,), jnp.bool_))
+
+        def concrete(key):
+            from repro.graphs.generators import erdos_renyi
+            from repro.graphs.formats import coo_to_dense
+            g = erdos_renyi(n, 4.0 / n, seed=1)
+            return (jnp.asarray(coo_to_dense(g)),
+                    jnp.arange(nb, dtype=jnp.int32),
+                    jnp.ones(nb, bool))
+
+        def check(lam):
+            assert np.all(np.isfinite(np.asarray(lam)))
+            assert np.all(np.asarray(lam) >= -1e-6)
+
+        return StepBundle(step, args, {"while": iters},
+                          self._flops(n, nb, iters), concrete_args=concrete,
+                          check=check)
+
+    @staticmethod
+    def _flops(n, nb, iters):
+        # each relax: nb*n*n candidate min-plus updates (~4 vector flops),
+        # 2(d+1) relaxes per batch (MFBF + MFBr)
+        return 4.0 * nb * n * n * 2 * (iters + 1)

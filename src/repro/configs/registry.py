@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchSpec, BCArch, RecsysArch
+from repro.configs.gnn_archs import GAT_CORA, GCN_CORA, GIN_TU, NEQUIP
+from repro.configs.lm_archs import (COMMAND_R_PLUS, GEMMA2_27B, GRANITE_34B,
+                                    MOONSHOT_16B, QWEN3_MOE)
+
+ARCHS: Dict[str, ArchSpec] = {
+    a.arch_id: a for a in [
+        GEMMA2_27B, COMMAND_R_PLUS, GRANITE_34B, MOONSHOT_16B, QWEN3_MOE,
+        GCN_CORA, GIN_TU, NEQUIP, GAT_CORA,
+        RecsysArch(), BCArch(),
+    ]
+}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells():
+    """Every (arch_id, shape_id) dry-run cell."""
+    out = []
+    for aid, spec in ARCHS.items():
+        for sid in spec.cells():
+            out.append((aid, sid))
+    return out

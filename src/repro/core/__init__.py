@@ -1,0 +1,16 @@
+"""Core MFBC algorithms (the paper's contribution)."""
+from repro.core.adjacency import (CooAdj, DenseAdj, coo_adj_from_graph,
+                                  dense_adj_from_graph)
+from repro.core.bfs_bc import bfs_bc
+from repro.core.brandes_ref import brandes_bc
+from repro.core.mfbc import mfbc, mfbc_batch
+from repro.core.mfbf import mfbf
+from repro.core.mfbr import mfbr
+from repro.core.monoids import (Centpath, Multpath, centpath_combine,
+                                multpath_combine)
+
+__all__ = [
+    "CooAdj", "DenseAdj", "coo_adj_from_graph", "dense_adj_from_graph",
+    "bfs_bc", "brandes_bc", "mfbc", "mfbc_batch", "mfbf", "mfbr",
+    "Centpath", "Multpath", "centpath_combine", "multpath_combine",
+]

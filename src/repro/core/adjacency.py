@@ -1,0 +1,116 @@
+"""Adjacency containers usable inside jit (registered pytrees).
+
+``DenseAdj`` wraps an ``(n, n)`` float matrix with ``inf`` off-structure.
+``CooAdj`` wraps padded edge arrays (static nnz). Both expose the two
+monoid relaxations and the SP-DAG child count; dispatch is static (python
+``isinstance``), so a jitted function specializes per format.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import monoids
+from repro.core.monoids import Centpath, Multpath
+from repro.graphs.formats import Graph, coo_to_dense, pad_edges
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseAdj:
+    a: jax.Array  # (n, n), inf off-structure
+    block: int = 512
+    use_kernel: bool = False  # route dense relax through the Pallas kernels
+
+    def tree_flatten(self):
+        return (self.a,), (self.block, self.use_kernel)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[-1]
+
+    def gather_rows(self, sources: jax.Array) -> jax.Array:
+        return self.a[sources, :]
+
+    def relax_mp(self, F: Multpath) -> Multpath:
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            w, m = kops.multpath_matmul(F.w, F.m, self.a)
+            return Multpath(w, m)
+        return monoids.multpath_relax_dense(F, self.a, block=self.block)
+
+    def relax_cp(self, F: Centpath) -> Centpath:
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            w, p, c = kops.centpath_matmul(F.w, F.p, self.a.T)
+            return Centpath(w, p, c)
+        return monoids.centpath_relax_dense(F, self.a.T, block=self.block)
+
+    def count_sp_children(self, Tw: jax.Array) -> jax.Array:
+        return monoids.count_sp_children_dense(Tw, self.a, block=self.block)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CooAdj:
+    src: jax.Array  # (E,) int32, padded
+    dst: jax.Array  # (E,) int32
+    w: jax.Array  # (E,) float32, padding = inf
+    n_static: int
+    row_w: jax.Array  # (n,) unused placeholder for row gather; see gather_rows
+
+    def tree_flatten(self):
+        return (self.src, self.dst, self.w, self.row_w), (self.n_static,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0], children[3])
+
+    @property
+    def n(self) -> int:
+        return self.n_static
+
+    def gather_rows(self, sources: jax.Array) -> jax.Array:
+        """Rows of the dense adjacency for the given sources: (nb, n).
+
+        One scatter-min per batch: for arcs with src in ``sources`` place w.
+        """
+        nb = sources.shape[0]
+        # match arcs to batch rows: (nb, E) bool — memory O(nb*E), fine for
+        # the batch sizes used; chunked upstream for huge graphs.
+        hit = self.src[None, :] == sources[:, None]
+        cand = jnp.where(hit, self.w[None, :], jnp.inf)
+        out = jax.ops.segment_min(cand.T, self.dst, num_segments=self.n).T
+        return jnp.where(jnp.isfinite(out), out, jnp.inf)
+
+    def relax_mp(self, F: Multpath) -> Multpath:
+        return monoids.multpath_relax_coo(F, self.src, self.dst, self.w, self.n)
+
+    def relax_cp(self, F: Centpath) -> Centpath:
+        return monoids.centpath_relax_coo(F, self.src, self.dst, self.w, self.n)
+
+    def count_sp_children(self, Tw: jax.Array) -> jax.Array:
+        return monoids.count_sp_children_coo(Tw, self.src, self.dst, self.w,
+                                             self.n)
+
+
+def dense_adj_from_graph(g: Graph, *, block: int = 512,
+                         use_kernel: bool = False) -> DenseAdj:
+    return DenseAdj(jnp.asarray(coo_to_dense(g)), block=block,
+                    use_kernel=use_kernel)
+
+
+def coo_adj_from_graph(g: Graph, *, pad_multiple: int = 128) -> CooAdj:
+    src, dst, w = pad_edges(g, multiple=pad_multiple)
+    return CooAdj(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                  g.n, jnp.zeros((g.n,), jnp.float32))

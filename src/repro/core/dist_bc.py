@@ -1,0 +1,375 @@
+"""Distributed MFBC batch step — Theorem 5.1 on the production mesh.
+
+Mesh mapping (paper grid (p₁, p₂, p₃) = (√(p/c), √(p/c), c)):
+
+* ``model`` axis ↔ p₁ — shards the adjacency's *row* (u) dimension and the
+  state's vertex (v) dimension.
+* ``data`` axis ↔ p₂ — shards the adjacency's *column* dimension and the
+  state's source (s) dimension.
+* ``pod`` axis ↔ p₃ = c — the replication factor: the adjacency is
+  replicated across pods (its broadcast amortizes over all products and
+  batches, exactly as in the Theorem 5.1 proof) and each pod owns a
+  disjoint slice of the source batch.
+
+Per-iteration collectives (per device, F = frontier, C = product):
+
+1. ``all_gather(F, data, dim=0)``          ≈ nnz(F)/p_model     bytes
+2. local generalized matmul (Pallas/VPU)   — no communication
+3. monoid reduce-scatter over ``model``    ≈ nnz(C)/p_data      bytes
+4. ``all_gather(C, data, dim=1)`` + slice  ≈ nnz(C)/p_model     bytes
+
+Total ≈ (nnz(F) + 2·nnz(C))/√(p/c) per iteration — the Theorem 5.1 bound.
+The monoid reduction uses the pmin/pmax + tie-masked psum pair from
+``repro.spgemm.semiring`` (DESIGN.md §3).
+
+State layout: every (nb, n) matrix is P((pod, data), model) — sources over
+pod×data, vertices over model. The adjacency (and its transpose, needed by
+the backward MFBr sweep on directed graphs) is P(model, data), *no* pod
+entry = replicated across pods.
+
+Vertex id layout: the reduce-scatter(model) + all-gather(data) pipeline in
+step 3–4 produces state columns in the *interleaved* order
+``v(m; d', j) = d'·n/D + m·n/(D·M) + j`` (D, M = data/model axis sizes) for
+the device's model index m. We adopt this as the canonical on-device vertex
+order: the adjacency's **rows** are pre-permuted on the host with
+``vertex_row_permutation`` so that contiguous P(model, ·) row blocks
+enumerate exactly that order, local ids come from the closed form above,
+and the host applies the inverse permutation to λ at the end. (CTF calls
+this a cyclic-blocked layout; it is communication-free by construction.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import monoids
+from repro.core.monoids import Centpath, Multpath
+
+INF = jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class BCMeshConfig:
+    """Static configuration of the distributed BC step."""
+
+    n: int  # padded vertex count (divisible by data*model and model*data)
+    nb: int  # global batch size (divisible by pod*data)
+    iters_bf: int  # static forward iteration bound (≥ weighted diameter)
+    iters_br: int  # static backward bound
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: Optional[str] = "pod"  # None on single-pod meshes
+    block: int = 512  # local relax block size
+    use_kernel: bool = False  # route local relax through Pallas kernels
+    unroll: bool = False  # python-loop iterations (dry-run cost fidelity)
+
+    @property
+    def batch_axes(self):
+        return ((self.pod_axis, self.data_axis) if self.pod_axis
+                else (self.data_axis,))
+
+    def specs(self):
+        state = P(self.batch_axes, self.model_axis)
+        adj = P(self.model_axis, self.data_axis)
+        src = P(self.batch_axes)
+        lam = P(self.model_axis)
+        return state, adj, src, lam
+
+
+def _local_relax_mp(cfg, F: Multpath, a_loc) -> Multpath:
+    if cfg.use_kernel:
+        from repro.kernels import ops as kops
+
+        w, m = kops.multpath_matmul(F.w, F.m, a_loc)
+        return Multpath(w, m)
+    return monoids.multpath_relax_dense(F, a_loc, block=cfg.block,
+                                        unroll=cfg.unroll)
+
+
+def _local_relax_cp(cfg, F: Centpath, at_loc) -> Centpath:
+    if cfg.use_kernel:
+        from repro.kernels import ops as kops
+
+        w, p, c = kops.centpath_matmul(F.w, F.p, at_loc)
+        return Centpath(w, p, c)
+    return monoids.centpath_relax_dense(F, at_loc, block=cfg.block,
+                                         unroll=cfg.unroll)
+
+
+def _reduce_scatter_gather(cfg, tree, reduce_fn):
+    """Steps 3+4: ⊕-reduce over model (scatter v), re-gather v over data.
+
+    Input leaves: (nb_pod, n/data) partial over model.
+    Output leaves: (nb_pod, n/model) replicated over data.
+    """
+    red = reduce_fn(tree, cfg.model_axis)  # full reduce (pmin/pmax+psum)
+    m_idx = jax.lax.axis_index(cfg.model_axis)
+    m_sz = jax.lax.axis_size(cfg.model_axis)
+
+    def scatter(v):
+        blk = v.shape[1] // m_sz
+        return jax.lax.dynamic_slice_in_dim(v, m_idx * blk, blk, axis=1)
+
+    sc = jax.tree.map(scatter, red)  # (nb_pod, n/(data*model))
+    return jax.tree.map(
+        lambda v: jax.lax.all_gather(v, cfg.data_axis, axis=1, tiled=True),
+        sc)  # (nb_pod, n/model)
+
+
+def _slice_rows(cfg, tree):
+    """Keep this device's source rows: (nb_pod, x) -> (nb_pod/data, x)."""
+    d_idx = jax.lax.axis_index(cfg.data_axis)
+    d_sz = jax.lax.axis_size(cfg.data_axis)
+
+    def slc(v):
+        blk = v.shape[0] // d_sz
+        return jax.lax.dynamic_slice_in_dim(v, d_idx * blk, blk, axis=0)
+
+    return jax.tree.map(slc, tree)
+
+
+def _gather_rows(cfg, tree):
+    """(nb_pod/data, x) -> (nb_pod, x): step 1 frontier broadcast."""
+    return jax.tree.map(
+        lambda v: jax.lax.all_gather(v, cfg.data_axis, axis=0, tiled=True),
+        tree)
+
+
+def _mp_axis_reduce(x: Multpath, axis: str) -> Multpath:
+    wmin = jax.lax.pmin(x.w, axis)
+    m = jax.lax.psum(jnp.where((x.w == wmin) & jnp.isfinite(wmin), x.m, 0.0),
+                     axis)
+    return Multpath(wmin, m)
+
+
+def _cp_axis_reduce(x: Centpath, axis: str) -> Centpath:
+    wmax = jax.lax.pmax(x.w, axis)
+    tie = (x.w == wmax) & jnp.isfinite(wmax)
+    return Centpath(wmax, jax.lax.psum(jnp.where(tie, x.p, 0.0), axis),
+                    jax.lax.psum(jnp.where(tie, x.c, 0.0), axis))
+
+
+def _dist_relax_mp(cfg, F_state: Multpath, a_loc) -> Multpath:
+    """One distributed MFBF relaxation (steps 1–4)."""
+    Fg = _gather_rows(cfg, F_state)  # (nb_pod, n/model)
+    C_part = _local_relax_mp(cfg, Fg, a_loc)  # (nb_pod, n/data), partial
+    C = _reduce_scatter_gather(cfg, C_part, _mp_axis_reduce)
+    return _slice_rows(cfg, C)  # (nb_pod/data, n/model)
+
+
+def _dist_relax_cp(cfg, F_state: Centpath, at_loc) -> Centpath:
+    Fg = _gather_rows(cfg, F_state)
+    C_part = _local_relax_cp(cfg, Fg, at_loc)
+    C = _reduce_scatter_gather(cfg, C_part, _cp_axis_reduce)
+    return _slice_rows(cfg, C)
+
+
+def _count_children(cfg, Tw_state, at_loc):
+    """Distributed SP-DAG child count.
+
+    c0(s, v) = #{u : Tw(s,v) + A(v,u) == Tw(s,u)}. Reuses the centpath
+    relax over A^T: contributions from u where Tw(s,u) - A(v,u) == Tw(s,v)
+    land at v with count 1 each. Unreachable entries (+inf) are masked to
+    the centpath identity (-inf) first — +inf would win the max-select.
+    """
+    w = jnp.where(jnp.isfinite(Tw_state), Tw_state, -INF)
+    F = Centpath(w, jnp.zeros_like(Tw_state), jnp.zeros_like(Tw_state))
+    Pc = _dist_relax_cp(cfg, F, at_loc)
+    hit = (Pc.w == Tw_state) & jnp.isfinite(Tw_state) & (Pc.c > 0)
+    return jnp.where(hit, Pc.c, 0.0).astype(jnp.int32)
+
+
+def _local_ids(cfg, n):
+    """Global vertex ids of this device's state columns (interleaved order).
+
+    Column c of a state shard on model index m maps to
+    v = d'·(n/D) + m·(n/(D·M)) + j with d' = c // (n/(D·M)), j = c % ….
+    """
+    m_idx = jax.lax.axis_index(cfg.model_axis)
+    d_sz = jax.lax.axis_size(cfg.data_axis)
+    m_sz = jax.lax.axis_size(cfg.model_axis)
+    n_loc = n // m_sz
+    sub = n // (d_sz * m_sz)
+    c = jax.lax.iota(jnp.int32, n_loc)
+    return (c // sub) * (n // d_sz) + m_idx * sub + (c % sub)
+
+
+def _seed_multpath(cfg, sources_loc, n):
+    """Local seed frontier: (s, u) = (0, 1) iff u == source_s."""
+    u_ids = _local_ids(cfg, n)
+    hit = sources_loc[:, None] == u_ids[None, :]
+    return Multpath(jnp.where(hit, 0.0, INF).astype(jnp.float32),
+                    jnp.where(hit, 1.0, 0.0).astype(jnp.float32))
+
+
+def _batch_step_local(cfg: BCMeshConfig, a_loc, at_loc, sources_loc,
+                      valid_loc):
+    """The full Algorithm 3 batch, local (per-device) view."""
+    n = cfg.n
+    # ---- MFBF ----
+    seed = _seed_multpath(cfg, sources_loc, n)
+    T = _dist_relax_mp(cfg, seed, a_loc)  # direct edges (paper line 1)
+    F = T
+
+    def bf_body(_, state):
+        T, F = state
+        C = _dist_relax_mp(cfg, F, a_loc)
+        T_new = monoids.multpath_combine(T, C)
+        keep = (C.w == T_new.w) & jnp.isfinite(C.w) & (C.m > 0)
+        F_new = Multpath(jnp.where(keep, C.w, INF),
+                         jnp.where(keep, C.m, 0.0))
+        return T_new, F_new
+
+    if cfg.unroll:
+        st = (T, F)
+        for _ in range(cfg.iters_bf):
+            st = bf_body(0, st)
+        T, _ = st
+    else:
+        T, _ = jax.lax.fori_loop(0, cfg.iters_bf, bf_body, (T, F))
+
+    # ---- mask the t = s destination ----
+    ids = _local_ids(cfg, n)
+    self_col = sources_loc[:, None] == ids[None, :]
+    Tw = jnp.where(self_col, INF, T.w)
+    Tm_safe = jnp.where(self_col | (T.m <= 0), 1.0, T.m)
+    finite = jnp.isfinite(Tw)
+
+    # ---- MFBr ----
+    c0 = _count_children(cfg, Tw, at_loc)
+    Zp = jnp.zeros_like(Tw)
+    seed_mask = finite & (c0 == 0)
+
+    def mk_frontier(mask, Zp):
+        return Centpath(jnp.where(mask, Tw, -INF),
+                        jnp.where(mask, Zp + 1.0 / Tm_safe, 0.0),
+                        jnp.where(mask, 1.0, 0.0))
+
+    state0 = (Zp, c0, seed_mask, mk_frontier(seed_mask, Zp))
+
+    def br_body(_, st):
+        Zp, c, done, Fc = st
+        Pc = _dist_relax_cp(cfg, Fc, at_loc)
+        contrib = (Pc.w == Tw) & finite & (Pc.c > 0)
+        Zp = Zp + jnp.where(contrib, Pc.p, 0.0)
+        c = c - jnp.where(contrib, Pc.c.astype(c.dtype), 0)
+        newly = finite & (c == 0) & (~done)
+        return Zp, c, done | newly, mk_frontier(newly, Zp)
+
+    if cfg.unroll:
+        st = state0
+        for _ in range(cfg.iters_br):
+            st = br_body(0, st)
+        Zp, _, _, _ = st
+    else:
+        Zp, _, _, _ = jax.lax.fori_loop(0, cfg.iters_br, br_body, state0)
+
+    # ---- λ accumulation: sum over local sources, then over batch axes ----
+    contrib = jnp.where(finite & valid_loc[:, None], Zp * T.m, 0.0)
+    lam_part = jnp.sum(contrib, axis=0)  # (n/model,)
+    lam = jax.lax.psum(lam_part, cfg.data_axis)
+    if cfg.pod_axis is not None:
+        lam = jax.lax.psum(lam, cfg.pod_axis)
+    return lam
+
+
+def build_mfbc_step(mesh: Mesh, cfg: BCMeshConfig):
+    """Returns a jit'd ``step(a, a_t, sources, valid) -> λ`` on ``mesh``.
+
+    a / a_t: (n, n) dense adjacency and its transpose, laid out
+    P(model, data) (replicated over pod). sources/valid: (nb,) laid out
+    P((pod, data)). λ: (n,) sharded over model.
+    """
+    state_spec, adj_spec, src_spec, lam_spec = cfg.specs()
+    fn = shard_map(
+        functools.partial(_batch_step_local, cfg),
+        mesh=mesh,
+        in_specs=(adj_spec, adj_spec, src_spec, src_spec),
+        out_specs=lam_spec,
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def input_shardings(mesh: Mesh, cfg: BCMeshConfig):
+    _, adj_spec, src_spec, _ = cfg.specs()
+    return (NamedSharding(mesh, adj_spec), NamedSharding(mesh, adj_spec),
+            NamedSharding(mesh, src_spec), NamedSharding(mesh, src_spec))
+
+
+# --------------------------------------------------------------------------
+# Host-side helpers: padding, row permutation, full-graph driver.
+# --------------------------------------------------------------------------
+
+
+def vertex_row_permutation(n: int, d_sz: int, m_sz: int):
+    """Π such that A[Π, :] sharded P(model, ·) has row blocks matching the
+    interleaved on-device vertex order (see module docstring)."""
+    import numpy as np
+
+    sub = n // (d_sz * m_sz)
+    perm = np.empty(n, dtype=np.int64)
+    i = 0
+    for m in range(m_sz):
+        for d in range(d_sz):
+            base = d * (n // d_sz) + m * sub
+            perm[i:i + sub] = np.arange(base, base + sub)
+            i += sub
+    return perm
+
+
+def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,
+              use_kernel: bool = False, block: int = 512):
+    """Full betweenness centrality on a device mesh (host batch loop).
+
+    Pads the graph to mesh-divisible n, permutes adjacency rows, runs
+    ``⌈n/nb⌉`` batches of the distributed step, undoes the permutation.
+    """
+    import numpy as np
+
+    from repro.graphs.formats import coo_to_dense
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d_sz = axis_sizes["data"]
+    m_sz = axis_sizes["model"]
+    pod = "pod" if "pod" in axis_sizes else None
+    p_sz = axis_sizes.get("pod", 1)
+
+    lcm = d_sz * m_sz
+    n_pad = -(-g.n // lcm) * lcm
+    a = np.full((n_pad, n_pad), np.inf, dtype=np.float32)
+    a[:g.n, :g.n] = coo_to_dense(g)
+    perm = vertex_row_permutation(n_pad, d_sz, m_sz)
+    a_p = a[perm, :]
+    at_p = a.T[perm, :]
+
+    iters = iters if iters > 0 else g.n
+    nb_pad = -(-nb // (p_sz * d_sz)) * (p_sz * d_sz)
+    cfg = BCMeshConfig(n=n_pad, nb=nb_pad, iters_bf=iters, iters_br=iters,
+                       pod_axis=pod, use_kernel=use_kernel, block=block)
+    step = build_mfbc_step(mesh, cfg)
+    sh_a, sh_at, sh_src, sh_val = input_shardings(mesh, cfg)
+    a_dev = jax.device_put(jnp.asarray(a_p), sh_a)
+    at_dev = jax.device_put(jnp.asarray(at_p), sh_at)
+
+    lam = np.zeros(n_pad, dtype=np.float64)
+    for b in range(-(-g.n // nb_pad)):
+        chunk = np.arange(b * nb_pad, min((b + 1) * nb_pad, g.n),
+                          dtype=np.int32)
+        valid = np.ones(chunk.shape[0], dtype=bool)
+        if chunk.shape[0] < nb_pad:
+            pad = nb_pad - chunk.shape[0]
+            chunk = np.concatenate([chunk, np.zeros(pad, np.int32)])
+            valid = np.concatenate([valid, np.zeros(pad, bool)])
+        lam_b = step(a_dev, at_dev,
+                     jax.device_put(jnp.asarray(chunk), sh_src),
+                     jax.device_put(jnp.asarray(valid), sh_val))
+        lam_b = np.asarray(lam_b, dtype=np.float64)
+        lam[perm] += lam_b  # undo the row permutation
+    return lam[:g.n]

@@ -1,0 +1,96 @@
+"""MFBC — combined betweenness centrality driver (paper Algorithm 3).
+
+``λ(v) = Σ_s ζ(s, v) · σ̄(s, v)`` accumulated over ``⌈n / n_b⌉`` source
+batches. The per-batch computation is a single jitted function; the batch
+loop runs on the host, which is also where fault tolerance lives — the λ
+accumulator plus the batch index *is* the checkpoint (see
+``repro.train.checkpoint``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mfbf as _mfbf
+from repro.core import mfbr as _mfbr
+from repro.core.adjacency import (CooAdj, DenseAdj, coo_adj_from_graph,
+                                  dense_adj_from_graph)
+from repro.core.monoids import INF
+from repro.graphs.formats import Graph
+
+
+@functools.partial(jax.jit, static_argnames=("iterate", "max_iters_bf",
+                                             "max_iters_br"))
+def mfbc_batch(adj, sources: jax.Array, valid: jax.Array, *,
+               iterate: str = "while", max_iters_bf: int = 0,
+               max_iters_br: int = 0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One batch of Algorithm 3: returns (λ_partial, Tw, Tm).
+
+    valid: (nb,) bool — False for padding sources (contribute nothing).
+    """
+    nb = sources.shape[0]
+    Tw, Tm = _mfbf.mfbf(adj, sources, iterate=iterate, max_iters=max_iters_bf)
+    # Exclude the t = s destination (σ(s, t, v) = 0 when t = s): mask the
+    # source's own column to (∞, 1) — the 1 keeps reciprocals safe.
+    rows = jnp.arange(nb)
+    Tw = Tw.at[rows, sources].set(INF)
+    Tm = Tm.at[rows, sources].set(1.0)
+    Zp = _mfbr.mfbr(adj, Tw, Tm, iterate=iterate, max_iters=max_iters_br)
+    contrib = jnp.where(jnp.isfinite(Tw) & valid[:, None], Zp * Tm, 0.0)
+    return jnp.sum(contrib, axis=0), Tw, Tm
+
+
+def mfbc(g: Graph, *, n_b: Optional[int] = None, backend: str = "dense",
+         iterate: str = "while", max_iters: int = 0, block: int = 512,
+         use_kernel: bool = False, sources: Optional[np.ndarray] = None,
+         progress_cb=None) -> np.ndarray:
+    """Full betweenness centrality of a host graph.
+
+    Args:
+      g: host COO graph (positive weights).
+      n_b: batch size (paper's memory/time tradeoff). Default min(n, 64).
+      backend: "dense" (blocked tropical matmul / Pallas) or "coo"
+        (segment-op message passing).
+      iterate: "while" | "fori" (static bound, for cost analysis).
+      max_iters: static iteration bound for "fori" (default n-1).
+      sources: optionally restrict to these sources (approximate BC).
+      progress_cb: optional callback(batch_idx, n_batches, lam_partial)
+        — the checkpoint hook.
+
+    Returns:
+      λ: (n,) float64 centrality scores (ordered-pair convention, endpoints
+      excluded — matches the paper's λ definition).
+    """
+    n = g.n
+    if n_b is None:
+        n_b = min(n, 64)
+    if backend == "dense":
+        adj = dense_adj_from_graph(g, block=block, use_kernel=use_kernel)
+    elif backend == "coo":
+        adj = coo_adj_from_graph(g)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    all_sources = np.arange(n, dtype=np.int32) if sources is None \
+        else np.asarray(sources, dtype=np.int32)
+    n_src = all_sources.shape[0]
+    n_batches = -(-n_src // n_b)
+    lam = np.zeros(n, dtype=np.float64)
+    for b in range(n_batches):
+        chunk = all_sources[b * n_b:(b + 1) * n_b]
+        valid = np.ones(chunk.shape[0], dtype=bool)
+        if chunk.shape[0] < n_b:  # pad the ragged tail (paper's n mod n_b trick)
+            pad = n_b - chunk.shape[0]
+            chunk = np.concatenate([chunk, np.zeros(pad, np.int32)])
+            valid = np.concatenate([valid, np.zeros(pad, bool)])
+        lam_b, _, _ = mfbc_batch(adj, jnp.asarray(chunk), jnp.asarray(valid),
+                                 iterate=iterate, max_iters_bf=max_iters,
+                                 max_iters_br=max_iters)
+        lam += np.asarray(lam_b, dtype=np.float64)
+        if progress_cb is not None:
+            progress_cb(b, n_batches, lam)
+    return lam

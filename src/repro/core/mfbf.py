@@ -1,0 +1,91 @@
+"""MFBF — Maximal Frontier Bellman-Ford (paper Algorithm 1, Lemma 4.1).
+
+Computes, for a batch of ``n_b`` sources, the shortest distance ``τ(s, v)``
+and the shortest-path multiplicity ``σ̄(s, v)`` for every vertex ``v``.
+
+Loop invariant (the Lemma 4.1 induction): after ``j`` iterations
+
+* ``T``  holds weight/multiplicity of all shortest paths of **≤ j+1** edges,
+* the frontier ``F`` holds weight/multiplicity of minimal-weight paths of
+  **exactly j+1** edges that tie the current best (everything that can still
+  make progress — the *maximal* frontier).
+
+The paper's ``(∞, 1)`` initialisation trick is kept implicitly: inactive
+entries are ``(∞, 0)`` in the frontier (so they are never relaxed — CTF
+keeps them structurally absent), while ``T``'s multiplicity for unreachable
+vertices is clamped to 1 just before reciprocals are taken in MFBr.
+
+``iterate`` selects ``lax.while_loop`` (dynamic trip count — production) or
+``lax.fori_loop`` with a static bound (used by the dry-run/roofline so that
+``cost_analysis`` sees the real per-iteration work).
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.monoids import INF, Multpath, multpath_combine
+
+
+def _frontier_active(F: Multpath) -> jax.Array:
+    return jnp.isfinite(F.w) & (F.m > 0)
+
+
+def _step(adj, T: Multpath, F: Multpath) -> Tuple[Multpath, Multpath]:
+    """One maximal-frontier relaxation: returns (T', F')."""
+    C = adj.relax_mp(F)  # exactly-(j+1)-edge minimal paths from the frontier
+    T_new = multpath_combine(T, C)
+    # New frontier: candidates that match the (possibly improved) best
+    # distance. Exactly-j-edge path classes are disjoint, so multiplicities
+    # accumulate without double counting.
+    keep = (C.w == T_new.w) & jnp.isfinite(C.w) & (C.m > 0)
+    F_new = Multpath(jnp.where(keep, C.w, INF), jnp.where(keep, C.m, 0.0))
+    return T_new, F_new
+
+
+def mfbf(adj, sources: jax.Array, *, iterate: Union[str, Tuple[str, int]] = "while",
+         max_iters: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Run MFBF for one batch of sources.
+
+    Args:
+      adj: DenseAdj or CooAdj.
+      sources: (nb,) int32 vertex ids.
+      iterate: "while" for a dynamic loop, "fori" for a static loop of
+        ``max_iters`` iterations (must upper-bound the SP edge count).
+      max_iters: static bound; also caps the while loop defensively
+        (0 means n - 1).
+
+    Returns:
+      (Tw, Tm): (nb, n) distances and multiplicities. Unreachable = (inf, 0).
+    """
+    n = adj.n
+    nb = sources.shape[0]
+    bound = max_iters if max_iters > 0 else n - 1
+    Tw0 = adj.gather_rows(sources)  # direct edges, (nb, n); paper line 1
+    Tm0 = jnp.where(jnp.isfinite(Tw0), 1.0, 0.0).astype(Tw0.dtype)
+    T0 = Multpath(Tw0, Tm0)
+    F0 = T0  # paper line 2: initial frontier = exactly-1-edge paths
+
+    if iterate == "while":
+
+        def cond(state):
+            _, F, it = state
+            return jnp.any(_frontier_active(F)) & (it < bound)
+
+        def body(state):
+            T, F, it = state
+            T, F = _step(adj, T, F)
+            return T, F, it + 1
+
+        T, _, _ = jax.lax.while_loop(cond, body, (T0, F0, jnp.int32(0)))
+    else:
+
+        def body(_, state):
+            T, F = state
+            return _step(adj, T, F)
+
+        T, _ = jax.lax.fori_loop(0, bound, body, (T0, F0))
+
+    return T.w, T.m

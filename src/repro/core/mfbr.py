@@ -1,0 +1,94 @@
+"""MFBr — Maximal Frontier Brandes back-propagation (paper Algorithm 2).
+
+Given distances/multiplicities ``T = (Tw, Tm)`` from MFBF, computes the
+partial centrality factors ``ζ(s, v) = δ(s, v) / σ̄(s, v)``.
+
+We implement the Lemma 4.2 semantics with the counter mechanism:
+
+* ``c0(s, v)`` = number of SP-DAG children of ``v`` (vertices ``u`` with
+  ``τ(s,v) + A(v,u) = τ(s,u)``). The paper's Algorithm 2 lines 1–2 compute
+  this with one ``•_(⊗,g)`` product; we use the equivalent one-shot count
+  (see DESIGN.md §3 on the pseudocode's counter off-by-one).
+* A vertex enters the frontier exactly once, when its counter hits zero
+  (all children have reported), carrying ``1/σ̄(s,v) + ζ(s,v)``; it is then
+  retired (paper's ``c = -1`` state → our ``done`` mask).
+* Each round back-propagates the frontier with the centpath action
+  ``g((w,p,c), a) = (w-a, p, c)`` and the ⊗ max-select: a predecessor ``v``
+  accepts a contribution iff the shifted weight equals ``τ(s, v)`` exactly —
+  i.e. the arc is on a shortest path — accumulating ``Σ_u (1/σ̄(s,u)+ζ(s,u))``
+  and decrementing its counter by the number of children that reported.
+
+The caller must mask the self-destination ``T(s, s̄(s)) = (∞, 1)`` first
+(σ(s, t, v) with t = s is excluded from betweenness by definition).
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.monoids import INF, Centpath
+
+
+def _seed_frontier(Tw, Tm, Zp, newly):
+    Fw = jnp.where(newly, Tw, -INF)
+    Fp = jnp.where(newly, Zp + 1.0 / Tm, 0.0)
+    return Centpath(Fw, Fp, jnp.where(newly, 1.0, 0.0))
+
+
+def _step(adj, Tw, Tm, finite, state):
+    Zp, c, done, F = state
+    P = adj.relax_cp(F)  # contributions shifted back along arcs
+    contrib = (P.w == Tw) & finite & (P.c > 0)
+    Zp = Zp + jnp.where(contrib, P.p, 0.0)
+    c = c - jnp.where(contrib, P.c.astype(c.dtype), 0)
+    newly = finite & (c == 0) & (~done)
+    F = _seed_frontier(Tw, Tm, Zp, newly)
+    done = done | newly
+    return Zp, c, done, F
+
+
+def mfbr(adj, Tw: jax.Array, Tm: jax.Array, *,
+         iterate: Union[str, Tuple[str, int]] = "while",
+         max_iters: int = 0) -> jax.Array:
+    """Back-propagate centrality factors. Returns ``Zp`` with
+    ``Zp[s, v] = ζ(s, v)`` (0 for unreachable/masked vertices)."""
+    n = adj.n
+    bound = max_iters if max_iters > 0 else n - 1
+    finite = jnp.isfinite(Tw)
+    Tm_safe = jnp.where(Tm > 0, Tm, 1.0)  # the paper's (∞, 1) reciprocal guard
+    c0 = adj.count_sp_children(Tw)
+    Zp0 = jnp.zeros_like(Tw)
+    seed = finite & (c0 == 0)
+    F0 = _seed_frontier(Tw, Tm_safe, Zp0, seed)
+    state0 = (Zp0, c0, seed, F0)
+
+    if iterate == "while":
+
+        def cond(st):
+            _, _, _, F = st
+            return jnp.any(F.c > 0)
+
+        def body(st):
+            return _step(adj, Tw, Tm_safe, finite, st)
+
+        # cap defensively at ``bound`` rounds via a fuel counter
+        def cond_f(carry):
+            st, it = carry
+            return cond(st) & (it < bound)
+
+        def body_f(carry):
+            st, it = carry
+            return body(st), it + 1
+
+        (Zp, _, _, _), _ = jax.lax.while_loop(cond_f, body_f,
+                                              (state0, jnp.int32(0)))
+    else:
+
+        def body(_, st):
+            return _step(adj, Tw, Tm_safe, finite, st)
+
+        Zp, _, _, _ = jax.lax.fori_loop(0, bound, body, state0)
+
+    return Zp

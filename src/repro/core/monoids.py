@@ -1,0 +1,258 @@
+"""Multpath / centpath monoid algebra (paper Sections 3, 4.1.1, 4.2.1).
+
+A *multpath* is a tuple ``(w, m)``: path weight + multiplicity. The monoid
+``(M, ⊕)`` keeps the smaller weight and sums multiplicities on ties. The
+Bellman-Ford *action* is ``f((w, m), a) = (w + a, m)``.
+
+A *centpath* is a tuple ``(w, p, c)``: weight + partial centrality factor +
+counter. The monoid ``(C, ⊗)`` keeps the **larger** weight and sums ``p``
+and ``c`` on ties. The Brandes action is ``g((w, p, c), a) = (w - a, p, c)``.
+
+TPU adaptation (see DESIGN.md §3): frontiers are dense-in-structure,
+sparse-in-value. A multpath entry is *inactive* when ``(w, m) = (inf, 0)``;
+a centpath entry is inactive when ``w = -inf``. CTF keeps nulls structurally
+absent; we mask them explicitly, because IEEE ``inf - a = inf`` would
+otherwise win the centpath max-selection.
+
+Two relaxation regimes are provided for each action:
+
+* ``*_relax_dense``  — blocked generalized matmul against a dense ``(n, n)``
+  adjacency (``inf`` off-structure). ``C(i,j) = ⊕_k f(T(i,k), A(k,j))``.
+  This is the jnp oracle for the Pallas kernels in ``repro.kernels``.
+* ``*_relax_coo``    — edge-list relaxation via ``segment_min/max`` + a
+  tie-masked ``segment_sum`` (the TPU-native sparse idiom).
+
+Equality of float path weights is exact (paper assumes exact arithmetic;
+integer-valued float32 weights are exact up to 2**24).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+class Multpath(NamedTuple):
+    w: jax.Array  # weights, inactive = +inf
+    m: jax.Array  # multiplicities, inactive = 0
+
+
+class Centpath(NamedTuple):
+    w: jax.Array  # weights, inactive = -inf
+    p: jax.Array  # partial centrality factor
+    c: jax.Array  # counter (number of contributing children on ties)
+
+
+def multpath_identity(shape, dtype=jnp.float32) -> Multpath:
+    return Multpath(jnp.full(shape, INF, dtype), jnp.zeros(shape, dtype))
+
+
+def centpath_identity(shape, dtype=jnp.float32) -> Centpath:
+    return Centpath(jnp.full(shape, -INF, dtype), jnp.zeros(shape, dtype),
+                    jnp.zeros(shape, dtype))
+
+
+def multpath_combine(x: Multpath, y: Multpath) -> Multpath:
+    """Elementwise ⊕: min weight, sum multiplicities on exact ties."""
+    w = jnp.minimum(x.w, y.w)
+    tie = (x.w == y.w) & jnp.isfinite(x.w)
+    m = jnp.where(x.w < y.w, x.m, jnp.where(tie, x.m + y.m, y.m))
+    return Multpath(w, m)
+
+
+def centpath_combine(x: Centpath, y: Centpath) -> Centpath:
+    """Elementwise ⊗: max weight, sum p and c on exact ties."""
+    w = jnp.maximum(x.w, y.w)
+    tie = (x.w == y.w) & jnp.isfinite(x.w)
+    p = jnp.where(x.w > y.w, x.p, jnp.where(tie, x.p + y.p, y.p))
+    c = jnp.where(x.w > y.w, x.c, jnp.where(tie, x.c + y.c, y.c))
+    return Centpath(w, p, c)
+
+
+# ---------------------------------------------------------------------------
+# Dense regime: blocked generalized matmul.
+# ---------------------------------------------------------------------------
+
+
+def _mp_block(Fw, Fm, Ablk):
+    """min-plus with multiplicities over one k-block.
+
+    Fw, Fm: (nb, bk); Ablk: (bk, n) -> (nb, n) pair.
+    """
+    cand = Fw[:, :, None] + Ablk[None, :, :]  # (nb, bk, n); inf + x = inf
+    w = jnp.min(cand, axis=1)
+    tie = (cand == w[:, None, :]) & jnp.isfinite(cand)
+    m = jnp.sum(jnp.where(tie, Fm[:, :, None], 0.0), axis=1)
+    return w, m
+
+
+def multpath_relax_dense(F: Multpath, A: jax.Array, *, block: int = 256,
+                         unroll: bool = False) -> Multpath:
+    """``C = F •_(⊕,f) A``: C(s,v) = ⊕_u f(F(s,u), A(u,v)).
+
+    F.w/F.m: (nb, k); A: (k, n_out) with inf off-structure. Returns
+    (nb, n_out). Blocked over the contraction dim to keep the
+    (nb, bk, n_out) intermediate bounded.
+    """
+    nb, k = F.w.shape
+    n_out = A.shape[1]
+    block = min(block, k)
+    nblk = -(-k // block)
+    kpad = nblk * block
+    Fw = jnp.pad(F.w, ((0, 0), (0, kpad - k)), constant_values=INF)
+    Fm = jnp.pad(F.m, ((0, 0), (0, kpad - k)))
+    Ap = jnp.pad(A, ((0, kpad - k), (0, 0)), constant_values=INF)
+    Fw = Fw.reshape(nb, nblk, block)
+    Fm = Fm.reshape(nb, nblk, block)
+    Ap = Ap.reshape(nblk, block, n_out)
+
+    def step(acc, blk):
+        fw, fm, ab = blk
+        w, m = _mp_block(fw, fm, ab)
+        return multpath_combine(acc, Multpath(w, m)), None
+
+    init = multpath_identity((nb, n_out), F.w.dtype)
+    if unroll:  # exact cost accounting for the dry-run (scan counts once)
+        acc = init
+        for i in range(nblk):
+            acc, _ = step(acc, (Fw[:, i], Fm[:, i], Ap[i]))
+        return acc
+    out, _ = jax.lax.scan(step, init,
+                          (jnp.moveaxis(Fw, 1, 0), jnp.moveaxis(Fm, 1, 0), Ap))
+    return out
+
+
+def _cp_block(Fw, Fp, Bblk):
+    """max-select with p/c tie sums over one k-block.
+
+    Fw, Fp: (nb, bk); Bblk: (bk, n). Inactive F entries carry w = -inf.
+    cand(s, v) = F.w(s, u) - B(u, v); inactive or no-edge -> -inf.
+    """
+    cand = Fw[:, :, None] - Bblk[None, :, :]
+    cand = jnp.where(jnp.isfinite(Fw)[:, :, None] & jnp.isfinite(Bblk)[None, :, :],
+                     cand, -INF)
+    w = jnp.max(cand, axis=1)
+    tie = (cand == w[:, None, :]) & jnp.isfinite(cand)
+    p = jnp.sum(jnp.where(tie, Fp[:, :, None], 0.0), axis=1)
+    c = jnp.sum(jnp.where(tie, 1.0, 0.0), axis=1)
+    return w, p, c
+
+
+def centpath_relax_dense(F: Centpath, B: jax.Array, *, block: int = 256,
+                         unroll: bool = False) -> Centpath:
+    """``C = F •_(⊗,g) B`` with contraction over B's first axis.
+
+    For the Brandes step the caller passes ``B = A.T`` so that
+    ``C(s, v) = ⊗_u g(F(s, u), A(v, u))`` — contributions flow from
+    SP-DAG children ``u`` back to predecessors ``v``.
+    """
+    nb, k = F.w.shape
+    n_out = B.shape[1]
+    block = min(block, k)
+    nblk = -(-k // block)
+    kpad = nblk * block
+    Fw = jnp.pad(F.w, ((0, 0), (0, kpad - k)), constant_values=-INF)
+    Fp = jnp.pad(F.p, ((0, 0), (0, kpad - k)))
+    Bp = jnp.pad(B, ((0, kpad - k), (0, 0)), constant_values=INF)
+    Fw = Fw.reshape(nb, nblk, block)
+    Fp = Fp.reshape(nb, nblk, block)
+    Bp = Bp.reshape(nblk, block, n_out)
+
+    def step(acc, blk):
+        fw, fp, bb = blk
+        w, p, c = _cp_block(fw, fp, bb)
+        return centpath_combine(acc, Centpath(w, p, c)), None
+
+    init = centpath_identity((nb, n_out), F.w.dtype)
+    if unroll:
+        acc = init
+        for i in range(nblk):
+            acc, _ = step(acc, (Fw[:, i], Fp[:, i], Bp[i]))
+        return acc
+    out, _ = jax.lax.scan(step, init,
+                          (jnp.moveaxis(Fw, 1, 0), jnp.moveaxis(Fp, 1, 0), Bp))
+    return out
+
+
+def count_sp_children_dense(Tw: jax.Array, A: jax.Array, *, block: int = 256
+                            ) -> jax.Array:
+    """c0(s, v) = #{u : T(s,v).w + A(v,u) == T(s,u).w, both finite}.
+
+    The number of shortest-path-DAG children of v (vertices whose shortest
+    path's last hop leaves v). Blocked over v's out-neighborhood.
+    """
+    nb, n = Tw.shape
+    block = min(block, n)
+    nblk = -(-n // block)
+    npad = nblk * block
+    Ap = jnp.pad(A, ((0, 0), (0, npad - n)), constant_values=INF)
+
+    def step(acc, ub):
+        Ablk = jax.lax.dynamic_slice_in_dim(Ap, ub * block, block, axis=1)  # (n, bk)
+        Twu = jax.lax.dynamic_slice_in_dim(
+            jnp.pad(Tw, ((0, 0), (0, npad - n)), constant_values=INF),
+            ub * block, block, axis=1)  # (nb, bk)
+        # cand(s, v, u) = Tw(s, v) + A(v, u)
+        cand = Tw[:, :, None] + Ablk[None, :, :]
+        hit = (cand == Twu[:, None, :]) & jnp.isfinite(cand)
+        return acc + jnp.sum(hit, axis=2), None
+
+    acc0 = jnp.zeros((nb, n), jnp.int32)
+    out, _ = jax.lax.scan(step, acc0, jnp.arange(nblk))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# COO (sparse) regime: segment-op relaxations.
+# ---------------------------------------------------------------------------
+
+
+def multpath_relax_coo(F: Multpath, src: jax.Array, dst: jax.Array,
+                       w: jax.Array, n: int) -> Multpath:
+    """Edge-list version of ``multpath_relax_dense``.
+
+    src/dst/w: (E,) padded COO arcs (padding arcs carry w = inf).
+    F.w/F.m: (nb, n). Cost O(nb * E); chunk over nb upstream if needed.
+    """
+    cand = F.w[:, src] + w[None, :]  # (nb, E)
+    minw = jax.ops.segment_min(cand.T, dst, num_segments=n,
+                               indices_are_sorted=False).T  # (nb, n)
+    tie = (cand == minw[:, dst]) & jnp.isfinite(cand)
+    contrib = jnp.where(tie, F.m[:, src], 0.0)
+    m = jax.ops.segment_sum(contrib.T, dst, num_segments=n).T
+    # segment_min of empty segments yields +inf-ish max value for floats;
+    # normalize: entries with zero multiplicity are inactive.
+    minw = jnp.where(m > 0, minw, INF)
+    return Multpath(minw, m)
+
+
+def centpath_relax_coo(F: Centpath, src: jax.Array, dst: jax.Array,
+                       w: jax.Array, n: int) -> Centpath:
+    """Edge-list Brandes action: contributions flow dst -> src.
+
+    For arc (v -> u, a): cand(s, v) over children u: F.w(s, u) - a.
+    Segment over ``src`` (the predecessor side).
+    """
+    cand = F.w[:, dst] - w[None, :]  # (nb, E)
+    active = jnp.isfinite(F.w[:, dst]) & jnp.isfinite(w)[None, :]
+    cand = jnp.where(active, cand, -INF)
+    maxw = jax.ops.segment_max(cand.T, src, num_segments=n).T  # (nb, n)
+    tie = (cand == maxw[:, src]) & jnp.isfinite(cand)
+    p = jax.ops.segment_sum(jnp.where(tie, F.p[:, dst], 0.0).T, src,
+                            num_segments=n).T
+    c = jax.ops.segment_sum(jnp.where(tie, 1.0, 0.0).T, src, num_segments=n).T
+    maxw = jnp.where(c > 0, maxw, -INF)
+    return Centpath(maxw, p, c)
+
+
+def count_sp_children_coo(Tw: jax.Array, src: jax.Array, dst: jax.Array,
+                          w: jax.Array, n: int) -> jax.Array:
+    """COO version of ``count_sp_children_dense``: segment over ``src``."""
+    cand = Tw[:, src] + w[None, :]  # (nb, E)
+    hit = (cand == Tw[:, dst]) & jnp.isfinite(cand)
+    return jax.ops.segment_sum(hit.astype(jnp.int32).T, src,
+                               num_segments=n).T

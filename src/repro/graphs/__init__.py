@@ -1,0 +1,13 @@
+from repro.graphs.formats import Graph, coo_to_csr, coo_to_dense, pad_edges
+from repro.graphs.generators import erdos_renyi, rmat, uniform_random, ring_of_cliques
+
+__all__ = [
+    "Graph",
+    "coo_to_csr",
+    "coo_to_dense",
+    "pad_edges",
+    "erdos_renyi",
+    "rmat",
+    "uniform_random",
+    "ring_of_cliques",
+]

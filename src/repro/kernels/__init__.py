@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the MFBC compute hot spots.
+
+The paper's hot spot is the generalized sparse matmul executed every
+frontier iteration; on TPU the dense-frontier regime runs on the VPU via
+the two blocked kernels here (see DESIGN.md §3 for the GPU→TPU adaptation
+rationale). Validated in interpret mode against the pure-jnp oracles in
+``ref.py`` over shape/dtype sweeps.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.centpath_mm import centpath_matmul_pallas
+from repro.kernels.tropical_mm import multpath_matmul_pallas
+
+__all__ = ["ops", "ref", "centpath_matmul_pallas", "multpath_matmul_pallas"]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (exact semantics, naive memory)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+def multpath_matmul_ref(fw, fm, a):
+    """Naive O(nb·n·n2)-memory reference for tropical_mm."""
+    cand = fw[:, :, None] + a[None, :, :]  # (nb, n, n2)
+    cw = jnp.min(cand, axis=1)
+    tie = (cand == cw[:, None, :]) & jnp.isfinite(cand)
+    cm = jnp.sum(jnp.where(tie, fm[:, :, None], 0.0), axis=1)
+    return cw, cm
+
+
+def centpath_matmul_ref(fw, fp, b):
+    """Naive reference for centpath_mm."""
+    cand = fw[:, :, None] - b[None, :, :]
+    cand = jnp.where(jnp.isfinite(fw)[:, :, None] & jnp.isfinite(b)[None, :, :],
+                     cand, -INF)
+    cw = jnp.max(cand, axis=1)
+    tie = (cand == cw[:, None, :]) & jnp.isfinite(cand)
+    cp = jnp.sum(jnp.where(tie, fp[:, :, None], 0.0), axis=1)
+    cc = jnp.sum(jnp.where(tie, 1.0, 0.0), axis=1)
+    return cw, cp, cc

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state. Single pod: 16x16 = 256 chips (data, model);
+multi-pod: 2 pods x 256 = 512 chips (pod, data, model). The ``pod`` axis is
+MFBC's replication factor c (DESIGN.md §4) and plain DP for the LM archs.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for CI-scale multi-device runs (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (4, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,4 @@
+"""Architecture zoo: LM transformers (dense + MoE), GNNs, recsys."""
+from repro.models import gnn, layers, recsys, transformer
+
+__all__ = ["gnn", "layers", "recsys", "transformer"]

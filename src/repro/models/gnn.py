@@ -1,0 +1,316 @@
+"""GNN architecture family: GCN, GIN, GAT, and an E(3)-equivariant
+NequIP-class network.
+
+Message passing is built from ``jnp.take`` (gather) + ``jax.ops.segment_sum``
+/ ``segment_max`` over a static-shape padded edge list — the TPU-native
+SpMM idiom (JAX has no CSR; see kernel_taxonomy §GNN). Padding edges point
+at a dummy node slot ``n`` (arrays are sized n+1) so they are algebraically
+inert.
+
+The paper-technique tie-in (DESIGN.md §5): message passing *is* a sparse
+matmul ``Â·X``; the spgemm cost model drives the edge/node axis assignment
+(edges over ``data``, nodes over ``model``, pod = the paper's replication
+factor c for full-batch large graphs).
+
+NequIP (arXiv:2101.03164) is realized with l_max = 2 in the *Cartesian*
+tensor basis — features are (scalars, vectors, traceless-symmetric rank-2)
+channels and the Clebsch-Gordan products become the closed-form Cartesian
+contractions (TensorNet-style, arXiv:2306.06482). This is mathematically
+the same O(3)-irrep content as spherical l ≤ 2 but avoids CG-coefficient
+gathers (MXU/VPU-friendly). Exact equivariance is property-tested under
+random rotations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def _seg_sum(x, idx, n):
+    return jax.ops.segment_sum(x, idx, num_segments=n)
+
+
+def _seg_max(x, idx, n):
+    return jax.ops.segment_max(x, idx, num_segments=n)
+
+
+def _dense(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# GCN [Kipf & Welling, arXiv:1609.02907]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_in: int = 1433
+    n_classes: int = 7
+    dropout: float = 0.0  # deterministic eval path
+
+
+def gcn_init(cfg: GCNConfig, key) -> Params:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, cfg.n_layers)
+    return {"w": [_dense(keys[i], (dims[i], dims[i + 1]))
+                  for i in range(cfg.n_layers)]}
+
+
+def gcn_forward(cfg: GCNConfig, p: Params, batch: Dict[str, jax.Array]
+                ) -> jax.Array:
+    """batch: x (n+1, d_in), src/dst (E,), deg (n+1,). Sym-normalized."""
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    n1 = x.shape[0]
+    dinv = jax.lax.rsqrt(jnp.clip(batch["deg"].astype(jnp.float32), 1.0))
+    coef = (dinv[src] * dinv[dst])[:, None]
+    for i, w in enumerate(p["w"]):
+        h = x @ w
+        h = _seg_sum(h[src] * coef, dst, n1) + h * (dinv * dinv)[:, None]
+        x = jax.nn.relu(h) if i + 1 < len(p["w"]) else h
+    return x
+
+
+# ---------------------------------------------------------------------------
+# GIN [Xu et al., arXiv:1810.00826]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GINConfig:
+    name: str
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_in: int = 7
+    n_classes: int = 2
+    learn_eps: bool = True
+
+
+def gin_init(cfg: GINConfig, key) -> Params:
+    keys = jax.random.split(key, 2 * cfg.n_layers + 1)
+    mlps = []
+    d_prev = cfg.d_in
+    for i in range(cfg.n_layers):
+        mlps.append({"w1": _dense(keys[2 * i], (d_prev, cfg.d_hidden)),
+                     "b1": jnp.zeros(cfg.d_hidden),
+                     "w2": _dense(keys[2 * i + 1], (cfg.d_hidden, cfg.d_hidden)),
+                     "b2": jnp.zeros(cfg.d_hidden)})
+        d_prev = cfg.d_hidden
+    return {"mlps": mlps, "eps": jnp.zeros(cfg.n_layers),
+            "readout": _dense(keys[-1], (cfg.d_hidden, cfg.n_classes))}
+
+
+def gin_forward(cfg: GINConfig, p: Params, batch: Dict[str, jax.Array]
+                ) -> jax.Array:
+    """Graph-level readout when ``graph_ids`` present, else node logits."""
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    n1 = x.shape[0]
+    for i, mlp in enumerate(p["mlps"]):
+        agg = _seg_sum(x[src], dst, n1)
+        h = (1.0 + p["eps"][i]) * x + agg
+        h = jax.nn.relu(h @ mlp["w1"] + mlp["b1"])
+        x = jax.nn.relu(h @ mlp["w2"] + mlp["b2"])
+    if "graph_ids" in batch:
+        gx = _seg_sum(x, batch["graph_ids"], batch["n_graphs"])
+        return gx @ p["readout"]
+    return x @ p["readout"]
+
+
+# ---------------------------------------------------------------------------
+# GAT [Veličković et al., arXiv:1710.10903]
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    negative_slope: float = 0.2
+
+
+def gat_init(cfg: GATConfig, key) -> Params:
+    layers = []
+    d_prev = cfg.d_in
+    keys = jax.random.split(key, 3 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        last = i + 1 == cfg.n_layers
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        layers.append({
+            "w": _dense(keys[3 * i], (d_prev, heads * d_out)),
+            "a_src": _dense(keys[3 * i + 1], (heads, d_out)),
+            "a_dst": _dense(keys[3 * i + 2], (heads, d_out)),
+        })
+        d_prev = heads * d_out
+    return {"layers": layers}
+
+
+def gat_forward(cfg: GATConfig, p: Params, batch: Dict[str, jax.Array]
+                ) -> jax.Array:
+    x, src, dst = batch["x"], batch["src"], batch["dst"]
+    n1 = x.shape[0]
+    pad = batch.get("edge_pad")  # bool (E,), True = padding edge
+    for i, lp in enumerate(p["layers"]):
+        last = i + 1 == len(p["layers"])
+        heads = 1 if last else cfg.n_heads
+        d_out = lp["w"].shape[1] // heads
+        h = (x @ lp["w"]).reshape(n1, heads, d_out)
+        al = jnp.einsum("nhd,hd->nh", h, lp["a_src"])
+        ar = jnp.einsum("nhd,hd->nh", h, lp["a_dst"])
+        e = jax.nn.leaky_relu(al[src] + ar[dst], cfg.negative_slope)  # (E, H)
+        if pad is not None:
+            e = jnp.where(pad[:, None], -1e30, e)
+        emax = _seg_max(e, dst, n1)[dst]
+        ex = jnp.exp(e - emax)
+        if pad is not None:
+            ex = jnp.where(pad[:, None], 0.0, ex)
+        denom = jnp.clip(_seg_sum(ex, dst, n1), 1e-9)[dst]
+        alpha = ex / denom  # (E, H) edge softmax (SDDMM -> segment softmax)
+        msg = h[src] * alpha[:, :, None]
+        out = _seg_sum(msg, dst, n1)  # (n1, H, d_out)
+        x = out.reshape(n1, heads * d_out)
+        if not last:
+            x = jax.nn.elu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# NequIP-class E(3)-equivariant network (Cartesian l_max = 2 realization)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2  # 0: scalars, 1: +vectors, 2: +rank-2 traceless
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_in: int = 16  # species / input feature dim
+    readout: str = "energy"  # energy (sum) | node (per-node scalar head)
+    n_out: int = 1
+
+
+def nequip_init(cfg: NequIPConfig, key) -> Params:
+    C = cfg.channels
+    keys = iter(jax.random.split(key, 4 + cfg.n_layers * 8))
+    p: Params = {"embed": _dense(next(keys), (cfg.d_in, C))}
+    layers = []
+    n_paths = 6  # radial weights per message block (see nequip_forward)
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "radial_w1": _dense(next(keys), (cfg.n_rbf, 32)),
+            "radial_w2": _dense(next(keys), (32, C * n_paths)),
+            "mix_s": _dense(next(keys), (C, C)),
+            "mix_v": _dense(next(keys), (C, C)),
+            "mix_t": _dense(next(keys), (C, C)),
+            "gate_w": _dense(next(keys), (3 * C, 2 * C)),
+            "upd_w1": _dense(next(keys), (3 * C, 2 * C)),
+            "upd_w2": _dense(next(keys), (2 * C, C)),
+        })
+    p["layers"] = layers
+    p["out_w1"] = _dense(next(keys), (C, C))
+    p["out_w2"] = _dense(next(keys), (C, cfg.n_out))
+    return p
+
+
+def _rbf(dist, n_rbf, cutoff):
+    mu = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    basis = jnp.exp(-gamma * jnp.square(dist[:, None] - mu[None, :]))
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cutoff, 0, 1)) + 1.0)
+    return basis * env[:, None]
+
+
+def nequip_forward(cfg: NequIPConfig, p: Params, batch: Dict[str, jax.Array]
+                   ) -> jax.Array:
+    """batch: pos (n+1, 3), x (n+1, d_in), src/dst (E,), optional
+    graph_ids/n_graphs. Padding edges must connect the dummy node to
+    itself (zero edge vector -> zero envelope contribution guarded)."""
+    pos, src, dst = batch["pos"], batch["src"], batch["dst"]
+    n1 = pos.shape[0]
+    C = cfg.channels
+    s = batch["x"] @ p["embed"]  # (n1, C) scalars
+    v = jnp.zeros((n1, C, 3))
+    t = jnp.zeros((n1, C, 3, 3))
+
+    r = pos[src] - pos[dst]  # (E, 3)
+    d = jnp.sqrt(jnp.sum(r * r, axis=-1) + 1e-12)
+    u = r / d[:, None]
+    rbf = _rbf(d, cfg.n_rbf, cfg.cutoff)  # (E, R)
+    real = d > 1e-6  # padding edges have zero length
+    eye = jnp.eye(3)
+    Y2 = u[:, :, None] * u[:, None, :] - eye[None] / 3.0  # (E, 3, 3)
+
+    for lp in p["layers"]:
+        w = jax.nn.silu(rbf @ lp["radial_w1"]) @ lp["radial_w2"]
+        w = jnp.where(real[:, None], w, 0.0).reshape(-1, C, 6)  # (E, C, 6)
+        sj, vj, tj = s[src], v[src], t[src]
+        # l-mixing message paths (Cartesian CG products, l <= 2):
+        m_s = w[..., 0] * sj                                    # 0⊗0→0
+        m_s = m_s + w[..., 1] * jnp.einsum("eci,ei->ec", vj, u)  # 1⊗1→0
+        m_v = w[..., 2, None] * vj                               # 1⊗0→1
+        m_v = m_v + w[..., 3, None] * sj[..., None] * u[:, None, :]  # 0⊗1→1
+        m_v = m_v + w[..., 4, None] * jnp.einsum("ecij,ej->eci", tj, u)  # 2⊗1→1
+        m_t = w[..., 5, None, None] * sj[..., None, None] * Y2[:, None]  # 0⊗2→2
+        agg_s = _seg_sum(m_s, dst, n1)
+        agg_v = _seg_sum(m_v, dst, n1)
+        agg_t = _seg_sum(m_t, dst, n1)
+        # channel mixing (equivariant: acts on channel dim only)
+        s_n = agg_s @ lp["mix_s"]
+        v_n = jnp.einsum("ncx,cd->ndx", agg_v, lp["mix_v"])
+        t_n = jnp.einsum("ncxy,cd->ndxy", agg_t, lp["mix_t"])
+        # invariants -> gates
+        inv = jnp.concatenate(
+            [s_n, jnp.sum(v_n * v_n, -1), jnp.einsum("ncxy,ncxy->nc", t_n, t_n)],
+            axis=-1)  # (n1, 3C)
+        gates = jax.nn.sigmoid(inv @ lp["gate_w"]).reshape(n1, 2, C)
+        upd = jax.nn.silu(inv @ lp["upd_w1"]) @ lp["upd_w2"]
+        s = s + upd
+        v = v + gates[:, 0][..., None] * v_n
+        t = t + gates[:, 1][..., None, None] * t_n
+    h = jax.nn.silu(s @ p["out_w1"]) @ p["out_w2"]  # (n1, n_out) invariant
+    if cfg.readout == "energy" and "graph_ids" in batch:
+        return _seg_sum(h, batch["graph_ids"], batch["n_graphs"])
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Unified entry points (used by configs / dryrun / smoke tests).
+# ---------------------------------------------------------------------------
+
+FORWARD = {"gcn": gcn_forward, "gin": gin_forward, "gat": gat_forward,
+           "nequip": nequip_forward}
+INIT = {"gcn": gcn_init, "gin": gin_init, "gat": gat_init,
+        "nequip": nequip_init}
+
+
+def node_ce_loss(kind, cfg, params, batch):
+    logits = FORWARD[kind](cfg, params, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch.get("label_mask", jnp.ones(labels.shape[0], bool))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(jnp.where(mask, logz - gold, 0.0)) / jnp.clip(
+        jnp.sum(mask), 1)
+
+
+def energy_mse_loss(cfg, params, batch):
+    e = nequip_forward(cfg, params, batch)[:, 0]
+    return jnp.mean(jnp.square(e - batch["energy"]))

@@ -1,0 +1,222 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (softcap +
+sliding window), gated MLP, and capacity-based top-k MoE.
+
+Sharding strategy (see DESIGN.md §4): parameters carry explicit
+NamedSharding via the logical rules in ``repro.sharding.rules``; activations
+get ``with_sharding_constraint`` at layer boundaries. TP = heads/ffn/vocab
+over ``model``; FSDP = the other big dim over ``(pod, data)``; EP = experts
+over ``model``.
+
+All functions are pure; parameters are nested dicts of arrays (stacked on a
+leading layer dim for ``lax.scan``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = True) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale) if zero_centered else scale
+    return (y * w).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+         ) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    attn_softcap: Optional[float] = None  # gemma2: 50.0
+    window: Optional[int] = None  # sliding-window size for local layers
+    query_scale: Optional[float] = None  # default 1/sqrt(head_dim)
+
+
+def attention(cfg: AttnConfig, p: Params, x: jax.Array,
+              positions: jax.Array, *, mask: Optional[jax.Array] = None,
+              kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_pos: Optional[jax.Array] = None,
+              dp_spec=None) -> Tuple[jax.Array, Optional[Tuple]]:
+    """GQA attention.
+
+    x: (B, S, d). With ``kv_cache=(k, v)`` of shape (B, S_max, n_kv, hd),
+    appends the new keys/values at ``cache_pos`` and attends over the cache
+    (decode / chunked prefill). Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]).reshape(B, S, K, hd)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"]).reshape(B, S, K, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    q = q * scale
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_pos, axis=1)
+        k_all, v_all = ck, cv
+        kv_positions = jnp.arange(k_all.shape[1])
+        new_cache = (ck, cv)
+    else:
+        k_all, v_all = k, v
+        kv_positions = positions[0] if positions.ndim > 1 else positions
+        new_cache = None
+
+    T = k_all.shape[1]
+    g = H // K  # queries per kv group
+    qg = q.reshape(B, S, K, g, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k_all)
+    logits = softcap(logits, cfg.attn_softcap)
+
+    q_pos = positions if positions.ndim > 1 else positions[None, :]
+    causal = kv_positions[None, None, :] <= q_pos[:, :, None]  # (B, S, T)
+    if cfg.window is not None:
+        causal &= kv_positions[None, None, :] > q_pos[:, :, None] - cfg.window
+    if kv_cache is not None:
+        valid = kv_positions[None, None, :] < (cache_pos + S)
+        causal &= valid
+    if mask is not None:
+        causal &= mask
+    logits = jnp.where(causal[:, None, None, :, :], logits, -1e30)
+
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v_all).reshape(B, S, H * hd)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, new_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    d_ff: int
+    act: str = "silu"  # silu (llama/command-r) | gelu (gemma2/granite)
+    style: str = "gated"  # gated (SwiGLU/GeGLU) | plain (GPT-BigCode)
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu,
+                                                           approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def gated_mlp(cfg: MlpConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.style == "plain":
+        return _act(cfg.act)(x @ p["w_up"]) @ p["w_down"]
+    h = _act(cfg.act)(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int  # per-expert ffn width
+    act: str = "silu"
+    capacity_factor: float = 1.25
+    router_softcap: Optional[float] = None
+    n_shared: int = 0  # shared (always-on) experts, moonshot-style
+    d_ff_shared: int = 0
+
+
+def moe_block(cfg: MoeConfig, p: Params, x: jax.Array,
+              policy=None) -> jax.Array:
+    """Capacity-based top-k MoE with sort-based dispatch (MegaBlocks-style
+    grouped GEMM realized as an (E, cap, d) einsum; EP = experts sharded
+    over ``model``, tokens reach their experts through the all-to-all XLA
+    inserts for the resharding between token-major and expert-major forms).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, D)
+    logits = softcap(xt @ p["router"], cfg.router_softcap)  # (T, E)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, K)  # (T, K)
+    top_g = (top_g / jnp.clip(top_g.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    cap = int(np.ceil(T * K / E * cfg.capacity_factor))
+    cap = max(cap, 4)
+    # flatten assignments; rank-within-expert via one stable sort (the
+    # (T·K, E) one-hot cumsum variant is quadratic-ish on some backends)
+    flat_e = top_e.reshape(-1)  # (T*K,)
+    flat_g = top_g.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(flat_e), flat_e,
+                                 num_segments=E)  # (E,)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(T * K) - starts[sorted_e]
+    rank = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+    slot = jnp.where(keep, flat_e * cap + rank, E * cap)  # drop -> scratch
+
+    # scatter tokens into (E*cap+1, D) buffer; expert-major form is
+    # sharded (E over model = EP, cap over data) — the token->expert
+    # resharding here IS the MoE all-to-all.
+    buf = jnp.zeros((E * cap + 1, D), x.dtype).at[slot].add(xt[flat_tok])
+    buf = buf[:E * cap].reshape(E, cap, D)
+    if policy is not None:
+        buf = policy.constrain(buf, ("expert", "batch", None))
+    h = _act(cfg.act)(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if policy is not None:
+        h = policy.constrain(h, ("expert", "batch", None))
+    yb = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * cap, D)
+    yb = jnp.concatenate([yb, jnp.zeros((1, D), yb.dtype)], axis=0)
+    y = jnp.zeros((T, D), x.dtype).at[flat_tok].add(
+        yb[slot] * jnp.where(keep, flat_g, 0.0)[:, None])
+
+    if cfg.n_shared:
+        sh = MlpConfig(cfg.d_ff_shared or cfg.d_ff, cfg.act)
+        y = y + gated_mlp(sh, p["shared"], xt)
+    return y.reshape(B, S, D)
+
+
+def embed_tokens(p: Params, tokens: jax.Array, *, scale: bool = False
+                 ) -> jax.Array:
+    emb = p["embedding"][tokens]
+    if scale:
+        emb = emb * (p["embedding"].shape[-1] ** 0.5)
+    return emb
+
+
+def lm_logits(p: Params, x: jax.Array, *, cap: Optional[float] = None,
+              tied: bool = True) -> jax.Array:
+    w = p["embedding"].T if tied else p["lm_head"]
+    return softcap(jnp.einsum("bsd,dv->bsv", x, w), cap)

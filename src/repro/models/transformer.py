@@ -1,0 +1,461 @@
+"""Decoder-only LM family: dense (gemma2 / command-r / granite) and MoE
+(moonshot / qwen3) variants with a single scan-over-layers implementation.
+
+Supports three block styles:
+  * ``prenorm``  — llama-style sequential pre-norm (granite, qwen3, moonshot)
+  * ``sandwich`` — gemma2 pre+post norms around both sublayers
+  * ``parallel`` — command-r parallel attention+MLP with one input norm
+
+plus per-layer sliding windows (gemma2 alternating local/global), logit
+softcaps, GQA, tied embeddings, and capacity-based MoE.
+
+Entry points:
+  * ``init_params(cfg, key)``                   — host-side init (smoke tests)
+  * ``abstract_params(cfg)``                    — ShapeDtypeStructs (dry-run)
+  * ``forward(cfg, params, tokens, policy)``    — logits
+  * ``loss_fn`` / ``make_train_step``           — training
+  * ``init_cache`` / ``prefill`` / ``decode_step`` — serving
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.sharding.rules import NO_SHARDING, ShardingPolicy
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    block_style: str = "prenorm"  # prenorm | sandwich | parallel
+    mlp_style: str = "gated"  # gated | plain
+    act: str = "silu"
+    rope_theta: float = 10000.0
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    query_scale: Optional[float] = None
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False
+    window_pattern: Optional[Tuple[Optional[int], ...]] = None  # cycle per layer
+    # MoE (None -> dense)
+    moe: Optional[L.MoeConfig] = None
+    moe_every: int = 1  # apply MoE on layers where l % moe_every == 0
+    dtype: Any = jnp.float32
+    remat: str = "none"  # none | full | dots
+    unroll: bool = False  # python-loop the layers (dry-run cost fidelity)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(self.n_heads, self.n_kv, self.hd,
+                            rope_theta=self.rope_theta,
+                            attn_softcap=self.attn_softcap,
+                            query_scale=self.query_scale)
+
+    @property
+    def mlp(self) -> L.MlpConfig:
+        return L.MlpConfig(self.d_ff, self.act, self.mlp_style)
+
+    def layer_windows(self) -> np.ndarray:
+        """(L,) int32 per-layer window (big sentinel = global)."""
+        big = 1 << 30
+        if self.window_pattern is None:
+            return np.full(self.n_layers, big, np.int32)
+        pat = [w if w is not None else big for w in self.window_pattern]
+        return np.asarray([pat[l % len(pat)] for l in range(self.n_layers)],
+                          np.int32)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (used by roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv) + self.n_heads * hd * d
+        if self.moe is not None:
+            ff = 3 * d * self.moe.d_ff * self.moe.n_experts + d * self.moe.n_experts
+            if self.moe.n_shared:
+                ff += 3 * d * (self.moe.d_ff_shared or self.moe.d_ff)
+        else:
+            mats = 2 if self.mlp_style == "plain" else 3
+            ff = mats * d * self.d_ff
+        norms = 4 * d if self.block_style == "sandwich" else 2 * d
+        per_layer = attn + ff + norms
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def n_active_params(self) -> int:
+        if self.moe is None:
+            return self.n_params()
+        d = self.d_model
+        dense = self.n_params() - self.n_layers * 3 * d * self.moe.d_ff * \
+            self.moe.n_experts
+        act_ff = self.n_layers * 3 * d * self.moe.d_ff * self.moe.top_k
+        return dense + act_ff
+
+
+# ---------------------------------------------------------------------------
+# Parameter trees.
+# ---------------------------------------------------------------------------
+
+
+def _layer_shapes(cfg: TransformerConfig) -> Dict[str, Tuple[int, ...]]:
+    d, hd = cfg.d_model, cfg.hd
+    shapes = {
+        "attn": {
+            "wq": (d, cfg.n_heads, hd),
+            "wk": (d, cfg.n_kv, hd),
+            "wv": (d, cfg.n_kv, hd),
+            "wo": (cfg.n_heads * hd, d),
+        },
+        "norm_attn": {"scale": (d,)},
+        "norm_mlp": {"scale": (d,)},
+    }
+    if cfg.block_style == "sandwich":
+        shapes["norm_attn_post"] = {"scale": (d,)}
+        shapes["norm_mlp_post"] = {"scale": (d,)}
+    if cfg.moe is not None:
+        m = cfg.moe
+        shapes["moe"] = {
+            "router": (d, m.n_experts),
+            "w_gate": (m.n_experts, d, m.d_ff),
+            "w_up": (m.n_experts, d, m.d_ff),
+            "w_down": (m.n_experts, m.d_ff, d),
+        }
+        if m.n_shared:
+            dsh = m.d_ff_shared or m.d_ff
+            shapes["moe"]["shared"] = {"w_gate": (d, dsh), "w_up": (d, dsh),
+                                       "w_down": (dsh, d)}
+    elif cfg.mlp_style == "plain":
+        shapes["mlp"] = {"w_up": (d, cfg.d_ff), "w_down": (cfg.d_ff, d)}
+    else:
+        shapes["mlp"] = {"w_gate": (d, cfg.d_ff), "w_up": (d, cfg.d_ff),
+                         "w_down": (cfg.d_ff, d)}
+    return shapes
+
+
+def param_shapes(cfg: TransformerConfig) -> Dict[str, Any]:
+    Ln = cfg.n_layers
+    stack = jax.tree.map(lambda s: (Ln,) + s, _layer_shapes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    tree = {
+        "embedding": (cfg.vocab, cfg.d_model),
+        "final_norm": {"scale": (cfg.d_model,)},
+        "layers": stack,
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = (cfg.d_model, cfg.vocab)
+    return tree
+
+
+def param_logical_axes(cfg: TransformerConfig, model_size: int = 1
+                       ) -> Dict[str, Any]:
+    """Logical sharding axes per parameter (layer dim first for stacks).
+
+    KV heads shard over ``model`` only when divisible (GQA/MQA with few KV
+    heads replicates them — the standard TP treatment); the KV *cache* then
+    shards its sequence dim instead (see ``cache_abstract``).
+    """
+    kv_ax = "model" if model_size > 0 and cfg.n_kv % max(model_size, 1) == 0 \
+        else None
+    lax_ = {
+        "attn": {
+            "wq": (None, "fsdp", "model", None),
+            "wk": (None, "fsdp", kv_ax, None),
+            "wv": (None, "fsdp", kv_ax, None),
+            "wo": (None, "model", "fsdp"),
+        },
+        "norm_attn": {"scale": (None, None)},
+        "norm_mlp": {"scale": (None, None)},
+    }
+    if cfg.block_style == "sandwich":
+        lax_["norm_attn_post"] = {"scale": (None, None)}
+        lax_["norm_mlp_post"] = {"scale": (None, None)}
+    if cfg.moe is not None:
+        lax_["moe"] = {
+            "router": (None, "fsdp", None),
+            "w_gate": (None, "expert", "fsdp", None),
+            "w_up": (None, "expert", "fsdp", None),
+            "w_down": (None, "expert", None, "fsdp"),
+        }
+        if cfg.moe.n_shared:
+            lax_["moe"]["shared"] = {"w_gate": (None, "fsdp", "model"),
+                                     "w_up": (None, "fsdp", "model"),
+                                     "w_down": (None, "model", "fsdp")}
+    elif cfg.mlp_style == "plain":
+        lax_["mlp"] = {"w_up": (None, "fsdp", "model"),
+                       "w_down": (None, "model", "fsdp")}
+    else:
+        lax_["mlp"] = {"w_gate": (None, "fsdp", "model"),
+                       "w_up": (None, "fsdp", "model"),
+                       "w_down": (None, "model", "fsdp")}
+    tree = {
+        "embedding": ("vocab", "fsdp"),
+        "final_norm": {"scale": (None,)},
+        "layers": lax_,
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ("fsdp", "vocab")
+    return tree
+
+
+def abstract_params(cfg: TransformerConfig,
+                    policy: ShardingPolicy = NO_SHARDING):
+    shapes = param_shapes(cfg)
+    logical = param_logical_axes(cfg, policy.model_size)
+
+    def mk(shape, logic):
+        sh = policy.named(logic) if policy.mesh is not None else None
+        return jax.ShapeDtypeStruct(shape, cfg.dtype, sharding=sh)
+
+    return jax.tree.map(mk, shapes, logical,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Params:
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(shape, k):
+        # norm scales: (d,) or stacked (L, d) -> zeros (zero-centered RMS)
+        if shape[-1] == cfg.d_model and (
+                len(shape) == 1 or (len(shape) == 2
+                                    and shape[0] == cfg.n_layers)):
+            return jnp.zeros(shape, cfg.dtype)
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape, cfg.dtype)
+                * (1.0 / np.sqrt(max(fan_in, 1))))
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in
+                                        zip(leaves, keys)])
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+
+def _block(cfg: TransformerConfig, lp: Params, x, positions, window,
+           policy: ShardingPolicy, kv_cache=None, cache_pos=None):
+    """One transformer layer. window: traced scalar (big = global)."""
+    attn_cfg = dataclasses.replace(cfg.attn, window=None)
+    B, S, _ = x.shape
+
+    def attend(xin):
+        # per-layer window as a traced mask (static pattern, traced value)
+        q_pos = positions if positions.ndim > 1 else positions[None, :]
+        T = kv_cache[0].shape[1] if kv_cache is not None else S
+        kv_pos = jnp.arange(T)
+        wmask = kv_pos[None, None, :] > (q_pos[:, :, None] - window)
+        return L.attention(attn_cfg, lp["attn"], xin, positions,
+                           mask=wmask, kv_cache=kv_cache, cache_pos=cache_pos)
+
+    if cfg.block_style == "parallel":
+        h = L.rms_norm(x, lp["norm_attn"]["scale"])
+        a, cache = attend(h)
+        mlp_in = L.rms_norm(x, lp["norm_mlp"]["scale"])
+        m = L.gated_mlp(cfg.mlp, lp["mlp"], mlp_in) if cfg.moe is None \
+            else L.moe_block(cfg.moe, lp["moe"], mlp_in, policy)
+        out = x + a + m
+    else:
+        h = L.rms_norm(x, lp["norm_attn"]["scale"])
+        a, cache = attend(h)
+        if cfg.block_style == "sandwich":
+            a = L.rms_norm(a, lp["norm_attn_post"]["scale"])
+        x = x + a
+        h = L.rms_norm(x, lp["norm_mlp"]["scale"])
+        m = L.gated_mlp(cfg.mlp, lp["mlp"], h) if cfg.moe is None \
+            else L.moe_block(cfg.moe, lp["moe"], h, policy)
+        if cfg.block_style == "sandwich":
+            m = L.rms_norm(m, lp["norm_mlp_post"]["scale"])
+        out = x + m
+    out = policy.constrain(out, ("batch", "seq", None))
+    return out, cache
+
+
+def forward(cfg: TransformerConfig, params: Params, tokens: jax.Array,
+            policy: ShardingPolicy = NO_SHARDING) -> jax.Array:
+    """tokens: (B, S) int32 -> logits (B, S, vocab)."""
+    x = forward_hidden(cfg, params, tokens, policy)
+    logits = L.lm_logits(params, x, cap=cfg.final_softcap,
+                         tied=cfg.tie_embeddings)
+    # NB: seq stays unsharded here — "seq" and "vocab" both map to model.
+    return policy.constrain(logits, ("batch", None, "vocab"))
+
+
+def forward_hidden(cfg: TransformerConfig, params: Params,
+                   tokens: jax.Array,
+                   policy: ShardingPolicy = NO_SHARDING) -> jax.Array:
+    """Forward pass up to (but excluding) the LM head: (B, S, d)."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params, tokens, scale=cfg.scale_embeddings)
+    x = policy.constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    windows = jnp.asarray(cfg.layer_windows())
+
+    fn = _block
+    if cfg.remat == "full":
+        fn = jax.checkpoint(_block, static_argnums=(0, 5))
+    elif cfg.remat == "dots":
+        fn = jax.checkpoint(
+            _block, static_argnums=(0, 5),
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def body(x, layer):
+        lp, w = layer
+        out, _ = fn(cfg, lp, x, positions, w, policy)
+        return out, None
+
+    if cfg.unroll:
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            x, _ = body(x, (lp, windows[l]))
+    else:
+        x, _ = jax.lax.scan(body, x, (params["layers"], windows))
+    return L.rms_norm(x, params["final_norm"]["scale"])
+
+
+def loss_fn(cfg: TransformerConfig, params: Params, tokens: jax.Array,
+            targets: jax.Array, policy: ShardingPolicy = NO_SHARDING,
+            *, chunks: int = 1):
+    """Next-token cross entropy.
+
+    ``chunks > 1``: chunked CE — the (B, S, vocab) logits tensor is never
+    materialized whole; each sequence chunk's logits are computed,
+    consumed, and (on the backward pass, via jax.checkpoint) recomputed.
+    Peak temp memory drops by ~chunks x (see EXPERIMENTS.md §Perf).
+    """
+    if chunks <= 1:
+        logits = forward(cfg, params, tokens, policy).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    h = forward_hidden(cfg, params, tokens, policy)
+    B, S, D = h.shape
+    assert S % chunks == 0, (S, chunks)
+    hc = h.reshape(B, chunks, S // chunks, D).swapaxes(0, 1)
+    tc = targets.reshape(B, chunks, S // chunks).swapaxes(0, 1)
+    w = params["embedding"].T if cfg.tie_embeddings else params["lm_head"]
+
+    @jax.checkpoint
+    def chunk_loss(hx, tx):
+        logits = L.softcap(jnp.einsum("bsd,dv->bsv", hx, w),
+                           cfg.final_softcap).astype(jnp.float32)
+        logits = policy.constrain(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def body(acc, xs):
+        hx, tx = xs
+        return acc + chunk_loss(hx, tx), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# Serving: KV cache, prefill, decode.
+# ---------------------------------------------------------------------------
+
+
+def _cache_logical(cfg: TransformerConfig, batch: int,
+                   policy: ShardingPolicy):
+    """KV cache sharding: batch over DP when batch > 1; KV heads over
+    ``model`` when divisible, else the sequence dim; batch-1 long-context
+    cells spread the sequence over every axis (``kv_seq``)."""
+    if batch == 1:
+        return (None, None, "kv_seq", None, None)
+    if cfg.n_kv % max(policy.model_size, 1) == 0 and policy.model_size > 1:
+        return (None, "batch", None, "model", None)
+    return (None, "batch", "seq", None, None)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               policy: ShardingPolicy = NO_SHARDING,
+               dtype=jnp.float32):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    logical = _cache_logical(cfg, batch, policy)
+    k = jnp.zeros(shape, dtype)
+    v = jnp.zeros(shape, dtype)
+    return policy.constrain(k, logical), policy.constrain(v, logical)
+
+
+def cache_abstract(cfg: TransformerConfig, batch: int, max_len: int,
+                   policy: ShardingPolicy = NO_SHARDING, dtype=jnp.float32):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    logical = _cache_logical(cfg, batch, policy)
+    sh = policy.named(logical) if policy.mesh is not None else None
+    return (jax.ShapeDtypeStruct(shape, dtype, sharding=sh),) * 2
+
+
+def _scan_layers_cached(cfg, params, x, positions, cache, cache_pos, policy):
+    windows = jnp.asarray(cfg.layer_windows())
+    ck, cv = cache
+
+    def body(x, layer):
+        lp, w, k_l, v_l = layer
+        out, new_cache = _block(cfg, lp, x, positions, w, policy,
+                                kv_cache=(k_l, v_l), cache_pos=cache_pos)
+        return out, new_cache
+
+    if cfg.unroll:
+        ks, vs = [], []
+        for l in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[l], params["layers"])
+            x, (k_l, v_l) = body(x, (lp, windows[l], ck[l], cv[l]))
+            ks.append(k_l)
+            vs.append(v_l)
+        return x, (jnp.stack(ks), jnp.stack(vs))
+    x, new_kv = jax.lax.scan(body, x, (params["layers"], windows, ck, cv))
+    return x, new_kv
+
+
+def prefill(cfg: TransformerConfig, params: Params, tokens: jax.Array,
+            cache, policy: ShardingPolicy = NO_SHARDING):
+    """Fill the cache with a prompt; returns (logits_last, cache)."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params, tokens, scale=cfg.scale_embeddings)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x, (ck, cv) = _scan_layers_cached(cfg, params, x, positions, cache,
+                                      jnp.int32(0), policy)
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = L.lm_logits(params, x[:, -1:], cap=cfg.final_softcap,
+                         tied=cfg.tie_embeddings)
+    return logits, (ck, cv)
+
+
+def decode_step(cfg: TransformerConfig, params: Params, token: jax.Array,
+                pos: jax.Array, cache,
+                policy: ShardingPolicy = NO_SHARDING):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (cache fill).
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    B = token.shape[0]
+    x = L.embed_tokens(params, token, scale=cfg.scale_embeddings)
+    positions = jnp.broadcast_to(pos[None], (B, 1)).astype(jnp.int32)
+    x, new_cache = _scan_layers_cached(cfg, params, x, positions, cache, pos,
+                                       policy)
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = L.lm_logits(params, x, cap=cfg.final_softcap,
+                         tied=cfg.tie_embeddings)
+    return logits, new_cache

@@ -1,0 +1,91 @@
+"""Gradient compression with error feedback, applied before the DP
+all-reduce (distributed-optimization trick for 1000+ node scale).
+
+Two compressors:
+
+* ``topk``  — per-leaf magnitude top-k sparsification (k = ratio·size);
+  the residual (what was dropped) is carried in an error-feedback buffer
+  and added back next step [1-bit SGD / Deep Gradient Compression lineage].
+* ``int8``  — per-leaf symmetric int8 quantization with fp32 scale;
+  error feedback likewise.
+
+Both are pure functions over pytrees: ``compress`` returns the compressed
+representation + new error buffer; ``decompress`` reconstructs. In the
+training loop the compressed payload is what crosses the DP axis (psum of
+the dense-ified payload — on real hardware the wire format is the sparse
+(values, indices) pair; byte accounting in the cost model uses that).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    kind: str = "topk"  # topk | int8 | none
+    topk_ratio: float = 0.01
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_leaf(g, err, ratio):
+    g = g.astype(jnp.float32) + err
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    kept = jnp.zeros_like(flat).at[idx].set(vals).reshape(g.shape)
+    return kept, g - kept, (vals, idx)
+
+
+def _int8_leaf(g, err):
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq, (q, scale)
+
+
+def compress(cfg: CompressConfig, grads, err):
+    """Returns (dense_payload, new_err, wire_bytes_estimate).
+
+    ``dense_payload`` is the decompressed-equivalent gradient (what the
+    optimizer consumes after the all-reduce); ``wire_bytes`` counts the
+    actual compressed representation for the cost model.
+    """
+    if cfg.kind == "none":
+        bytes_ = sum(l.size * 4 for l in jax.tree.leaves(grads))
+        return grads, err, bytes_
+
+    outs = []
+    wire = 0
+    for (g, e) in zip(jax.tree.leaves(grads), jax.tree.leaves(err)):
+        if cfg.kind == "topk":
+            kept, new_e, (vals, idx) = _topk_leaf(g, e, cfg.topk_ratio)
+            wire += vals.size * 4 + idx.size * 4
+        elif cfg.kind == "int8":
+            kept, new_e, (q, _) = _int8_leaf(g, e)
+            wire += q.size + 4
+        else:
+            raise ValueError(cfg.kind)
+        outs.append((kept, new_e))
+    treedef = jax.tree.structure(grads)
+    dense = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_err = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return dense, new_err, wire
+
+
+def compression_ratio(cfg: CompressConfig, params) -> float:
+    raw = sum(l.size * 4 for l in jax.tree.leaves(params))
+    if cfg.kind == "topk":
+        return cfg.topk_ratio * 2  # values + indices
+    if cfg.kind == "int8":
+        return 0.25
+    return 1.0

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+PEAK_FLOPS_F32 = 98.5e12  # MXU f32 ~ half of bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW_PER_LINK = 50e9  # bytes/s per link
+HBM_BYTES = 16 * 2 ** 30  # 16 GiB
+VMEM_BYTES = 128 * 2 ** 20  # ~128 MiB vector memory (v5e)

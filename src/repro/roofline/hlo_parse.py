@@ -1,0 +1,177 @@
+"""Parse compiled (post-SPMD-partitioning) HLO text for collective traffic.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but not collective bytes;
+per the roofline methodology we parse ``compiled.as_text()`` and sum the
+operand sizes of every ``all-gather`` / ``all-reduce`` / ``reduce-scatter``
+/ ``all-to-all`` / ``collective-permute`` instruction. Shapes in a
+partitioned module are per-device local shapes, so the sums are per-device
+traffic.
+
+Two metrics are reported:
+
+* ``operand_bytes`` — Σ operand sizes (the required roofline metric);
+* ``wire_bytes``    — estimated bytes on the wire per device using ring
+  algorithms: all-gather = out−in, all-reduce = 2·in·(q−1)/q ≈ 2·in,
+  reduce-scatter = in−out, all-to-all = in, collective-permute = in.
+
+Collectives inside ``while`` bodies (e.g. FSDP gathers inside a
+scan-over-layers) appear once in the text but execute once per iteration;
+``CollectiveStats.scaled(loop_trip_counts)`` multiplies per-computation
+totals by caller-supplied trip counts (the configs know their layer
+counts). This is a structural limitation of text-level analysis, recorded
+in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"((?:all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?)\(([^)]*)\)", re.M)
+_ANY_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s*([\w\-]+)",
+    re.M)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->", re.M)
+_WHILE_RE = re.compile(r"while\([^)]*\).*?body=%?([\w.\-]+)")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    computation: str
+    out_bytes: int
+    in_bytes: int
+
+    @property
+    def operand_bytes(self) -> int:
+        return self.in_bytes
+
+    @property
+    def wire_bytes(self) -> int:
+        k = self.kind
+        if k == "all-gather":
+            return max(self.out_bytes - self.in_bytes, 0)
+        if k == "all-reduce":
+            return 2 * self.in_bytes
+        if k == "reduce-scatter":
+            return max(self.in_bytes - self.out_bytes, 0)
+        return self.in_bytes  # all-to-all, collective-permute
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: List[CollectiveOp]
+    while_bodies: List[str]
+
+    def totals(self, loop_trip_counts: Optional[Dict[str, int]] = None
+               ) -> Dict[str, float]:
+        """Aggregate bytes; ops inside while bodies scale by trip count.
+
+        loop_trip_counts: map from computation-name substring to trip
+        count. Any while-body computation not matched scales by 1.
+        """
+        loop_trip_counts = loop_trip_counts or {}
+        operand = wire = 0.0
+        msgs = 0.0
+        per_kind: Dict[str, float] = defaultdict(float)
+        for op in self.ops:
+            mult = 1.0
+            for body in self.while_bodies:
+                if op.computation == body or op.computation.startswith(body):
+                    mult = float(self._match_trip(body, loop_trip_counts))
+                    break
+            operand += mult * op.operand_bytes
+            wire += mult * op.wire_bytes
+            msgs += mult
+            per_kind[op.kind] += mult * op.wire_bytes
+        return {"operand_bytes": operand, "wire_bytes": wire,
+                "messages": msgs, **{f"wire_{k}": v for k, v in per_kind.items()}}
+
+    @staticmethod
+    def _match_trip(body: str, trips: Dict[str, int]) -> int:
+        for key, v in trips.items():
+            if key in body:
+                return v
+        return trips.get("*", 1)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Extract collective ops (with computation attribution) from HLO text."""
+    # Build a symbol table of instruction result types per computation.
+    comp = "entry"
+    types: Dict[Tuple[str, str], str] = {}
+    comp_of_line: List[Tuple[str, str, str, str]] = []  # (comp, name, type, opcode)
+    for line in hlo_text.splitlines():
+        mcomp = _COMP_RE.match(line)
+        if mcomp and ("{" in line or line.rstrip().endswith("->")
+                      or "->" in line):
+            comp = mcomp.group(1)
+            continue
+        mi = _ANY_INSTR_RE.match(line)
+        if mi:
+            name, tstr, opcode = mi.group(1), mi.group(2), mi.group(3)
+            types[(comp, name)] = tstr
+            comp_of_line.append((comp, name, tstr, line))
+
+    ops: List[CollectiveOp] = []
+    while_bodies: List[str] = []
+    for comp_name, name, tstr, line in comp_of_line:
+        mw = _WHILE_RE.search(line)
+        if mw:
+            while_bodies.append(mw.group(1))
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, out_type, kind, operands = m.group(1), m.group(2), m.group(3), m.group(4)
+        base_kind = kind.replace("-start", "").replace("-done", "")
+        if kind.endswith("-done"):
+            continue  # counted at -start
+        out_b = shape_bytes(out_type)
+        in_b = 0
+        for op_ref in operands.split(","):
+            op_ref = op_ref.strip().lstrip("%")
+            # operand may carry an inline type (older dumps) or be a name
+            inline = shape_bytes(op_ref)
+            if inline:
+                in_b += inline
+            else:
+                op_name = op_ref.split(" ")[-1].lstrip("%")
+                in_b += shape_bytes(types.get((comp_name, op_name), ""))
+        if in_b == 0 and base_kind == "all-gather":
+            in_b = 0  # unknown operand; wire estimate falls back to out
+        ops.append(CollectiveOp(base_kind, comp_name, out_b, in_b))
+    return CollectiveStats(ops, while_bodies)
+
+
+def collective_bytes(hlo_text: str,
+                     loop_trip_counts: Optional[Dict[str, int]] = None
+                     ) -> Dict[str, float]:
+    return parse_collectives(hlo_text).totals(loop_trip_counts)

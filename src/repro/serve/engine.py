@@ -1,0 +1,162 @@
+"""Continuous-batching serving engine (slot-based, vLLM-style scheduling
+at the batch level — the serving substrate for the decode cells).
+
+A fixed pool of ``n_slots`` sequences decodes in lockstep (one jitted
+``decode_step`` per tick, static shapes). Requests join free slots via a
+prefill (right-padded into the shared cache at the slot row); finished
+sequences (EOS or max-tokens) free their slot immediately — no
+head-of-line blocking on long generations. Per-slot position masking keeps
+attention correct for heterogeneous prompt lengths.
+
+This is single-host; on a pod the same engine drives the sharded
+``decode_step`` (batch dim = slots over DP) with identical scheduling
+logic — scheduling is host-side and mesh-oblivious.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (len,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    pos: int = 0  # next cache position
+    remaining: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: T.TransformerConfig, params, *, n_slots: int,
+                 max_len: int, eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = T.init_cache(cfg, n_slots, max_len)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self._tokens = np.zeros((n_slots, 1), np.int32)
+
+        # one-slot prefill: (params, tokens(1, L), cache, slot) -> cache, tok
+        def _prefill(params, tokens, cache, slot):
+            ck, cv = cache
+            one = (jax.lax.dynamic_slice_in_dim(ck, slot, 1, axis=1),
+                   jax.lax.dynamic_slice_in_dim(cv, slot, 1, axis=1))
+            logits, (nk, nv) = T.prefill(cfg, params, tokens, one)
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, nk, slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, nv, slot, axis=1)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            return (ck, cv), tok
+
+        self._prefill = jax.jit(_prefill, static_argnames=())
+
+        # Slots at different positions decode in *position groups* (one
+        # T.decode_step per distinct position). A group's step must write
+        # k/v ONLY for its own rows — an unmasked write at pos would
+        # corrupt the prompt history of slots already past pos — so the
+        # cache update is row-masked against the pre-step cache.
+        def _decode_masked(params, tok, pos, cache, row_mask):
+            logits, (nk, nv) = T.decode_step(cfg, params, tok, pos, cache)
+            ok, ov = cache
+            mk = row_mask[None, :, None, None, None]
+
+            def merge(new, old):
+                new_at = jax.lax.dynamic_slice_in_dim(new, pos, 1, axis=2)
+                old_at = jax.lax.dynamic_slice_in_dim(old, pos, 1, axis=2)
+                keep = jnp.where(mk, new_at, old_at)
+                return jax.lax.dynamic_update_slice_in_dim(new, keep, pos,
+                                                           axis=2)
+
+            return logits, (merge(nk, ok), merge(nv, ov))
+
+        self._decode = jax.jit(_decode_masked)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.rid < 0]
+
+    def _admit(self) -> None:
+        for i in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            L = int(req.prompt.shape[0])
+            cache, tok = self._prefill(self.params,
+                                       jnp.asarray(req.prompt[None, :]),
+                                       self.cache, i)
+            self.cache = cache
+            self.slots[i] = _Slot(rid=req.rid, pos=L, remaining=req.max_new)
+            self._tokens[i, 0] = int(tok[0])
+            req.out.append(int(tok[0]))
+            self.active[req.rid] = req
+            self._retire_if_done(i)
+
+    def _retire_if_done(self, i: int) -> None:
+        s = self.slots[i]
+        if s.rid < 0:
+            return
+        req = self.active[s.rid]
+        s.remaining -= 1
+        hit_eos = self.eos_id is not None and req.out and \
+            req.out[-1] == self.eos_id
+        if s.remaining <= 0 or hit_eos or s.pos >= self.max_len:
+            req.done = True
+            self.finished.append(req)
+            del self.active[s.rid]
+            self.slots[i] = _Slot()
+
+    def step(self) -> int:
+        """One engine tick: admit new requests, decode one token for every
+        position-group of active slots. Returns #tokens produced."""
+        self._admit()
+        groups: Dict[int, List[int]] = {}
+        for i, s in enumerate(self.slots):
+            if s.rid >= 0:
+                groups.setdefault(s.pos, []).append(i)
+        produced = 0
+        for pos, idxs in sorted(groups.items()):
+            toks = jnp.asarray(self._tokens)
+            row_mask = np.zeros(self.n_slots, bool)
+            row_mask[idxs] = True
+            logits, self.cache = self._decode(self.params, toks,
+                                              jnp.int32(pos), self.cache,
+                                              jnp.asarray(row_mask))
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+            for i in idxs:
+                tok = int(nxt[i])
+                self._tokens[i, 0] = tok
+                req = self.active[self.slots[i].rid]
+                req.out.append(tok)
+                self.slots[i].pos += 1
+                produced += 1
+                self._retire_if_done(i)
+        return produced
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or self.active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

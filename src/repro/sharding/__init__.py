@@ -1,0 +1,4 @@
+from repro.sharding.rules import (ShardingPolicy, make_policy, param_sharding,
+                                  NO_SHARDING)
+
+__all__ = ["ShardingPolicy", "make_policy", "param_sharding", "NO_SHARDING"]

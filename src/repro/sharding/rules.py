@@ -1,0 +1,118 @@
+"""Logical-axis → PartitionSpec rules (MaxText-style, condensed).
+
+Every parameter and activation is annotated with a tuple of *logical* axis
+names; a ``ShardingPolicy`` maps logical names to mesh axes:
+
+  batch    → (pod, data)    — DP
+  fsdp     → (pod, data)    — weight shard (ZeRO-3); all-gathered per layer
+  model    → model          — TP (heads / ffn / vocab / experts)
+  seq      → model           — sequence parallelism for long-context cells
+  (None)   → replicated
+
+The policy is a plain dict so perf hillclimbing can swap assignments
+without touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: usable as a
+class ShardingPolicy:                          # static arg to jax.checkpoint
+    mesh: Optional[Mesh]
+    rules: Dict[str, object]  # logical name -> mesh axis (str|tuple|None)
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape.get("model", 1))
+
+    def spec(self, logical: Logical) -> P:
+        return P(*(self.rules.get(ax) if ax else None for ax in logical))
+
+    def _axes_size(self, assignment) -> int:
+        if assignment is None:
+            return 1
+        axes = (assignment,) if isinstance(assignment, str) else assignment
+        size = 1
+        for a in axes:
+            size *= int(self.mesh.shape.get(a, 1))
+        return size
+
+    def spec_for_shape(self, logical: Logical, shape) -> P:
+        """Like ``spec`` but (a) drops assignments a dim cannot host (e.g.
+        a batch-1 decode cell over a 16-way data axis) and (b) removes mesh
+        axes already claimed by an earlier dim (e.g. ``expert`` over
+        (pod, model) alongside ``batch`` over (pod, data) keeps only
+        ``data`` for the batch dim)."""
+        parts = []
+        used = set()
+        for ax, dim in zip(logical, shape):
+            a = self.rules.get(ax) if ax else None
+            if a is not None:
+                axes = (a,) if isinstance(a, str) else tuple(a)
+                axes = tuple(x for x in axes if x not in used)
+                a = None if not axes else (axes[0] if len(axes) == 1
+                                           else axes)
+            if a is not None and dim % max(self._axes_size(a), 1) != 0:
+                a = None
+            if a is not None:
+                used.update((a,) if isinstance(a, str) else a)
+            parts.append(a)
+        return P(*parts)
+
+    def constrain(self, x, logical: Logical):
+        """with_sharding_constraint if a mesh is active; no-op otherwise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec_for_shape(logical,
+                                                            x.shape)))
+
+    def named(self, logical: Logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical))
+
+    def named_for_shape(self, logical: Logical, shape
+                        ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for_shape(logical, shape))
+
+
+NO_SHARDING = ShardingPolicy(None, {})
+
+
+def make_policy(mesh: Optional[Mesh], *, seq_shard: bool = False,
+                fsdp: bool = True, overrides: Optional[Dict] = None
+                ) -> ShardingPolicy:
+    if mesh is None:
+        return NO_SHARDING
+    has_pod = "pod" in mesh.axis_names
+    dp = ("pod", "data") if has_pod else ("data",)
+    rules = {
+        "batch": dp,
+        "fsdp": dp if fsdp else None,
+        "model": "model",
+        "expert": "model",
+        "seq": "model" if seq_shard else None,
+        "kv_seq": ("data", "model"),  # long-context KV cache sharding
+        "vocab": "model",
+    }
+    if overrides:
+        rules.update(overrides)
+    return ShardingPolicy(mesh, rules)
+
+
+def param_sharding(policy: ShardingPolicy, logical_tree):
+    """Map a pytree of logical tuples to NamedShardings (or None)."""
+    return jax.tree.map(policy.named, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

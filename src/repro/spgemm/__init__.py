@@ -1,0 +1,16 @@
+"""Communication-efficient distributed SpGEMM (the paper's §5 contribution)."""
+from repro.spgemm.autotune import PlanCost, autotune, enumerate_plans, plan_cost
+from repro.spgemm.cost_model import (CostParams, DEFAULT, ProblemSizes,
+                                     best_replication, w_1d, w_2d, w_3d,
+                                     w_mfbc, w_mm)
+from repro.spgemm.dist import Plan, plan_specs, replicate_adjacency, spgemm
+from repro.spgemm.semiring import (GeneralizedSemiring, arithmetic, by_name,
+                                   centpath, multpath)
+
+__all__ = [
+    "PlanCost", "autotune", "enumerate_plans", "plan_cost",
+    "CostParams", "DEFAULT", "ProblemSizes", "best_replication",
+    "w_1d", "w_2d", "w_3d", "w_mfbc", "w_mm",
+    "Plan", "plan_specs", "replicate_adjacency", "spgemm",
+    "GeneralizedSemiring", "arithmetic", "by_name", "centpath", "multpath",
+]

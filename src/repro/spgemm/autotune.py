@@ -1,0 +1,201 @@
+"""Decomposition autotuner — the CTF "automatic mapping search" (§6.2).
+
+Given operand byte counts and a mesh, enumerate every implemented variant ×
+mesh-axis role assignment, evaluate the §5.2 α–β cost (plus a resharding
+penalty when the plan's input layout differs from the caller's persistent
+layout), reject plans that exceed the per-device memory budget, and return
+the cheapest plan.
+
+This is an ahead-of-time search (XLA SPMD programs are static), but it uses
+exactly the cost expressions CTF evaluates at runtime; `EXPERIMENTS.md
+§SpGEMM` validates the predicted bytes against HLO-measured collective
+bytes for every variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.spgemm.cost_model import CostParams, DEFAULT, ProblemSizes, _log2
+from repro.spgemm.dist import Plan
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCost:
+    plan: Plan
+    seconds: float
+    bytes_moved: float
+    messages: float
+    mem_per_device: float
+
+    def __repr__(self):
+        return (f"PlanCost({self.plan.variant}@{self.plan.axes}, "
+                f"t={self.seconds:.3e}s, B={self.bytes_moved:.3e}, "
+                f"M={self.mem_per_device:.3e})")
+
+
+def _axis_perms(axes: Dict[str, int], k: int) -> Iterable[Tuple[str, ...]]:
+    names = list(axes)
+    return itertools.permutations(names, k)
+
+
+def plan_cost(plan: Plan, sizes: ProblemSizes, axes: Dict[str, int],
+              params: CostParams = DEFAULT) -> PlanCost:
+    """Bytes/messages moved by our implementation of ``plan``.
+
+    Byte counts mirror dist.py's collectives exactly (all-gather along an
+    axis of size q multiplies a local shard by (q-1); monoid reductions
+    cost 2x a psum — see semiring.py).
+    """
+    v = plan.variant
+    nA, nB, nC = sizes.nnz_a, sizes.nnz_b, sizes.nnz_c
+    total = math.prod(axes.values())
+
+    def ag(nnz_global: float, shard_frac: float, q: int) -> Tuple[float, float]:
+        """all_gather: local shard is nnz*shard_frac; returns (bytes, msgs)."""
+        if q <= 1:
+            return 0.0, 0.0
+        return nnz_global * shard_frac * (q - 1), _log2(q)
+
+    def rs(nnz_out_local: float, q: int) -> Tuple[float, float]:
+        if q <= 1:
+            return 0.0, 0.0
+        return nnz_out_local * (q - 1) / q, _log2(q)
+
+    b = m = 0.0
+    sz = {a: axes[a] for a in plan.axes}
+    if v == "1d_a":
+        q = sz[plan.axes[0]]
+        bb, mm = ag(nA, 1.0 / q, q)
+        b, m = bb, mm
+    elif v == "1d_b":
+        q = sz[plan.axes[0]]
+        b, m = ag(nB, 1.0 / q, q)
+    elif v == "1d_c":
+        q = sz[plan.axes[0]]
+        b, m = rs(nC, q)
+        b *= 2  # reduce to replicated (allreduce) ≈ 2x reduce-scatter
+    elif v.startswith("2d") or v.startswith("3d"):
+        if v.startswith("3d"):
+            _, x, yz = v.split("_")
+            p1, r, c = plan.axes
+            q1, qr, qc = axes[p1], axes[r], axes[c]
+            if x == "c":
+                bb, mm = rs(nC / (qr * qc), q1)
+                b += 2 * bb
+                m += mm
+            # l/r replication is amortized (replicate_adjacency) — charge 0
+            inner_axes = (r, c)
+        else:
+            yz = v.split("_")[1]
+            inner_axes = plan.axes
+            qr, qc = axes[inner_axes[0]], axes[inner_axes[1]]
+            q1 = 1
+        qr, qc = axes[inner_axes[0]], axes[inner_axes[1]]
+        frac = 1.0 / (qr * qc * q1)
+        if yz == "ab":
+            bb, mm = ag(nA, frac, qc)
+            b += bb
+            m += mm
+            bb, mm = ag(nB, frac, qr)
+            b += bb
+            m += mm
+        elif yz == "ac":
+            bb, mm = ag(nA, frac, qc)
+            b += bb
+            m += mm
+            bb, mm = rs(nC / (qc * q1), qr)
+            b += bb
+            m += mm
+        elif yz == "bc":
+            bb, mm = ag(nB, frac, qr)
+            b += bb
+            m += mm
+            bb, mm = rs(nC / (qr * q1), qc)
+            b += bb
+            m += mm
+    else:
+        raise ValueError(v)
+
+    # per-device memory after gathers (peak working set)
+    mem = (nA + nB + nC) / total
+    if v == "1d_a":
+        mem += nA
+    if v == "1d_b":
+        mem += nB
+    if v == "1d_c":
+        mem += nC
+    if v.startswith(("2d", "3d")):
+        qr, qc = axes[inner_axes[0]], axes[inner_axes[1]]
+        if yz == "ab":
+            mem += nA / (qr * q1) + nB / (qc * q1)
+        elif yz == "ac":
+            mem += nA / (qr * q1) + nC / (qc * q1)
+        elif yz == "bc":
+            mem += nB / (qc * q1) + nC / (qr * q1)
+        if v.startswith("3d") and v.split("_")[1] in ("l", "r"):
+            which = nA if v.split("_")[1] == "l" else nB
+            mem += which / (qr * qc)  # replicated over p1
+
+    return PlanCost(plan, params.cost(m, b), b, m, mem)
+
+
+def enumerate_plans(axes: Dict[str, int]) -> List[Plan]:
+    plans: List[Plan] = []
+    for (q,) in _axis_perms(axes, 1):
+        for var in ("1d_a", "1d_b", "1d_c"):
+            plans.append(Plan(var, (q,)))
+    if len(axes) >= 2:
+        for pair in _axis_perms(axes, 2):
+            for var in ("2d_ab", "2d_ac", "2d_bc"):
+                plans.append(Plan(var, pair))
+    if len(axes) >= 3:
+        for trip in _axis_perms(axes, 3):
+            for x in ("l", "r", "c"):
+                for yz in ("ab", "ac", "bc"):
+                    plans.append(Plan(f"3d_{x}_{yz}", trip))
+    return plans
+
+
+def autotune(sizes: ProblemSizes, axes: Dict[str, int],
+             mem_limit: float = float("inf"),
+             params: CostParams = DEFAULT,
+             allow: Optional[Sequence[str]] = None) -> PlanCost:
+    """Pick the cheapest plan for the given operand sizes and mesh axes."""
+    best: Optional[PlanCost] = None
+    for plan in enumerate_plans(axes):
+        if allow is not None and plan.variant not in allow:
+            continue
+        pc = plan_cost(plan, sizes, axes, params)
+        if pc.mem_per_device > mem_limit:
+            continue
+        if best is None or pc.seconds < best.seconds:
+            best = pc
+    assert best is not None, "no feasible plan (memory limit too tight)"
+    return best
+
+
+def choose_bc_regime(n: int, m_edges: int, nb: int, fill: float,
+                     *, vpu_ops: float = 3.9e12,
+                     hbm_bw: float = 819e9, p: int = 256) -> Dict[str, float]:
+    """Dense-vs-COO relax regime choice (the paper's §7 observation that
+    MFBC shines on dense frontiers, made quantitative for TPU).
+
+    dense: work = 4·nb·n²/p VPU ops, traffic ≈ tile-model (compute-bound).
+    coo:   work = 4·nb·m·fill/p ops but gather/segment traffic
+           ≈ 24 bytes per (frontier-entry × edge) touch, memory-bound.
+
+    Returns per-iteration second estimates and the winner; the driver
+    switches per iteration as the frontier fills (fill = fraction of
+    active frontier entries).
+    """
+    dense_s = 4.0 * nb * n * n / (p * vpu_ops)
+    coo_touch = nb * fill * m_edges / p
+    coo_s = max(4.0 * coo_touch / vpu_ops, 24.0 * coo_touch / hbm_bw)
+    return {"dense_s": dense_s, "coo_s": coo_s,
+            "regime": "dense" if dense_s <= coo_s else "coo",
+            "crossover_fill": min(1.0, (n * n) / max(m_edges, 1)
+                                  * (4.0 / vpu_ops)
+                                  / max(4.0 / vpu_ops, 24.0 / hbm_bw))}

@@ -1,0 +1,201 @@
+"""α–β communication cost model for distributed SpGEMM (paper §5.2).
+
+Multiplying ``A (m×k) · B (k×n) → C (m×n)``, all potentially sparse, on a
+processor grid. Costs are in seconds given ``CostParams``; sizes are in
+*bytes* (the paper counts words — a constant factor absorbed into β).
+
+Formulas implemented verbatim from the paper:
+
+* 1D variant X ∈ {A, B, C}:       W_X  = α·log p + β·nnz(X)
+* 2D variant YZ ∈ {AB, AC, BC}:   W_YZ = α·max(p_r, p_c)·log p
+                                         + β·(nnz(Y)/p_r + nnz(Z)/p_c)
+* 3D nesting (X over p₁, YZ over p₂×p₃) — the paper's composite expression,
+  including the X=Y / X=Z / X∉{Y,Z} cases.
+* ``w_mm`` — the W_MM envelope: min over factorizations p₁p₂p₃ = p of
+  α·max(pᵢ)·log p + β·(nnzA/(p₁p₂)·δ(p₃) + nnzB/(p₂p₃)·δ(p₁)
+  + nnzC/(p₁p₃)·δ(p₂)).
+* ``w_mfbc`` — the Theorem 5.1 BC bound with replication factor c.
+* ``mem_3d`` — the M_X,YZ memory footprint.
+
+The same formulas drive the runtime autotuner (``repro.spgemm.autotune``)
+— the analogue of CTF's model-based mapping search.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Tuple
+
+# --- hardware constants (TPU v5e, per chip) -------------------------------
+V5E_PEAK_BF16_FLOPS = 197e12  # FLOP/s
+V5E_HBM_BW = 819e9  # bytes/s
+V5E_ICI_BW = 50e9  # bytes/s per link
+V5E_ICI_LATENCY = 1e-6  # seconds per message (α)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    alpha: float = V5E_ICI_LATENCY  # s per message
+    beta: float = 1.0 / V5E_ICI_BW  # s per byte
+
+    def cost(self, msgs: float, bytes_: float) -> float:
+        return self.alpha * msgs + self.beta * bytes_
+
+
+DEFAULT = CostParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSizes:
+    """Byte counts of the three operands (and flops for sanity checks)."""
+
+    nnz_a: float
+    nnz_b: float
+    nnz_c: float
+    flops: float = 0.0
+
+    def nnz(self, which: str) -> float:
+        return {"A": self.nnz_a, "B": self.nnz_b, "C": self.nnz_c}[which]
+
+
+def _log2(p: float) -> float:
+    return math.log2(max(p, 2.0))
+
+
+def w_1d(variant: str, sizes: ProblemSizes, p: int,
+         params: CostParams = DEFAULT) -> float:
+    """W_X(X, p) = O(α log p + β nnz(X))."""
+    assert variant in ("A", "B", "C")
+    if p <= 1:
+        return 0.0
+    return params.cost(_log2(p), sizes.nnz(variant))
+
+
+def w_2d(variant: str, sizes: ProblemSizes, pr: int, pc: int,
+         params: CostParams = DEFAULT) -> float:
+    """W_YZ(Y, Z, p_r, p_c)."""
+    assert variant in ("AB", "AC", "BC")
+    y, z = variant[0], variant[1]
+    p = pr * pc
+    if p <= 1:
+        return 0.0
+    bytes_ = sizes.nnz(y) / pr + sizes.nnz(z) / pc
+    return params.cost(max(pr, pc) * _log2(p), bytes_)
+
+
+def w_3d(x: str, yz: str, sizes: ProblemSizes, p1: int, p2: int, p3: int,
+         params: CostParams = DEFAULT) -> float:
+    """Nested 1D(X over p₁) ∘ 2D(YZ over p₂×p₃), paper's simplified form.
+
+    The inner 2D problem sees operand sizes shrunk by the 1D blocking:
+    X is gathered from a p₂×p₃ distribution (bytes nnz(X)/(p₂p₃) per step
+    before replication — the paper's W_X(X[p₂,p₃]) term), and operands not
+    replicated are sliced by p₁.
+    """
+    assert x in ("A", "B", "C") and yz in ("AB", "AC", "BC")
+    y, z = yz[0], yz[1]
+    inner = dataclasses.asdict(sizes)
+    key = {"A": "nnz_a", "B": "nnz_b", "C": "nnz_c"}
+    if x == y:
+        inner[key[z]] = sizes.nnz(z) / p1
+    elif x == z:
+        inner[key[y]] = sizes.nnz(y) / p1
+    else:
+        inner[key[y]] = sizes.nnz(y) / p1
+        inner[key[z]] = sizes.nnz(z) / p1
+    inner_sizes = ProblemSizes(**inner)
+    # 1D replication of X from its (p2, p3) distribution:
+    w_repl = params.cost(_log2(p1) if p1 > 1 else 0.0,
+                         sizes.nnz(x) / (p2 * p3) * max(p1 - 1, 0))
+    return w_repl + w_2d(yz, inner_sizes, p2, p3, params)
+
+
+def mem_3d(x: str, yz: str, sizes: ProblemSizes, p: int, p1: int) -> float:
+    """M_X,YZ = O(nnz(X)·p₁/p + (nnz(Y)+nnz(Z))/p) bytes per processor."""
+    y, z = yz[0], yz[1]
+    return sizes.nnz(x) * p1 / p + (sizes.nnz(y) + sizes.nnz(z)) / p
+
+
+def factorizations(p: int, ways: int = 3) -> List[Tuple[int, ...]]:
+    """All ordered factorizations of p into ``ways`` positive factors."""
+    if ways == 1:
+        return [(p,)]
+    out = []
+    for d in range(1, p + 1):
+        if p % d == 0:
+            for rest in factorizations(p // d, ways - 1):
+                out.append((d,) + rest)
+    return out
+
+
+def w_mm(sizes: ProblemSizes, p: int, params: CostParams = DEFAULT,
+         mem_limit: float = float("inf")) -> Tuple[float, Tuple[int, int, int]]:
+    """The paper's W_MM envelope: best cost over p₁p₂p₃ = p factorizations.
+
+    Returns (cost_seconds, (p1, p2, p3)). δ(x)=0 iff x==1 — an axis of size
+    1 moves nothing for its operand.
+    """
+    best, best_f = float("inf"), (p, 1, 1)
+    for (p1, p2, p3) in factorizations(p):
+        bytes_ = 0.0
+        bytes_ += (sizes.nnz_a / (p1 * p2)) * (0 if p3 == 1 else 1)
+        bytes_ += (sizes.nnz_b / (p2 * p3)) * (0 if p1 == 1 else 1)
+        bytes_ += (sizes.nnz_c / (p1 * p3)) * (0 if p2 == 1 else 1)
+        cost = params.cost(max(p1, p2, p3) * _log2(p), bytes_)
+        # rough memory: replicated fraction of each operand
+        mem = (sizes.nnz_a / (p1 * p2) + sizes.nnz_b / (p2 * p3)
+               + sizes.nnz_c / (p1 * p3))
+        if mem > mem_limit:
+            continue
+        if cost < best:
+            best, best_f = cost, (p1, p2, p3)
+    return best, best_f
+
+
+V5E_VPU_OPS = 3.9e12  # elementwise min-plus ops/s (VPU, not MXU)
+
+
+def w_mfbc(n: int, m_edges: int, p: int, c: int, d: int, word: int = 8,
+           params: CostParams = DEFAULT, flop_rate: float = V5E_VPU_OPS
+           ) -> Dict[str, float]:
+    """Theorem 5.1 cost terms for one full BC computation.
+
+    n vertices, m arcs, p processors, replication factor c, diameter d.
+    word = bytes per matrix element (multpath = 8: w + m as f32 pairs).
+
+    β term per batch: Σ_i (nnz(F_i)+nnz(G_i))/√(pc) ≤ 4cm/√(pc) words
+    (unweighted frontier-uniqueness bound), plus the amortized adjacency
+    replication cm/p. Total over n²/(cm) batches = 4n²/√(cp) + cm/p —
+    the Theorem 5.1 bound. ``seconds`` adds a sparse-work compute term
+    (8·n·m relaxation ops over p VPUs) so TEPS projections are grounded.
+    """
+    c = max(1, min(c, p))
+    n_batches = max(1.0, n * n / (c * m_edges))
+    msgs = d * n_batches * math.sqrt(p / c) * _log2(p)
+    bytes_ = word * (c * m_edges / p  # adjacency replication (amortized)
+                     + n_batches * (4.0 * c * m_edges) / math.sqrt(p * c))
+    comm = params.cost(msgs, bytes_)
+    compute = 8.0 * n * m_edges / (p * flop_rate)
+    return {
+        "alpha_msgs": msgs,
+        "beta_bytes": bytes_,
+        "seconds": max(comm, compute),
+        "comm_seconds": comm,
+        "compute_seconds": compute,
+        "n_b": c * m_edges / n,
+        "n_batches": n_batches,
+        "memory_per_p": word * c * m_edges / p,
+    }
+
+
+def best_replication(n: int, m_edges: int, p: int, mem_bytes: float,
+                     d: int = 10, word: int = 8,
+                     params: CostParams = DEFAULT) -> int:
+    """Paper: c* = p^{1/3} n²/m, clamped by memory M = Ω(c·m/p)."""
+    c_star = p ** (1.0 / 3.0) * n * n / m_edges
+    c_mem = mem_bytes * p / (word * m_edges)
+    c = int(max(1, min(c_star, c_mem, p)))
+    # refine within a factor-2 neighbourhood by direct evaluation
+    cands = sorted({max(1, c // 2), c, min(p, 2 * c), 1})
+    return min(cands, key=lambda cc: w_mfbc(n, m_edges, p, cc, d, word,
+                                            params)["seconds"])

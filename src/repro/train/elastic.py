@@ -1,0 +1,32 @@
+"""Elastic scaling: reshard a running job onto a different mesh.
+
+At 1000+ node scale, node loss means continuing on p' < p nodes (and
+re-expanding later). Because checkpoints are stored unsharded-logical
+(``checkpoint.py``) and every sharding is derived from the logical rules,
+elasticity is: rebuild policy for the new mesh → rebuild abstract state →
+``restore(..., like=new_abstract)``. For MFBC specifically, the batch size
+``n_b = c·m/n`` re-derives from the new replication factor (paper §5.3.4:
+strong scaling holds from p₀ to p₀^{3/2}·n²/m).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.train import checkpoint as ckpt_lib
+
+
+def reshard_checkpoint(ckpt_dir: str, new_like, step: Optional[int] = None):
+    """Restore the latest checkpoint onto a new mesh's shardings."""
+    return ckpt_lib.restore(ckpt_dir, step=step, like=new_like)
+
+
+def bc_elastic_nb(n: int, m_edges: int, p: int, mem_bytes: float,
+                  word: int = 8) -> int:
+    """Re-derive the MFBC batch size for a new processor count (paper:
+    n_b = c·m/n with c clamped by memory)."""
+    from repro.spgemm.cost_model import best_replication
+
+    c = best_replication(n, m_edges, p, mem_bytes, word=word)
+    return max(1, int(c * m_edges / max(n, 1)))

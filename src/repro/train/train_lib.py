@@ -1,0 +1,74 @@
+"""Train/serve step builders wiring model + optimizer + compression.
+
+``make_lm_train_step`` returns the production training step: loss + grad,
+optional gradient compression with error feedback (the compressed payload
+is what crosses the DP axis), AdamW update. State is a plain dict pytree —
+checkpoint- and reshard-friendly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.grad_compress import CompressConfig, compress, init_error
+from repro.sharding.rules import NO_SHARDING, ShardingPolicy
+
+
+def make_lm_train_step(cfg: T.TransformerConfig,
+                       opt_cfg: adamw.AdamWConfig,
+                       policy: ShardingPolicy = NO_SHARDING,
+                       compress_cfg: Optional[CompressConfig] = None):
+    """Returns (init_fn(key) -> state, step_fn(state, batch) -> (state, metrics))."""
+
+    def init_fn(key):
+        params = T.init_params(cfg, key)
+        state = {"params": params,
+                 "opt": adamw.init_state(params, opt_cfg.moment_dtype)}
+        if compress_cfg is not None and compress_cfg.kind != "none":
+            state["err"] = init_error(params)
+        return state
+
+    @jax.jit
+    def step_fn(state, batch):
+        def loss_fn(p):
+            return T.loss_fn(cfg, p, batch["tokens"], batch["targets"],
+                             policy)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        metrics = {"loss": loss}
+        if "err" in state:
+            grads, new_err, wire = compress(compress_cfg, grads,
+                                            state["err"])
+            metrics["wire_bytes"] = jnp.asarray(wire)
+        params, opt, opt_metrics = adamw.update(opt_cfg, grads,
+                                                state["opt"],
+                                                state["params"])
+        new_state = {"params": params, "opt": opt}
+        if "err" in state:
+            new_state["err"] = new_err
+        return new_state, {**metrics, **opt_metrics}
+
+    return init_fn, step_fn
+
+
+def make_generic_train_step(loss_fn, init_params_fn,
+                            opt_cfg: adamw.AdamWConfig):
+    """Family-agnostic variant (GNN / recsys smoke training loops)."""
+
+    def init_fn(key):
+        params = init_params_fn(key)
+        return {"params": params, "opt": adamw.init_state(params)}
+
+    @jax.jit
+    def step_fn(state, batch):
+        lv, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        params, opt, m = adamw.update(opt_cfg, grads, state["opt"],
+                                      state["params"])
+        return {"params": params, "opt": opt}, {"loss": lv, **m}
+
+    return init_fn, step_fn

@@ -1,0 +1,123 @@
+"""Multi-device SpGEMM integration check — run as a subprocess with 8 CPU
+devices (spawned by tests/test_spgemm.py; keeps the main pytest session on
+1 device per the dry-run isolation rule)."""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import monoids
+from repro.core.monoids import Centpath, Multpath
+from repro.roofline.hlo_parse import collective_bytes
+from repro.spgemm import (Plan, ProblemSizes, arithmetic, autotune, centpath,
+                          multpath, plan_cost, plan_specs, spgemm)
+
+M, K, N = 32, 48, 64
+rng = np.random.default_rng(0)
+
+
+def check(cond, msg):
+    assert cond, msg
+    print("ok:", msg)
+
+
+def run_arith(mesh, plan):
+    a = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    with mesh:
+        c = spgemm(a, b, mesh, plan, arithmetic)
+    ref = a @ b
+    np.testing.assert_allclose(np.asarray(c), np.asarray(ref), rtol=2e-4,
+                               atol=1e-4)
+    print(f"ok: arith {plan.variant}@{plan.axes}")
+
+
+def run_multpath(mesh, plan):
+    fw = rng.integers(0, 12, (M, K)).astype(np.float32)
+    act = rng.random((M, K)) < 0.6
+    fw = np.where(act, fw, np.inf).astype(np.float32)
+    fm = np.where(act, rng.integers(1, 4, (M, K)), 0).astype(np.float32)
+    adj = rng.integers(1, 9, (K, N)).astype(np.float32)
+    adj = np.where(rng.random((K, N)) < 0.4, adj, np.inf).astype(np.float32)
+    F = Multpath(jnp.asarray(fw), jnp.asarray(fm))
+    B = jnp.asarray(adj)
+    with mesh:
+        c = spgemm(F, B, mesh, plan, multpath)
+    ref = monoids.multpath_relax_dense(F, B)
+    np.testing.assert_array_equal(np.asarray(c.w), np.asarray(ref.w))
+    np.testing.assert_allclose(np.asarray(c.m), np.asarray(ref.m), rtol=1e-6)
+    print(f"ok: multpath {plan.variant}@{plan.axes}")
+
+
+def run_centpath(mesh, plan):
+    fw = rng.integers(0, 12, (M, K)).astype(np.float32)
+    act = rng.random((M, K)) < 0.6
+    fw = np.where(act, fw, -np.inf).astype(np.float32)
+    fp = np.where(act, rng.random((M, K)), 0).astype(np.float32)
+    adj = rng.integers(1, 9, (K, N)).astype(np.float32)
+    adj = np.where(rng.random((K, N)) < 0.4, adj, np.inf).astype(np.float32)
+    F = Centpath(jnp.asarray(fw), jnp.asarray(fp),
+                 jnp.asarray((fp > 0).astype(np.float32)))
+    B = jnp.asarray(adj)
+    with mesh:
+        c = spgemm(F, B, mesh, plan, centpath)
+    ref = monoids.centpath_relax_dense(F, B)
+    np.testing.assert_array_equal(np.asarray(c.w), np.asarray(ref.w))
+    np.testing.assert_allclose(np.asarray(c.p), np.asarray(ref.p), rtol=1e-5)
+    print(f"ok: centpath {plan.variant}@{plan.axes}")
+
+
+def run_hlo_bytes(mesh, plan, axes):
+    """Predicted collective bytes ≈ HLO-measured wire bytes (order 2x)."""
+    a = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    b = jax.ShapeDtypeStruct((K, N), jnp.float32)
+    sa, sb, _ = plan_specs(plan)
+    with mesh:
+        f = jax.jit(lambda x, y: spgemm(x, y, mesh, plan, arithmetic),
+                    in_shardings=(jax.sharding.NamedSharding(mesh, sa),
+                                  jax.sharding.NamedSharding(mesh, sb)))
+        compiled = f.lower(a, b).compile()
+    stats = collective_bytes(compiled.as_text())
+    pred = plan_cost(plan, ProblemSizes(M * K * 4, K * N * 4, M * N * 4), axes)
+    meas = stats["wire_bytes"]
+    # measured is per-device; predicted is per-device too.
+    ratio = meas / max(pred.bytes_moved, 1.0)
+    check(0.2 < ratio < 5.0,
+          f"hlo bytes {plan.variant}: measured={meas:.0f} "
+          f"predicted={pred.bytes_moved:.0f} ratio={ratio:.2f}")
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh1 = jax.make_mesh((8,), ("q",))
+    mesh2 = jax.make_mesh((4, 2), ("r", "c"))
+    mesh3 = jax.make_mesh((2, 2, 2), ("p1", "r", "c"))
+
+    for var in ("1d_a", "1d_b", "1d_c"):
+        run_arith(mesh1, Plan(var, ("q",)))
+        run_multpath(mesh1, Plan(var, ("q",)))
+    for var in ("2d_ab", "2d_ac", "2d_bc"):
+        run_arith(mesh2, Plan(var, ("r", "c")))
+        run_multpath(mesh2, Plan(var, ("r", "c")))
+        run_centpath(mesh2, Plan(var, ("r", "c")))
+    for var in ("3d_l_ab", "3d_r_ac", "3d_r_bc", "3d_c_ab", "3d_c_bc"):
+        run_arith(mesh3, Plan(var, ("p1", "r", "c")))
+        run_multpath(mesh3, Plan(var, ("p1", "r", "c")))
+
+    run_hlo_bytes(mesh2, Plan("2d_ab", ("r", "c")), {"r": 4, "c": 2})
+    run_hlo_bytes(mesh2, Plan("2d_ac", ("r", "c")), {"r": 4, "c": 2})
+    run_hlo_bytes(mesh1, Plan("1d_a", ("q",)), {"q": 8})
+
+    # autotune returns a runnable plan
+    best = autotune(ProblemSizes(M * K * 4, K * N * 4, M * N * 4),
+                    {"r": 4, "c": 2})
+    run_arith(mesh2, best.plan)
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

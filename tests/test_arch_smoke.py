@@ -1,0 +1,82 @@
+"""Per-architecture smoke tests: every assigned (arch x shape) cell
+instantiates a REDUCED config of the same family and runs one real step on
+CPU, asserting finite outputs / correct shapes. The FULL configs are only
+exercised via the dry-run (abstract lowering, no allocation).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+
+CELLS = [(aid, sid) for aid, spec in ARCHS.items() for sid in spec.cells()]
+
+
+@pytest.mark.parametrize("arch_id,shape_id", CELLS,
+                         ids=[f"{a}::{s}" for a, s in CELLS])
+def test_cell_smoke(arch_id, shape_id):
+    spec = get_arch(arch_id)
+    cell = spec.cells()[shape_id]
+    bundle = spec.build(cell, smoke=True)
+    assert bundle.concrete_args is not None
+    args = bundle.concrete_args(jax.random.key(42))
+    out = jax.jit(bundle.fn)(*args)
+    if bundle.check is not None:
+        bundle.check(jax.tree.map(np.asarray, out))
+
+
+def test_registry_covers_assignment():
+    expected = {
+        "gemma2-27b", "command-r-plus-104b", "granite-34b",
+        "moonshot-v1-16b-a3b", "qwen3-moe-235b-a22b",
+        "gcn-cora", "gin-tu", "nequip", "gat-cora", "xdeepfm", "mfbc_paper",
+    }
+    assert expected == set(ARCHS)
+    # 10 assigned archs x 4 shapes + 2 paper cells = 42
+    n_cells = sum(len(s.cells()) for s in ARCHS.values())
+    assert n_cells == 42
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the published hyperparameters (no allocation)."""
+    g = get_arch("gemma2-27b").config()
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv, g.d_ff, g.vocab) == \
+        (46, 4608, 32, 16, 36864, 256000)
+    c = get_arch("command-r-plus-104b").config()
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.vocab) == \
+        (64, 12288, 96, 8, 256000)
+    gr = get_arch("granite-34b").config()
+    assert (gr.n_layers, gr.d_model, gr.n_heads, gr.n_kv) == (88, 6144, 48, 1)
+    m = get_arch("moonshot-v1-16b-a3b").config()
+    assert (m.moe.n_experts, m.moe.top_k, m.vocab) == (64, 6, 163840)
+    q = get_arch("qwen3-moe-235b-a22b").config()
+    assert (q.n_layers, q.moe.n_experts, q.moe.top_k) == (94, 128, 8)
+    # parameter counts in the right ballpark
+    assert 20e9 < g.n_params() < 35e9
+    assert 90e9 < c.n_params() < 120e9
+    assert 25e9 < gr.n_params() < 42e9
+    assert 200e9 < q.n_params() < 260e9
+    assert 15e9 < q.n_active_params() < 30e9
+    x = get_arch("xdeepfm").config()
+    assert x.n_fields == 39 and x.embed_dim == 10
+
+
+def test_chunked_ce_matches_plain():
+    """Perf-iteration 2: chunked CE loss+grads == plain CE."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer as T
+
+    cfg = T.TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                              n_kv=2, d_ff=64, vocab=128, head_dim=8,
+                              final_softcap=30.0)
+    p = T.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, 128)
+    l1 = T.loss_fn(cfg, p, toks, toks)
+    l2 = T.loss_fn(cfg, p, toks, toks, chunks=4)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    g1 = jax.grad(lambda p: T.loss_fn(cfg, p, toks, toks))(p)
+    g2 = jax.grad(lambda p: T.loss_fn(cfg, p, toks, toks, chunks=4))(p)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                                   atol=1e-6)

@@ -1,0 +1,92 @@
+"""Dry-run machinery tests.
+
+``test_dryrun_one_cell_subprocess`` actually builds the 512-device
+production mesh in a subprocess and lowers+compiles one small cell per
+family — validating the full pipeline pytest-side. The full 84-cell sweep
+runs via ``python -m repro.launch.dryrun --all --mesh both`` and its
+results are validated by ``test_dryrun_results_complete`` (skipped if the
+sweep has not been run).
+"""
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("gcn-cora", "molecule"),
+    ("xdeepfm", "serve_p99"),
+])
+def test_dryrun_one_cell_subprocess(arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "multi", "--out",
+         os.path.join(os.path.dirname(__file__), "..", "results",
+                      "dryrun_test")],
+        capture_output=True, text=True, env=env, timeout=900,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
+
+
+def test_dryrun_results_complete():
+    files = glob.glob(os.path.join(RESULTS, "*.json"))
+    if len(files) < 84:
+        pytest.skip(f"full sweep not present ({len(files)}/84 cells)")
+    bad = []
+    for p in files:
+        rec = json.load(open(p))
+        if not rec.get("ok"):
+            bad.append(p)
+            continue
+        mem = (rec["memory"]["argument_bytes"]
+               + rec["memory"]["peak_bytes"]) / 2 ** 30
+        if mem > 16.0:
+            bad.append((os.path.basename(p), f"{mem:.1f} GiB"))
+        if rec["flops_per_device"] <= 0:
+            bad.append((os.path.basename(p), "no flops"))
+    assert not bad, bad
+
+
+def test_roofline_analysis_runs():
+    files = glob.glob(os.path.join(RESULTS, "*.json"))
+    if not files:
+        pytest.skip("no dry-run results yet")
+    from repro.roofline.analysis import analyze_record, load_all
+
+    rows = [analyze_record(r) for r in load_all(RESULTS)]
+    assert all(r["t_step_s"] > 0 for r in rows)
+    assert all(r["dominant"] in ("compute", "memory", "collective")
+               for r in rows)
+
+
+@pytest.mark.slow
+def test_distributed_lm_training_equivalence_subprocess():
+    """FSDP+TP sharded train step == single-device numerics (8 devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = os.path.join(os.path.dirname(__file__), "md_lm_dist_check.py")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL-OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_gnn_2d_partition_equivalence_subprocess():
+    """2D edge-partitioned GCN (hillclimb A) == reference on 8 devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = os.path.join(os.path.dirname(__file__), "md_gnn2d_check.py")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL-OK" in out.stdout

@@ -1,0 +1,164 @@
+"""Checkpointing, restart, elasticity, straggler mitigation, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import LMDataConfig, LMPipeline
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.optim.grad_compress import (CompressConfig, compress,
+                                       compression_ratio, init_error)
+from repro.train import checkpoint as ckpt
+from repro.train.fault import (BackupTaskPolicy, ChaosConfig, Supervisor,
+                               WorkerFailure)
+from repro.train.train_lib import make_lm_train_step
+
+CFG = T.TransformerConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                          n_kv=2, d_ff=64, vocab=128, head_dim=8)
+OPT = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+
+
+def _pipeline():
+    return LMPipeline(LMDataConfig(vocab=128, batch=2, seq=16, seed=7))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    init_fn, _ = make_lm_train_step(CFG, OPT)
+    state = init_fn(jax.random.key(0))
+    ckpt.save(str(tmp_path), 5, state)
+    restored, step = ckpt.restore(str(tmp_path), like=state)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_and_retention(tmp_path):
+    init_fn, _ = make_lm_train_step(CFG, OPT)
+    state = init_fn(jax.random.key(0))
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, state, keep=3)
+    assert sorted(ckpt.all_steps(str(tmp_path))) == [3, 4, 5]
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_restart_is_bit_exact(tmp_path):
+    """Training with injected failures reaches the same state as without."""
+    pipe = _pipeline()
+    init_fn, step_fn = make_lm_train_step(CFG, OPT)
+
+    def run(ckpt_dir, chaos):
+        state = init_fn(jax.random.key(1))
+
+        def do_step(st, step):
+            st, _ = step_fn(st, pipe.batch(step))
+            return st
+
+        sup = Supervisor(ckpt_dir, save_every=3, keep=5)
+        return sup.run(init_state=state, step_fn=do_step, n_steps=10,
+                       chaos=chaos)
+
+    clean = run(str(tmp_path / "a"), None)
+    log = []
+    chaotic_state = None
+    chaos = ChaosConfig(fail_at_steps=(4, 8))
+    chaotic_state = run(str(tmp_path / "b"), chaos)
+    for a, b in zip(jax.tree.leaves(clean["params"]),
+                    jax.tree.leaves(chaotic_state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Checkpoint saved under one sharding restores onto another mesh."""
+    init_fn, _ = make_lm_train_step(CFG, OPT)
+    state = init_fn(jax.random.key(2))
+    ckpt.save(str(tmp_path), 0, state)
+    # target: same tree, explicitly device_put onto the (single) device with
+    # a different layout request — on 1 CPU device this degenerates, so the
+    # real multi-mesh version is covered by the subprocess test below; here
+    # we check the `like=abstract` path (ShapeDtypeStruct targets).
+    abstract = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    restored, _ = ckpt.restore(str(tmp_path), like=abstract)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    sup = Supervisor(str(tmp_path), save_every=100, max_restarts=2)
+
+    def always_fail(st, step):
+        raise WorkerFailure("boom")
+
+    with pytest.raises(WorkerFailure):
+        sup.run(init_state={"x": jnp.zeros(1)}, step_fn=always_fail,
+                n_steps=5)
+
+
+def test_straggler_backup_policy():
+    lat = {0: 0.01, 1: 0.01, 2: 0.01, 3: 0.5}
+    pol = BackupTaskPolicy(n_producers=4, threshold=3.0)
+    for _ in range(5):
+        for p, l in lat.items():
+            pol.observe(p, l)
+    assert pol.stragglers() == [3]
+    calls = {p: 0 for p in lat}
+
+    def mk(p):
+        def fn():
+            calls[p] += 1
+            return p
+        return fn
+
+    out = pol.fetch({p: mk(p) for p in lat})
+    assert out == {0: 0, 1: 1, 2: 2, 3: 3}
+    assert calls[3] == 2  # straggler got a backup task
+    assert calls[0] == 1
+
+
+@pytest.mark.parametrize("kind", ["topk", "int8"])
+def test_grad_compression_error_feedback(kind):
+    """Compression + error feedback preserves the gradient in total."""
+    cfg = CompressConfig(kind=kind, topk_ratio=0.25)
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+    err = init_error(g)
+    # accumulate decompressed payloads; with error feedback the sum of
+    # what was sent converges to the sum of true gradients
+    sent_total = jnp.zeros((64, 64))
+    true_total = jnp.zeros((64, 64))
+    for _ in range(30):
+        dense, err, wire = compress(cfg, g, err)
+        sent_total = sent_total + dense["w"]
+        true_total = true_total + g["w"]
+        assert wire < 64 * 64 * 4 or kind == "topk"
+    resid = jnp.abs(sent_total - true_total).max()
+    scale = jnp.abs(true_total).max()
+    assert float(resid / scale) < 0.1, float(resid / scale)
+    assert compression_ratio(cfg, g) < 1.0
+
+
+def test_pipeline_determinism():
+    p1 = _pipeline()
+    p2 = _pipeline()
+    b1 = p1.batch(17)
+    b2 = p2.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch(17)["tokens"], p1.batch(18)["tokens"])
+
+
+@pytest.mark.slow
+def test_elastic_reshard_across_meshes_subprocess():
+    """Save on a (4,2) mesh, restore onto (2,2,2) — real device resharding."""
+    import subprocess
+    import sys
+
+    script = os.path.join(os.path.dirname(__file__), "md_elastic_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL-OK" in out.stdout

@@ -1,0 +1,44 @@
+"""HLO collective parser unit tests (the roofline's measurement layer)."""
+from repro.roofline.hlo_parse import (collective_bytes, parse_collectives,
+                                      shape_bytes)
+
+HLO = """
+HloModule jit_f
+
+ENTRY %main (p0: f32[64,128]) -> f32[64,128] {
+  %p0 = f32[64,128]{1,0} parameter(0)
+  %ag = f32[64,512]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[64,512]{1,0} all-reduce(%ag), to_apply=%add
+  %rs = f32[64,128]{1,0} reduce-scatter(%ar), dimensions={1}
+  ROOT %out = f32[64,128]{1,0} copy(%rs)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[64,128]{1,0}") == 64 * 128 * 4
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert shape_bytes("pred[8]") == 8
+
+
+def test_parse_and_wire_estimates():
+    stats = parse_collectives(HLO)
+    kinds = sorted(op.kind for op in stats.ops)
+    assert kinds == ["all-gather", "all-reduce", "reduce-scatter"]
+    t = stats.totals()
+    # ag wire = out - in = (512-128)*64*4; ar = 2*in; rs = in - out
+    ag = (512 - 128) * 64 * 4
+    ar = 2 * 64 * 512 * 4
+    rs = (512 - 128) * 64 * 4
+    assert abs(t["wire_bytes"] - (ag + ar + rs)) < 1
+    assert t["messages"] == 3
+
+
+def test_trip_count_scaling():
+    hlo = HLO.replace("ENTRY %main", "%while_body_5 (p: f32[4]) -> f32[4] {\n"
+                      " %x = f32[4]{0} parameter(0)\n}\nENTRY %main")
+    # ops are in ENTRY here, so scaling by '*' should not change anything
+    base = collective_bytes(hlo)
+    scaled = collective_bytes(hlo, {"*": 10})
+    assert base["wire_bytes"] == scaled["wire_bytes"]

@@ -1,0 +1,125 @@
+"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracles.
+
+Sweeps shapes (including non-block-multiples exercising the padding path)
+and dtypes, plus adversarial inputs (all-inf rows, tie-heavy integer
+weights, empty frontiers) and a hypothesis sweep.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+INF = np.inf
+
+
+def _rand_multpath(rng, nb, n, density=0.5, dtype=np.float32):
+    fw = rng.integers(0, 20, (nb, n)).astype(dtype)
+    active = rng.random((nb, n)) < density
+    fw = np.where(active, fw, INF).astype(dtype)
+    fm = np.where(active, rng.integers(1, 5, (nb, n)), 0.0).astype(dtype)
+    return fw, fm
+
+
+def _rand_adj(rng, n, n2, density=0.3, dtype=np.float32):
+    a = rng.integers(1, 10, (n, n2)).astype(dtype)
+    return np.where(rng.random((n, n2)) < density, a, INF).astype(dtype)
+
+
+SHAPES = [(8, 16, 16), (8, 128, 128), (16, 200, 136), (128, 128, 256),
+          (1, 64, 300), (130, 257, 129)]
+
+
+@pytest.mark.parametrize("nb,n,n2", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_multpath_matmul_matches_ref(nb, n, n2, dtype):
+    rng = np.random.default_rng(nb * 1000 + n)
+    fw, fm = _rand_multpath(rng, nb, n, dtype=dtype)
+    a = _rand_adj(rng, n, n2, dtype=dtype)
+    cw, cm = ops.multpath_matmul(jnp.asarray(fw), jnp.asarray(fm),
+                                 jnp.asarray(a))
+    cw_r, cm_r = ref.multpath_matmul_ref(jnp.asarray(fw), jnp.asarray(fm),
+                                         jnp.asarray(a))
+    np.testing.assert_array_equal(np.asarray(cw), np.asarray(cw_r))
+    np.testing.assert_allclose(np.asarray(cm), np.asarray(cm_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("nb,n,n2", SHAPES)
+def test_centpath_matmul_matches_ref(nb, n, n2):
+    rng = np.random.default_rng(nb * 7 + n2)
+    fw = rng.integers(0, 20, (nb, n)).astype(np.float32)
+    active = rng.random((nb, n)) < 0.5
+    fw = np.where(active, fw, -INF).astype(np.float32)
+    fp = np.where(active, rng.random((nb, n)), 0.0).astype(np.float32)
+    b = _rand_adj(rng, n, n2)
+    cw, cp, cc = ops.centpath_matmul(jnp.asarray(fw), jnp.asarray(fp),
+                                     jnp.asarray(b))
+    cw_r, cp_r, cc_r = ref.centpath_matmul_ref(jnp.asarray(fw),
+                                               jnp.asarray(fp), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(cw), np.asarray(cw_r))
+    np.testing.assert_allclose(np.asarray(cp), np.asarray(cp_r), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cc), np.asarray(cc_r))
+
+
+def test_multpath_empty_frontier():
+    """All-inactive frontier must produce all-inactive output."""
+    nb, n = 8, 64
+    fw = jnp.full((nb, n), INF)
+    fm = jnp.zeros((nb, n))
+    a = jnp.asarray(_rand_adj(np.random.default_rng(0), n, n))
+    cw, cm = ops.multpath_matmul(fw, fm, a)
+    assert bool(jnp.all(~jnp.isfinite(cw)))
+    assert bool(jnp.all(cm == 0))
+
+
+def test_multpath_tie_heavy():
+    """Unit weights on a complete bipartite block: every path ties."""
+    nb, n, n2 = 4, 32, 32
+    fw = jnp.ones((nb, n))
+    fm = jnp.full((nb, n), 2.0)
+    a = jnp.ones((n, n2))
+    cw, cm = ops.multpath_matmul(fw, fm, a)
+    np.testing.assert_array_equal(np.asarray(cw), 2.0)
+    np.testing.assert_array_equal(np.asarray(cm), 2.0 * n)
+
+
+def test_centpath_no_nan_on_inactive_vs_noedge():
+    """-inf frontier against inf edge must not produce NaN."""
+    fw = jnp.array([[-INF, 0.0]])
+    fp = jnp.array([[0.0, 1.0]])
+    b = jnp.array([[INF, 1.0], [INF, INF]])
+    cw, cp, cc = ops.centpath_matmul(fw, fp, b)
+    assert not bool(jnp.any(jnp.isnan(cw)))
+    # column 0 has no edges: inactive
+    assert np.asarray(cw)[0, 0] == -INF
+    # column 1: only (k=0) edge exists but frontier k=0 inactive; k=1 no edge
+    # -> contribution from k=0: -inf - 1 = -inf; k=1: 0 - inf = -inf
+    assert np.asarray(cw)[0, 1] == -INF
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 50), st.integers(1, 50),
+       st.integers(0, 2**31 - 1))
+def test_multpath_hypothesis_sweep(nb, n, n2, seed):
+    rng = np.random.default_rng(seed)
+    fw, fm = _rand_multpath(rng, nb, n, density=rng.random())
+    a = _rand_adj(rng, n, n2, density=rng.random())
+    cw, cm = ops.multpath_matmul(jnp.asarray(fw), jnp.asarray(fm),
+                                 jnp.asarray(a))
+    cw_r, cm_r = ref.multpath_matmul_ref(jnp.asarray(fw), jnp.asarray(fm),
+                                         jnp.asarray(a))
+    np.testing.assert_array_equal(np.asarray(cw), np.asarray(cw_r))
+    np.testing.assert_allclose(np.asarray(cm), np.asarray(cm_r), rtol=1e-6)
+
+
+def test_kernel_inside_mfbc_end_to_end():
+    """use_kernel=True routes MFBC through the Pallas kernels; same λ."""
+    from repro.core import brandes_bc, mfbc
+    from repro.graphs.generators import erdos_renyi
+
+    g = erdos_renyi(48, 0.12, seed=3, weighted=True, max_weight=6)
+    lam_k = mfbc(g, n_b=16, backend="dense", use_kernel=True)
+    lam_ref = brandes_bc(g)
+    np.testing.assert_allclose(lam_k, lam_ref, rtol=1e-5, atol=1e-8)

