@@ -1,0 +1,122 @@
+"""Exact-vs-approximate BC benchmark (the new sampling workload).
+
+Runs exact MFBC (all n sources) and adaptive-sampling approximate BC
+(``repro.approx``) on the same R-MAT graph, reporting
+
+* ``speedup``        — t_exact / t_approx (both jit-warm),
+* ``topk_precision`` — |top-k(exact) ∩ top-k(approx)| / k,
+* ``spearman``       — rank correlation of λ̂ vs λ over all vertices,
+* ``max_norm_err``   — max_v |λ̂ − λ| / (n·(n−2)), comparable to ε,
+
+and writing the record to ``BENCH_approx.json`` (consumed as a CI
+artifact; ``benchmarks.run`` prints the same numbers as CSV rows).
+
+  PYTHONPATH=src python -m benchmarks.bc_approx             # scale 10
+  PYTHONPATH=src python -m benchmarks.bc_approx --smoke     # scale 8, CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+
+def _spearman(a: np.ndarray, b: np.ndarray) -> float:
+    ra = np.argsort(np.argsort(a)).astype(np.float64)
+    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra * ra).sum() * (rb * rb).sum())
+    return float((ra * rb).sum() / denom) if denom > 0 else 1.0
+
+
+def bench_bc_approx(scale: int = 10, degree: int = 8, eps: float = 0.05,
+                    delta: float = 0.1, k: int = 10, nb: int = 64,
+                    rule: str = "normal", seed: int = 0) -> Dict:
+    """One exact-vs-approx comparison; returns the BENCH record."""
+    from repro.approx import approx_bc
+    from repro.core import mfbc
+    from repro.graphs.generators import rmat
+
+    g = rmat(scale, degree, seed=seed)
+    g, _ = g.remove_isolated()
+
+    # jit warm-up for both paths (one small restricted run each), so the
+    # timed section measures steady-state batch throughput, not XLA.
+    mfbc(g, n_b=nb, backend="dense", sources=np.arange(nb))
+    approx_bc(g, eps=eps, delta=delta, rule=rule, n_b=nb,
+              max_samples=nb, seed=seed + 1)
+
+    t0 = time.time()
+    lam_exact = mfbc(g, n_b=nb, backend="dense")
+    t_exact = time.time() - t0
+
+    t0 = time.time()
+    res = approx_bc(g, eps=eps, delta=delta, rule=rule, n_b=nb,
+                    topk=k, seed=seed)
+    t_approx = time.time() - t0
+
+    top_exact = set(np.argsort(lam_exact)[::-1][:k].tolist())
+    top_approx = set(res.topk(k).tolist())
+    norm = g.n * max(g.n - 2, 1)
+    record = {
+        "name": f"bc_approx_rmat_s{scale}_e{degree}",
+        "n": g.n,
+        "m": g.m,
+        "eps": eps,
+        "delta": delta,
+        "rule": rule,
+        "k": k,
+        "n_samples": res.n_samples,
+        "n_epochs": res.n_epochs,
+        "converged": res.converged,
+        "seconds_exact": t_exact,
+        "seconds_approx": t_approx,
+        "speedup": t_exact / max(t_approx, 1e-9),
+        "sample_frac": res.n_samples / g.n,
+        "topk_precision": len(top_exact & top_approx) / k,
+        "spearman": _spearman(lam_exact, res.lam),
+        "max_norm_err": float(np.abs(res.lam - lam_exact).max()) / norm,
+    }
+    return record
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--degree", type=int, default=8)
+    ap.add_argument("--eps", type=float, default=0.05)
+    ap.add_argument("--delta", type=float, default=0.1)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--nb", type=int, default=64)
+    ap.add_argument("--rule", default="normal",
+                    choices=["normal", "bernstein"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_approx.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (scale 8)")
+    args = ap.parse_args(argv)
+
+    scale = 8 if args.smoke else args.scale
+    rec = bench_bc_approx(scale=scale, degree=args.degree, eps=args.eps,
+                          delta=args.delta, k=args.k, nb=args.nb,
+                          rule=args.rule, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[bc_approx] n={rec['n']} m={rec['m']} "
+          f"samples={rec['n_samples']}/{rec['n']} "
+          f"({rec['n_epochs']} epochs, converged={rec['converged']})")
+    print(f"[bc_approx] exact {rec['seconds_exact']:.2f}s vs approx "
+          f"{rec['seconds_approx']:.2f}s — speedup {rec['speedup']:.2f}x")
+    print(f"[bc_approx] top-{rec['k']} precision {rec['topk_precision']:.2f} "
+          f"spearman {rec['spearman']:.3f} "
+          f"max_norm_err {rec['max_norm_err']:.4f} (eps {rec['eps']})")
+    print(f"[bc_approx] wrote {args.out}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

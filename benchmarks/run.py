@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * table3_comm_*           — critical-path W/S: 2D baseline vs 3D MFBC
   * sec52_spgemm_*          — decomposition autotuner picks per regime
   * kernel_*                — Pallas kernel microbenches (interpret mode)
+  * approx_bc_*             — exact-vs-sampled BC (speedup, top-k precision)
 
 Run: PYTHONPATH=src python -m benchmarks.run
 """
@@ -74,6 +75,15 @@ def bench_sec52_spgemm() -> None:
              f"win_vs_2d={r['win_vs_2d']:.1f}x")
 
 
+def bench_bc_approx() -> None:
+    from benchmarks.bc_approx import bench_bc_approx as bench
+
+    r = bench(scale=8, nb=64)  # smoke-sized inside the CSV sweep
+    _row(f"approx_{r['name']}", r["seconds_approx"] * 1e6,
+         f"speedup={r['speedup']:.2f}x;topk_prec={r['topk_precision']:.2f};"
+         f"spearman={r['spearman']:.3f};samples={r['n_samples']}")
+
+
 def bench_kernels() -> None:
     import jax
     import jax.numpy as jnp
@@ -106,6 +116,7 @@ def main() -> None:
     bench_fig2_weak_scaling()
     bench_fig1c_weighted()
     bench_fig1_strong_scaling()
+    bench_bc_approx()
     bench_kernels()
 
 

@@ -1,0 +1,52 @@
+"""Adaptive-sampling approximate betweenness centrality.
+
+Exact MFBC (``repro.core.mfbc``) runs all ``n`` sources through the
+batched Algorithm 3 step. This subsystem serves the sampling regime
+instead: pick sources uniformly at random, run the *same* jitted batch
+step, and stop as soon as per-vertex confidence intervals certify the
+requested accuracy — the adaptive-sampling design of van der Grinten &
+Meyerhenke [arXiv:1910.11039], transplanted from MPI onto the jax mesh.
+
+Mapping to 1910.11039 (their ADS algorithm, itself a KADABRA descendant):
+
+* **per-sample value** — their algorithm samples shortest paths; source
+  sampling [Brandes & Pich 2007] samples a source ``s`` and scores every
+  vertex with the normalized dependency ``x_s(v) = δ_s(v)/(n-2) ∈ [0,1]``
+  (``δ_s(v) = Σ_t σ(s,t,v)/σ̄(s,t)``). One sample costs one row of the
+  MFBC batch step, so a whole epoch is a single padded static-shape batch.
+* **epoch doubling** — §4 of the paper synchronizes the stopping check at
+  epoch boundaries whose lengths grow geometrically, amortizing the
+  reduction; ``sampling.epoch_schedule`` reproduces the doubling schedule
+  and the driver checks the stopping rule only there (amortizing the
+  host-side sync with the device batch loop).
+* **stopping rule** — their Alg. 1 stops when every vertex's confidence
+  interval, from an empirical-Bernstein concentration bound with a
+  union-bounded failure budget, shrinks below the target. We implement
+  that (``sampling.bernstein_halfwidth``), with the failure budget split
+  twice: across vertices (variance-weighted, ``sampling.allocate_delta``)
+  and geometrically across the sequence of epoch-boundary checks
+  (``driver.stopping_check``, δ_i = δ/2^{i+1}) so repeated peeking stays
+  within δ. The Hoeffding a-priori budget is the uniform strategy's
+  sample count and the adaptive cap, and a relative-error / top-k
+  separation early exit (their §5 "relative" variant) stops once the
+  top-k set is CI-separated from the rest.
+* **distributed epochs** — the batch step is mesh-oblivious: the driver
+  runs epochs through the single-host step or through
+  ``core.dist_bc.build_mfbc_step`` (Theorem 5.1 collectives), matching the
+  paper's MPI scaling story.
+
+``driver.approx_bc`` is the entry point; ``launch.bc_run --approx`` and
+``serve.bc_service`` wrap it for CLI and serving use.
+"""
+from repro.approx.driver import ApproxResult, approx_bc, choose_sample_batch
+from repro.approx.sampling import (AdaptiveSampler, UniformSampler,
+                                   allocate_delta, bernstein_halfwidth,
+                                   epoch_schedule, hoeffding_budget,
+                                   hoeffding_halfwidth, normal_halfwidth)
+
+__all__ = [
+    "ApproxResult", "approx_bc", "choose_sample_batch",
+    "AdaptiveSampler", "UniformSampler", "allocate_delta",
+    "bernstein_halfwidth", "epoch_schedule", "hoeffding_budget",
+    "hoeffding_halfwidth", "normal_halfwidth",
+]

@@ -1,0 +1,332 @@
+"""Adaptive approximate-BC driver over the batched MFBC step.
+
+The driver owns the host-side loop: pull padded source batches from a
+strategy (``approx.sampling``), push them through the jitted batch step —
+single-host ``core.mfbc.mfbc_batch_moments`` or the distributed
+``core.dist_bc`` step — and fold the per-vertex dependency moments into a
+running λ estimator with confidence intervals. The stopping rule is
+evaluated only at epoch boundaries (epoch-doubling, 1910.11039 §4).
+
+Estimator. For τ uniform source samples with running sums
+``S1(v) = Σ_s δ_s(v)`` and ``S2(v) = Σ_s δ_s(v)²``:
+
+  λ̂(v)  = (n/τ)·S1(v)                      (unbiased for λ(v) = Σ_s δ_s(v))
+  x̄(v)  = S1(v)/((n-2)·τ) ∈ [0, 1]         (normalized-scale mean)
+  hw(v)  = CI halfwidth of x̄(v)            (Bernstein or CLT rule)
+
+Convergence: ``max_v hw(v) ≤ ε`` — or, when a ``topk`` query is given,
+the earlier of that and CI-separation of the top-k set (the relative-error
+early exit: every vertex in the estimated top-k has a lower confidence
+bound above the upper bound of every vertex outside it).
+
+Batch-size selection consults the SpGEMM cost layer
+(``spgemm.autotune.choose_bc_regime``): per-source step cost is flat in
+``n_b`` for the dense regime, so the model picks the largest ``n_b`` that
+fits the per-device memory budget and does not overshoot the first epoch —
+amortizing per-batch dispatch without wasting samples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.approx import sampling as S
+from repro.core.adjacency import coo_adj_from_graph, dense_adj_from_graph
+from repro.core.mfbc import mfbc_batch_moments
+from repro.graphs.formats import Graph
+
+
+def _topk_separated(lam: np.ndarray, halfwidth: np.ndarray, k: int) -> bool:
+    """True iff the k largest estimates are CI-separated from the rest."""
+    if k >= lam.shape[0]:
+        return True
+    order = np.argsort(lam)[::-1]
+    lo = lam[order[:k]] - halfwidth[order[:k]]
+    hi = lam[order[k:]] + halfwidth[order[k:]]
+    return bool(lo.min() > hi.max())
+
+
+@dataclasses.dataclass
+class ApproxResult:
+    """Outcome of one approximate-BC run (λ convention of ``core.mfbc``)."""
+
+    lam: np.ndarray  # (n,) λ̂ estimate, unnormalized
+    halfwidth: np.ndarray  # (n,) CI halfwidth, same unnormalized scale
+    n_samples: int
+    n_epochs: int
+    converged: bool  # stopping rule met (False: hit the sample cap)
+    eps: float
+    delta: float
+    rule: str
+
+    def topk(self, k: int) -> np.ndarray:
+        """Vertex ids of the k largest estimates, descending."""
+        order = np.argsort(self.lam)[::-1]
+        return order[:k]
+
+    def topk_separated(self, k: int) -> bool:
+        """True iff the top-k set is CI-separated from the rest."""
+        return _topk_separated(self.lam, self.halfwidth, k)
+
+
+class LambdaEstimator:
+    """Running moments of per-source dependencies, with CIs.
+
+    ``has_moments=False`` marks estimators fed only first moments (the
+    distributed step): CIs fall back to the variance-free Hoeffding bound
+    instead of trusting a zeroed Σδ².
+    """
+
+    def __init__(self, n: int, eps: float, delta: float, rule: str,
+                 has_moments: bool = True):
+        if rule not in ("bernstein", "normal"):
+            raise ValueError(f"unknown stopping rule {rule!r}")
+        self.n = n
+        self.eps = eps
+        self.delta = delta
+        self.rule = rule
+        self.has_moments = has_moments
+        self.s1 = np.zeros(n, dtype=np.float64)
+        self.s2 = np.zeros(n, dtype=np.float64)
+        self.tau = 0
+
+    def update(self, s1_batch: np.ndarray, s2_batch: np.ndarray,
+               n_valid: int) -> None:
+        self.s1 += s1_batch
+        self.s2 += s2_batch
+        self.tau += n_valid
+
+    def _norm(self) -> float:
+        return float(max(self.n - 2, 1))
+
+    def halfwidth_normalized(self, delta: Optional[float] = None
+                             ) -> np.ndarray:
+        """CI halfwidth of x̄(v) on the [0, 1] normalized-dependency scale.
+
+        The failure budget (``delta`` overrides ``self.delta`` — used by
+        the sequential ``stopping_check``) is split non-uniformly across
+        vertices (``sampling.allocate_delta``): empirical variance decides
+        where δ is spent, so hub CIs — the ones the max over v binds on —
+        shrink fastest.
+        """
+        d = self.delta if delta is None else delta
+        if not self.has_moments:
+            return np.full(self.n, S.hoeffding_halfwidth(self.tau,
+                                                         d / self.n))
+        c = self._norm()
+        x1, x2 = self.s1 / c, self.s2 / (c * c)
+        tau = max(self.tau, 2)
+        mean = x1 / tau
+        var = np.maximum(x2 / tau - mean * mean, 0.0)
+        delta_v = S.allocate_delta(var, d)
+        fn = (S.bernstein_halfwidth if self.rule == "bernstein"
+              else S.normal_halfwidth)
+        return fn(x1, x2, self.tau, delta_v)
+
+    def lam_scaled(self) -> np.ndarray:
+        """λ̂(v) = (n/τ)·S1(v)."""
+        return self.s1 * (self.n / max(self.tau, 1))
+
+    def hw_scaled(self, hw_normalized: np.ndarray) -> np.ndarray:
+        """Normalized-scale CI halfwidth → λ units (λ̂ = n·(n-2)·x̄)."""
+        return hw_normalized * self.n * self._norm()
+
+    def converged(self) -> bool:
+        if self.tau < 2:
+            return False
+        return bool(self.halfwidth_normalized().max() <= self.eps)
+
+    def result(self, *, n_epochs: int, converged: bool) -> ApproxResult:
+        return ApproxResult(
+            lam=self.lam_scaled(),
+            halfwidth=self.hw_scaled(self.halfwidth_normalized()),
+            n_samples=self.tau,
+            n_epochs=n_epochs,
+            converged=converged,
+            eps=self.eps,
+            delta=self.delta,
+            rule=self.rule,
+        )
+
+
+def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
+                        backend: str = "dense",
+                        mem_bytes: float = 4 * 2 ** 30,
+                        budget_hint: Optional[int] = None,
+                        candidates: Tuple[int, ...] = (16, 32, 64, 128, 256),
+                        dispatch_overhead_s: float = 5e-4) -> int:
+    """Pick the sample-batch size n_b from the SpGEMM cost model.
+
+    Scores each candidate with per-iteration relax seconds from
+    ``spgemm.autotune.choose_bc_regime`` (dense/COO regime min) plus an
+    amortized per-batch dispatch overhead, per *source*; rejects batch
+    state that busts the memory budget (6 f32 state matrices of (n_b, n)
+    plus the adjacency — dense (n, n) only when ``backend="dense"`` on a
+    single device; COO edge arrays or a p-way sharded adjacency
+    otherwise). With a ``budget_hint`` (e.g. the first epoch's length)
+    candidates larger than the whole budget only waste padded rows and
+    are skipped.
+    """
+    from repro.spgemm.autotune import choose_bc_regime
+
+    if backend == "dense" and p == 1:
+        adj_bytes = 4.0 * n * n
+    elif backend == "dense":
+        adj_bytes = 4.0 * n * n / p  # P(model, data)-sharded
+    else:
+        adj_bytes = 12.0 * m_edges  # COO (src, dst, w)
+    best_nb, best_cost = candidates[0], float("inf")
+    for nb in candidates:
+        if budget_hint is not None and nb > max(budget_hint, candidates[0]):
+            continue
+        state_bytes = 6.0 * 4.0 * nb * n
+        if adj_bytes + state_bytes > mem_bytes:
+            continue
+        reg = choose_bc_regime(n, m_edges, nb, fill=0.5, p=p)
+        step_s = min(reg["dense_s"], reg["coo_s"])
+        per_source = step_s + dispatch_overhead_s / nb
+        if per_source < best_cost:
+            best_nb, best_cost = nb, per_source
+    return best_nb
+
+
+def _single_host_step(g: Graph, backend: str, block: int, use_kernel: bool):
+    """Returns step(sources, valid) -> (S1, S2, n_reach) on one host."""
+    if backend == "dense":
+        adj = dense_adj_from_graph(g, block=block, use_kernel=use_kernel)
+    elif backend == "coo":
+        adj = coo_adj_from_graph(g)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def step(sources: np.ndarray, valid: np.ndarray):
+        s1, s2, nr = mfbc_batch_moments(adj, jnp.asarray(sources),
+                                        jnp.asarray(valid))
+        return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
+                np.asarray(nr))
+
+    return step
+
+
+def stopping_check(est: "LambdaEstimator", eps: float, topk: Optional[int],
+                   check_index: int):
+    """One sequential convergence test; returns (stop, hw_normalized).
+
+    The failure budget for the *sequence* of epoch-boundary checks is
+    split geometrically — check i tests at level δ/2^(i+1), Σ_i δ_i ≤ δ —
+    so repeatedly peeking at the CIs does not inflate the overall failure
+    probability (the per-epoch budget split of 1910.11039 Alg. 1).
+    Shared by ``approx_bc`` and ``serve.bc_service``.
+    """
+    delta_check = est.delta / (2.0 ** (check_index + 1))
+    hw = est.halfwidth_normalized(delta=delta_check)
+    if hw.max() <= eps:
+        return True, hw
+    if topk is not None and est.tau >= 2:
+        return _topk_separated(est.lam_scaled(), est.hw_scaled(hw), topk), hw
+    return False, hw
+
+
+def approx_bc(g: Graph, *, eps: float = 0.05, delta: float = 0.1,
+              strategy: str = "adaptive", rule: str = "bernstein",
+              n_b: Optional[int] = None, backend: str = "dense",
+              block: int = 512, use_kernel: bool = False,
+              topk: Optional[int] = None, seed: int = 0,
+              mesh=None, iters: int = 0,
+              max_samples: Optional[int] = None,
+              progress_cb: Optional[Callable] = None) -> ApproxResult:
+    """Approximate betweenness centrality by adaptive source sampling.
+
+    Args:
+      g: host COO graph.
+      eps: target CI halfwidth on the normalized dependency scale
+        (δ_s(v)/(n-2) ∈ [0,1]); λ̂(v) is within ε·n·(n-2) of λ(v) w.p. 1-δ.
+      delta: total failure probability (union-bounded across vertices).
+      strategy: "adaptive" (epoch-doubling + stopping rule) or "uniform"
+        (fixed Hoeffding budget, no early exit).
+      rule: "bernstein" (rigorous empirical-Bernstein CIs) or "normal"
+        (CLT profile — the practical serving configuration).
+      topk: when set, also stop as soon as the top-k set is CI-separated
+        (relative-error early exit).
+      mesh: optional jax device mesh — epochs run through the distributed
+        Theorem 5.1 batch step instead of the single-host one. The mesh
+        step has no per-sample second moments, so the strategy is forced
+        to "uniform" and CIs use the variance-free Hoeffding bound.
+      max_samples: hard cap overriding the Hoeffding budget cap.
+      progress_cb: optional callback(epoch, tau, max_halfwidth).
+
+    Returns:
+      ApproxResult with λ̂, per-vertex CI halfwidths (λ scale) and
+      convergence metadata.
+    """
+    n = g.n
+    hoeffding = S.hoeffding_budget(n, eps, delta)
+    if n_b is None:
+        p = int(mesh.devices.size) if mesh is not None else 1
+        n_b = min(n, choose_sample_batch(n, g.m, p=p, backend=backend,
+                                         budget_hint=hoeffding))
+    cap = max_samples if max_samples is not None else None
+
+    dist_run = None
+    if mesh is not None:
+        from repro.core.dist_bc import prepare_mesh_batch_step
+
+        dist_run, n_b = prepare_mesh_batch_step(
+            g, mesh, nb=n_b, iters=iters if iters > 0 else n,
+            use_kernel=use_kernel, block=block)
+        # The mesh step folds sources on-device and returns only Σδ (no
+        # second moment): variance-based adaptive CIs are unavailable for
+        # ANY rule — run the fixed uniform budget with Hoeffding CIs.
+        strategy = "uniform"
+    else:
+        step = _single_host_step(g, backend, block, use_kernel)
+
+    est = LambdaEstimator(n, eps, delta, rule, has_moments=dist_run is None)
+
+    def run_batch(b: S.SampleBatch) -> None:
+        if dist_run is not None:
+            s1 = dist_run(b.sources, b.valid)
+            est.update(s1, np.zeros_like(s1), b.n_valid)
+        else:
+            s1, s2, _ = step(b.sources, b.valid)
+            est.update(s1, s2, b.n_valid)
+
+    def honest_converged() -> bool:
+        """A cap below the Hoeffding budget carries no a-priori guarantee
+        — only the empirical CIs can still certify convergence there."""
+        if est.tau >= hoeffding:
+            return True
+        return est.converged()
+
+    if strategy == "uniform":
+        sampler = S.UniformSampler(n, eps=eps, delta=delta, n_b=n_b,
+                                   budget=cap, seed=seed)
+        epochs = 0
+        for b in sampler.batches():
+            run_batch(b)
+            epochs = b.epoch + 1
+        return est.result(n_epochs=epochs, converged=honest_converged())
+
+    if strategy != "adaptive":
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    sampler = S.AdaptiveSampler(n, eps=eps, delta=delta, n_b=n_b,
+                                cap=cap, seed=seed)
+    n_epochs = 0
+    converged = False
+    for ei, batches in sampler.epochs():
+        for b in batches:
+            run_batch(b)
+        n_epochs = ei + 1
+        stop, hw = stopping_check(est, eps, topk, ei)
+        if progress_cb is not None:
+            progress_cb(ei, est.tau, float(hw.max()))
+        if stop:
+            converged = True
+            sampler.stop()
+    if sampler.capped and not converged:
+        converged = honest_converged()
+    return est.result(n_epochs=n_epochs, converged=converged)

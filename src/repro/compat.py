@@ -1,0 +1,60 @@
+"""Version-compat shims for the jax API surface we depend on.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (≤ 0.4.x, where the
+replication-check kwarg is ``check_rep``) to the top-level ``jax``
+namespace (≥ 0.5, kwarg renamed ``check_vma``). Callers always use the
+modern spelling; this module translates for older installs.
+"""
+from __future__ import annotations
+
+import functools
+
+try:  # jax >= 0.5: top-level export, check_vma kwarg
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+except ImportError:  # jax 0.4.x: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)
+
+functools.wraps(_shard_map)(shard_map)
+
+
+try:  # jax >= 0.6: context mesh for sharding propagation under jit
+    from jax.sharding import set_mesh
+except ImportError:  # jax 0.4.x: Mesh is itself a context manager
+    import contextlib
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version.
+
+    jax ≤ 0.4.x returns a per-device list of dicts; ≥ 0.5 returns the dict
+    directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+try:  # jax >= 0.5
+    from jax.lax import axis_size
+except ImportError:  # jax 0.4.x: core.axis_frame(name)
+    from jax.core import axis_frame as _axis_frame
+
+    def axis_size(axis_name) -> int:
+        # late 0.4.x returns the size itself; earlier 0.4.x a frame
+        # object carrying .size
+        frame = _axis_frame(axis_name)
+        return getattr(frame, "size", frame)

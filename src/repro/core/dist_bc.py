@@ -45,8 +45,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.compat import shard_map
 
 from repro.core import monoids
 from repro.core.monoids import Centpath, Multpath
@@ -110,7 +112,7 @@ def _reduce_scatter_gather(cfg, tree, reduce_fn):
     """
     red = reduce_fn(tree, cfg.model_axis)  # full reduce (pmin/pmax+psum)
     m_idx = jax.lax.axis_index(cfg.model_axis)
-    m_sz = jax.lax.axis_size(cfg.model_axis)
+    m_sz = compat.axis_size(cfg.model_axis)
 
     def scatter(v):
         blk = v.shape[1] // m_sz
@@ -125,7 +127,7 @@ def _reduce_scatter_gather(cfg, tree, reduce_fn):
 def _slice_rows(cfg, tree):
     """Keep this device's source rows: (nb_pod, x) -> (nb_pod/data, x)."""
     d_idx = jax.lax.axis_index(cfg.data_axis)
-    d_sz = jax.lax.axis_size(cfg.data_axis)
+    d_sz = compat.axis_size(cfg.data_axis)
 
     def slc(v):
         blk = v.shape[0] // d_sz
@@ -192,8 +194,8 @@ def _local_ids(cfg, n):
     v = d'·(n/D) + m·(n/(D·M)) + j with d' = c // (n/(D·M)), j = c % ….
     """
     m_idx = jax.lax.axis_index(cfg.model_axis)
-    d_sz = jax.lax.axis_size(cfg.data_axis)
-    m_sz = jax.lax.axis_size(cfg.model_axis)
+    d_sz = compat.axis_size(cfg.data_axis)
+    m_sz = compat.axis_size(cfg.model_axis)
     n_loc = n // m_sz
     sub = n // (d_sz * m_sz)
     c = jax.lax.iota(jnp.int32, n_loc)
@@ -324,12 +326,15 @@ def vertex_row_permutation(n: int, d_sz: int, m_sz: int):
     return perm
 
 
-def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,
-              use_kernel: bool = False, block: int = 512):
-    """Full betweenness centrality on a device mesh (host batch loop).
+def prepare_mesh_batch_step(g, mesh: Mesh, *, nb: int, iters: int = 0,
+                            use_kernel: bool = False, block: int = 512):
+    """Shared host-side mesh setup: pad, permute, shard, jit.
 
-    Pads the graph to mesh-divisible n, permutes adjacency rows, runs
-    ``⌈n/nb⌉`` batches of the distributed step, undoes the permutation.
+    Returns ``(run, nb_pad)`` where ``run(sources, valid) -> λ_partial``
+    takes host arrays of up to ``nb_pad`` sources (shorter inputs are
+    zero-padded with ``valid=False``) and returns the batch's λ
+    contribution in *original* vertex order, length ``g.n``. Used by both
+    the exact sweep (``dist_mfbc``) and the approximate-BC driver.
     """
     import numpy as np
 
@@ -346,8 +351,6 @@ def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,
     a = np.full((n_pad, n_pad), np.inf, dtype=np.float32)
     a[:g.n, :g.n] = coo_to_dense(g)
     perm = vertex_row_permutation(n_pad, d_sz, m_sz)
-    a_p = a[perm, :]
-    at_p = a.T[perm, :]
 
     iters = iters if iters > 0 else g.n
     nb_pad = -(-nb // (p_sz * d_sz)) * (p_sz * d_sz)
@@ -355,21 +358,37 @@ def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,
                        pod_axis=pod, use_kernel=use_kernel, block=block)
     step = build_mfbc_step(mesh, cfg)
     sh_a, sh_at, sh_src, sh_val = input_shardings(mesh, cfg)
-    a_dev = jax.device_put(jnp.asarray(a_p), sh_a)
-    at_dev = jax.device_put(jnp.asarray(at_p), sh_at)
+    a_dev = jax.device_put(jnp.asarray(a[perm, :]), sh_a)
+    at_dev = jax.device_put(jnp.asarray(a.T[perm, :]), sh_at)
 
-    lam = np.zeros(n_pad, dtype=np.float64)
+    def run(sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        src = np.zeros(nb_pad, np.int32)
+        val = np.zeros(nb_pad, bool)
+        k = min(sources.shape[0], nb_pad)
+        src[:k], val[:k] = sources[:k], valid[:k]
+        lam_b = step(a_dev, at_dev, jax.device_put(jnp.asarray(src), sh_src),
+                     jax.device_put(jnp.asarray(val), sh_val))
+        lam = np.zeros(n_pad, dtype=np.float64)
+        lam[perm] = np.asarray(lam_b, np.float64)  # undo the permutation
+        return lam[:g.n]
+
+    return run, nb_pad
+
+
+def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,
+              use_kernel: bool = False, block: int = 512):
+    """Full betweenness centrality on a device mesh (host batch loop).
+
+    Pads the graph to mesh-divisible n, permutes adjacency rows, runs
+    ``⌈n/nb⌉`` batches of the distributed step, undoes the permutation.
+    """
+    import numpy as np
+
+    run, nb_pad = prepare_mesh_batch_step(g, mesh, nb=nb, iters=iters,
+                                          use_kernel=use_kernel, block=block)
+    lam = np.zeros(g.n, dtype=np.float64)
     for b in range(-(-g.n // nb_pad)):
         chunk = np.arange(b * nb_pad, min((b + 1) * nb_pad, g.n),
                           dtype=np.int32)
-        valid = np.ones(chunk.shape[0], dtype=bool)
-        if chunk.shape[0] < nb_pad:
-            pad = nb_pad - chunk.shape[0]
-            chunk = np.concatenate([chunk, np.zeros(pad, np.int32)])
-            valid = np.concatenate([valid, np.zeros(pad, bool)])
-        lam_b = step(a_dev, at_dev,
-                     jax.device_put(jnp.asarray(chunk), sh_src),
-                     jax.device_put(jnp.asarray(valid), sh_val))
-        lam_b = np.asarray(lam_b, dtype=np.float64)
-        lam[perm] += lam_b  # undo the row permutation
-    return lam[:g.n]
+        lam += run(chunk, np.ones(chunk.shape[0], dtype=bool))
+    return lam

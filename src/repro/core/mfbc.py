@@ -23,14 +23,12 @@ from repro.core.monoids import INF
 from repro.graphs.formats import Graph
 
 
-@functools.partial(jax.jit, static_argnames=("iterate", "max_iters_bf",
-                                             "max_iters_br"))
-def mfbc_batch(adj, sources: jax.Array, valid: jax.Array, *,
-               iterate: str = "while", max_iters_bf: int = 0,
-               max_iters_br: int = 0) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One batch of Algorithm 3: returns (λ_partial, Tw, Tm).
+def _batch_contrib(adj, sources: jax.Array, valid: jax.Array, *,
+                   iterate: str, max_iters_bf: int, max_iters_br: int):
+    """Shared Algorithm 3 batch body: per-source contributions δ_s(v).
 
-    valid: (nb,) bool — False for padding sources (contribute nothing).
+    Returns (contrib, mask, Tw, Tm) with contrib (nb, n) zeroed on
+    unreachable/padding entries.
     """
     nb = sources.shape[0]
     Tw, Tm = _mfbf.mfbf(adj, sources, iterate=iterate, max_iters=max_iters_bf)
@@ -40,8 +38,46 @@ def mfbc_batch(adj, sources: jax.Array, valid: jax.Array, *,
     Tw = Tw.at[rows, sources].set(INF)
     Tm = Tm.at[rows, sources].set(1.0)
     Zp = _mfbr.mfbr(adj, Tw, Tm, iterate=iterate, max_iters=max_iters_br)
-    contrib = jnp.where(jnp.isfinite(Tw) & valid[:, None], Zp * Tm, 0.0)
+    mask = jnp.isfinite(Tw) & valid[:, None]
+    contrib = jnp.where(mask, Zp * Tm, 0.0)
+    return contrib, mask, Tw, Tm
+
+
+@functools.partial(jax.jit, static_argnames=("iterate", "max_iters_bf",
+                                             "max_iters_br"))
+def mfbc_batch(adj, sources: jax.Array, valid: jax.Array, *,
+               iterate: str = "while", max_iters_bf: int = 0,
+               max_iters_br: int = 0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One batch of Algorithm 3: returns (λ_partial, Tw, Tm).
+
+    valid: (nb,) bool — False for padding sources (contribute nothing).
+    """
+    contrib, _, Tw, Tm = _batch_contrib(adj, sources, valid, iterate=iterate,
+                                        max_iters_bf=max_iters_bf,
+                                        max_iters_br=max_iters_br)
     return jnp.sum(contrib, axis=0), Tw, Tm
+
+
+@functools.partial(jax.jit, static_argnames=("iterate", "max_iters_bf",
+                                             "max_iters_br"))
+def mfbc_batch_moments(adj, sources: jax.Array, valid: jax.Array, *,
+                       iterate: str = "while", max_iters_bf: int = 0,
+                       max_iters_br: int = 0
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One Algorithm 3 batch returning per-vertex dependency moments.
+
+    Returns (S1, S2, n_reach) where, over the batch's valid sources s,
+    ``S1(v) = Σ_s δ_s(v)``, ``S2(v) = Σ_s δ_s(v)²`` and
+    ``n_reach(v) = Σ_s [v reachable from s]``. S1 equals ``mfbc_batch``'s
+    λ_partial; S2 feeds the empirical-Bernstein confidence intervals of the
+    adaptive approximate-BC estimator (``repro.approx``), which need the
+    second moment per *source sample*, not the batch sum.
+    """
+    contrib, mask, _, _ = _batch_contrib(adj, sources, valid, iterate=iterate,
+                                         max_iters_bf=max_iters_bf,
+                                         max_iters_br=max_iters_br)
+    return (jnp.sum(contrib, axis=0), jnp.sum(contrib * contrib, axis=0),
+            jnp.sum(mask, axis=0).astype(jnp.int32))
 
 
 def mfbc(g: Graph, *, n_b: Optional[int] = None, backend: str = "dense",

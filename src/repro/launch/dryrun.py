@@ -32,6 +32,8 @@ def run_one(arch_id: str, shape_id: str, mesh_kind: str, out_dir: str,
             policy_overrides=None) -> dict:
     import jax
 
+    from repro import compat
+
     from repro.configs import get_arch
     from repro.launch.mesh import make_production_mesh
     from repro.roofline.hlo_parse import collective_bytes
@@ -54,7 +56,7 @@ def run_one(arch_id: str, shape_id: str, mesh_kind: str, out_dir: str,
         bundle = spec.build(cell, policy)
 
     def _compile(b):
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             jitted = jax.jit(b.fn, donate_argnums=b.donate)
             lowered = jitted.lower(*b.abstract_args)
             return lowered.compile()
@@ -64,7 +66,7 @@ def run_one(arch_id: str, shape_id: str, mesh_kind: str, out_dir: str,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     trips = dict(bundle.trip_counts)
     trip_map = {"*": trips.get("while", 1)}
     coll = collective_bytes(compiled.as_text(), trip_map)
@@ -78,7 +80,7 @@ def run_one(arch_id: str, shape_id: str, mesh_kind: str, out_dir: str,
         def measure(k):
             bk = spec.build(cell, policy, unroll=True, layers_override=k)
             ck = _compile(bk)
-            cost_k = ck.cost_analysis() or {}
+            cost_k = compat.cost_analysis(ck)
             coll_k = collective_bytes(ck.as_text(), {})
             return (float(cost_k.get("flops", 0.0)),
                     float(cost_k.get("bytes accessed", 0.0)), coll_k)

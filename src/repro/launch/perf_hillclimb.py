@@ -32,10 +32,12 @@ def _write(name, record):
 def _compile_stats(fn, args, donate=()):
     import jax
 
+    from repro import compat
+
     from repro.roofline.hlo_parse import collective_bytes
 
     compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
     mem = compiled.memory_analysis()
     return {
@@ -51,6 +53,8 @@ def _compile_stats(fn, args, donate=()):
 def hillclimb_gcn2d():
     """ogb_products on the multi-pod mesh: baseline vs 2D edge partition."""
     import jax
+
+    from repro import compat
     import jax.numpy as jnp
 
     from repro.launch.mesh import make_production_mesh
@@ -67,7 +71,7 @@ def hillclimb_gcn2d():
     args = (params, ab["x"], ab["src"], ab["dst"], ab["coef"],
             ab["labels"], ab["mask"])
 
-    with jax.sharding.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         after = _compile_stats(jax.grad(loss2d), args)
 
     baseline_path = "results/dryrun/gcn-cora__ogb_products__multi.json"
@@ -126,6 +130,8 @@ def hillclimb_bc_blocks():
     """mfbc_paper bc_web_256k: measured block sweep + kernel tile model."""
     import jax
 
+    from repro import compat
+
     from repro.configs import get_arch
     from repro.core import dist_bc
     from repro.launch.mesh import make_production_mesh
@@ -148,9 +154,9 @@ def hillclimb_bc_blocks():
                 sds((n, n), jnp.float32, sharding=sh[1]),
                 sds((nb,), jnp.int32, sharding=sh[2]),
                 sds((nb,), jnp.bool_, sharding=sh[3]))
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             compiled = jax.jit(step).lower(*args).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
         return {"block": block,
                 "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
                 "flops": float(cost.get("flops", 0.0)),

@@ -1,0 +1,102 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property tests import ``given``/``settings``/``strategies`` from here
+as a fallback, so the suite collects and still exercises the properties on
+a fixed pseudo-random sweep (seeded per test name — stable across runs, no
+shrinking, no example database). With real hypothesis installed (see
+``requirements-dev.txt``) the fallback is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def one_of(*strats):
+    return _Strategy(
+        lambda rng: strats[int(rng.integers(0, len(strats)))]._draw(rng))
+
+
+def tuples(*strats):
+    return _Strategy(lambda rng: tuple(s._draw(rng) for s in strats))
+
+
+def composite(f):
+    @functools.wraps(f)
+    def builder(*args, **kwargs):
+        return _Strategy(
+            lambda rng: f(lambda s: s._draw(rng), *args, **kwargs))
+
+    return builder
+
+
+def given(*strats):
+    def deco(f):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = np.random.default_rng(zlib.crc32(f.__name__.encode()))
+            for _ in range(n):
+                f(*(s._draw(rng) for s in strats))
+
+        # No functools.wraps: __wrapped__ would make pytest unwrap to f and
+        # demand fixtures for the strategy-filled parameters. The zero-arg
+        # __signature__ is what pytest must see.
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        wrapper.__module__ = f.__module__
+        # Pytest plugins (e.g. anyio) probe fn.hypothesis.inner_test —
+        # mirror real hypothesis's attribute shape.
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=f)
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    def deco(f):
+        f._max_examples = max_examples
+        return f
+
+    return deco
+
+
+class _StrategiesNamespace:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    just = staticmethod(just)
+    one_of = staticmethod(one_of)
+    tuples = staticmethod(tuples)
+    composite = staticmethod(composite)
+
+
+strategies = _StrategiesNamespace()

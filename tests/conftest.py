@@ -1,0 +1,18 @@
+"""Shared pytest setup.
+
+* Puts ``src/`` on sys.path so the suite runs without ``PYTHONPATH=src``
+  (and without requiring an installed wheel — CI installs the package, but
+  a bare checkout works too).
+* Puts ``tests/`` on sys.path so the ``_hypothesis_fallback`` shim is
+  importable regardless of rootdir layout.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+for p in (_SRC, _HERE):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,209 @@
+"""Approximate-BC subsystem: estimator convergence vs the Brandes oracle,
+top-k precision, stopping-rule/sampler units, and the serving endpoint."""
+import numpy as np
+import pytest
+
+from repro.approx import (approx_bc, bernstein_halfwidth, epoch_schedule,
+                          hoeffding_budget, normal_halfwidth)
+from repro.approx.driver import LambdaEstimator, choose_sample_batch
+from repro.approx.sampling import AdaptiveSampler, UniformSampler
+from repro.core import brandes_bc
+from repro.graphs.generators import ring_of_cliques, rmat
+
+
+@pytest.fixture(scope="module")
+def small_rmat():
+    g = rmat(7, 8, seed=5)
+    g, _ = g.remove_isolated()
+    return g, brandes_bc(g)
+
+
+# ---------------------------------------------------------------- sampling
+def test_hoeffding_budget_scales():
+    b1 = hoeffding_budget(1000, 0.1, 0.1)
+    b2 = hoeffding_budget(1000, 0.05, 0.1)
+    assert b2 > 3.9 * b1  # 1/eps^2 scaling (log term shared)
+    assert hoeffding_budget(10_000, 0.1, 0.1) > b1  # log n growth
+
+
+def test_epoch_schedule_doubles():
+    sched = epoch_schedule(64)
+    taus = [next(sched) for _ in range(4)]
+    assert taus == [64, 128, 256, 512]
+
+
+def test_uniform_sampler_pads_and_honors_budget():
+    s = UniformSampler(100, n_b=32, budget=70, seed=0)
+    batches = list(s.batches())
+    assert [b.n_valid for b in batches] == [32, 32, 6]
+    for b in batches:
+        assert b.sources.shape == (32,)
+        assert np.all(b.sources[b.valid] < 100)
+        assert np.all(b.sources[~b.valid] == 0)
+
+
+def test_adaptive_sampler_stops_and_caps():
+    s = AdaptiveSampler(100, n_b=16, cap=100, seed=0)
+    drawn_per_epoch = []
+    for ei, batches in s.epochs():
+        drawn_per_epoch.append(sum(b.n_valid for b in batches))
+        if ei == 1:
+            s.stop()
+    assert drawn_per_epoch == [16, 32]  # doubling, stopped after epoch 1
+    assert s.drawn == 48 and not s.capped
+
+    s2 = AdaptiveSampler(100, n_b=16, cap=40, seed=0)
+    total = sum(b.n_valid for _, bs in s2.epochs() for b in bs)
+    assert total == 40 and s2.capped
+
+
+def test_halfwidths_shrink_with_tau():
+    s1 = np.full(4, 50.0)
+    s2 = np.full(4, 30.0)
+    for fn in (bernstein_halfwidth, normal_halfwidth):
+        hw100 = fn(s1, s2, 100, 1e-3)
+        hw400 = fn(s1 * 4, s2 * 4, 400, 1e-3)
+        assert np.all(hw400 < hw100)
+
+
+def test_choose_sample_batch_respects_memory():
+    # memory budget that only fits the smallest state
+    nb = choose_sample_batch(4096, 32768, mem_bytes=4 * 4096 * 4096 + 2e6)
+    assert nb in (16, 32, 64)
+    # generous budget: dispatch amortization prefers larger batches
+    nb_big = choose_sample_batch(4096, 32768, mem_bytes=64 * 2 ** 30)
+    assert nb_big >= nb
+
+
+# ---------------------------------------------------------------- estimator
+def test_estimator_unbiased_on_full_sweep(small_rmat):
+    """Feeding every source once reproduces exact λ (scale n/τ = 1)."""
+    g, lam_ref = small_rmat
+    from repro.core.adjacency import dense_adj_from_graph
+    from repro.core.mfbc import mfbc_batch_moments
+    import jax.numpy as jnp
+
+    adj = dense_adj_from_graph(g)
+    est = LambdaEstimator(g.n, eps=0.05, delta=0.1, rule="bernstein")
+    nb = 32
+    for b0 in range(0, g.n, nb):
+        chunk = np.arange(b0, min(b0 + nb, g.n), dtype=np.int32)
+        sources = np.zeros(nb, np.int32)
+        sources[:chunk.shape[0]] = chunk
+        valid = np.zeros(nb, bool)
+        valid[:chunk.shape[0]] = True
+        s1, s2, _ = mfbc_batch_moments(adj, jnp.asarray(sources),
+                                       jnp.asarray(valid))
+        est.update(np.asarray(s1, np.float64), np.asarray(s2, np.float64),
+                   int(valid.sum()))
+    res = est.result(n_epochs=1, converged=True)
+    np.testing.assert_allclose(res.lam, lam_ref, rtol=1e-4, atol=1e-6)
+
+
+def test_moments_first_moment_matches_mfbc_batch(small_rmat):
+    g, _ = small_rmat
+    from repro.core.adjacency import dense_adj_from_graph
+    from repro.core.mfbc import mfbc_batch, mfbc_batch_moments
+    import jax.numpy as jnp
+
+    adj = dense_adj_from_graph(g)
+    sources = jnp.asarray(np.arange(16, dtype=np.int32))
+    valid = jnp.asarray(np.ones(16, bool))
+    lam_b, _, _ = mfbc_batch(adj, sources, valid)
+    s1, s2, _ = mfbc_batch_moments(adj, sources, valid)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(lam_b), rtol=1e-6)
+    assert np.all(np.asarray(s2) >= 0)
+
+
+# ---------------------------------------------------------------- end to end
+def test_adaptive_converges_within_eps(small_rmat):
+    """The headline guarantee: λ̂ within ε·n·(n−2) of Brandes, adaptively."""
+    g, lam_ref = small_rmat
+    eps = 0.05
+    res = approx_bc(g, eps=eps, delta=0.1, rule="bernstein", seed=0)
+    assert res.converged
+    norm = g.n * (g.n - 2)
+    assert np.abs(res.lam - lam_ref).max() / norm <= eps
+
+
+def test_adaptive_normal_rule_converges_within_eps(small_rmat):
+    g, lam_ref = small_rmat
+    eps = 0.05
+    res = approx_bc(g, eps=eps, delta=0.1, rule="normal", seed=0)
+    assert res.converged
+    norm = g.n * (g.n - 2)
+    assert np.abs(res.lam - lam_ref).max() / norm <= eps
+    # normal profile must not sample more than the rigorous one
+    res_b = approx_bc(g, eps=eps, delta=0.1, rule="bernstein", seed=0)
+    assert res.n_samples <= res_b.n_samples
+
+
+def test_topk_precision(small_rmat):
+    g, lam_ref = small_rmat
+    k = 10
+    res = approx_bc(g, eps=0.05, delta=0.1, rule="normal", topk=k, seed=0)
+    top_ref = set(np.argsort(lam_ref)[::-1][:k].tolist())
+    prec = len(top_ref & set(res.topk(k).tolist())) / k
+    assert prec >= 0.9
+
+
+def test_uniform_strategy_matches_budget(small_rmat):
+    g, _ = small_rmat
+    res = approx_bc(g, eps=0.1, delta=0.1, strategy="uniform", seed=3)
+    assert res.n_samples == hoeffding_budget(g.n, 0.1, 0.1)
+    assert res.converged
+
+
+def test_structured_graph_ring_of_cliques():
+    """Bridge vertices of a ring of cliques carry the centrality mass."""
+    g = ring_of_cliques(6, 6)
+    lam_ref = brandes_bc(g)
+    res = approx_bc(g, eps=0.05, delta=0.1, rule="normal", seed=0)
+    # bridges (one per clique) are the top-6; sampling must find them
+    top_ref = set(np.argsort(lam_ref)[::-1][:6].tolist())
+    assert set(res.topk(6).tolist()) == top_ref
+
+
+def test_single_device_mesh_path(small_rmat):
+    """The distributed epoch path on a 1x1 mesh equals the estimator run."""
+    import jax
+    from jax.sharding import Mesh
+
+    g, lam_ref = small_rmat
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    res = approx_bc(g, eps=0.1, delta=0.2, mesh=mesh, iters=32,
+                    strategy="uniform", max_samples=200, seed=0)
+    assert res.n_samples == 200
+    # estimates correlate strongly with the oracle even at a small budget
+    top_ref = set(np.argsort(lam_ref)[::-1][:5].tolist())
+    assert len(top_ref & set(res.topk(5).tolist())) >= 4
+
+
+# ---------------------------------------------------------------- serving
+def test_bc_service_slot_scheduling(small_rmat):
+    from repro.serve.bc_service import BCRequest, BCService
+
+    g, lam_ref = small_rmat
+    g2 = ring_of_cliques(5, 5)
+    svc = BCService({"web": g, "ring": g2}, n_slots=2)
+    svc.submit(BCRequest(rid=0, graph="web", k=10, rule="normal"))
+    svc.submit(BCRequest(rid=1, graph="ring", k=5, rule="normal"))
+    svc.submit(BCRequest(rid=2, graph="web", k=3, eps=0.2, rule="normal"))
+    out = svc.run()
+    assert sorted(r.rid for r in out) == [0, 1, 2]
+    assert all(r.converged for r in out)
+    by_rid = {r.rid: r for r in out}
+    top_ref = set(np.argsort(lam_ref)[::-1][:10].tolist())
+    assert len(top_ref & set(by_rid[0].topk)) >= 9
+    lam2 = brandes_bc(g2)
+    top2 = set(np.argsort(lam2)[::-1][:5].tolist())
+    assert len(top2 & set(by_rid[1].topk)) >= 4
+
+
+def test_bc_service_rejects_unknown_graph():
+    from repro.serve.bc_service import BCRequest, BCService
+
+    svc = BCService({}, n_slots=1)
+    with pytest.raises(KeyError):
+        svc.submit(BCRequest(rid=0, graph="nope"))

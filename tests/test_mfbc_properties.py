@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) for the MFBC system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic sweep, see tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import brandes_bc, mfbc, multpath_combine, centpath_combine
 from repro.core.monoids import Centpath, Multpath
