@@ -8,18 +8,28 @@ Runs exact MFBC (all n sources) and adaptive-sampling approximate BC
 * ``spearman``       — rank correlation of λ̂ vs λ over all vertices,
 * ``max_norm_err``   — max_v |λ̂ − λ| / (n·(n−2)), comparable to ε,
 
-and writing the record to ``BENCH_approx.json`` (consumed as a CI
-artifact; ``benchmarks.run`` prints the same numbers as CSV rows).
+plus a mesh-vs-single-host *epoch* comparison (``mesh_epochs`` record):
+both paths run the same adaptive estimator — the mesh step returns fused
+(Σδ, Σδ²) since PR 2 — so the numbers to watch are epochs-to-converge
+and ``samples_saved`` vs the fixed Hoeffding budget the mesh path used
+to be stuck with. Fewer sampling epochs = fewer distributed SpGEMM
+rounds for the same (ε, δ) guarantee.
+
+Everything lands in ``BENCH_approx.json`` (consumed as a CI artifact;
+``benchmarks.run`` prints the same numbers as CSV rows).
 
   PYTHONPATH=src python -m benchmarks.bc_approx             # scale 10
   PYTHONPATH=src python -m benchmarks.bc_approx --smoke     # scale 8, CI
+  PYTHONPATH=src python -m benchmarks.bc_approx --mesh 2x2  # 4 devices
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
-from typing import Dict
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -84,6 +94,99 @@ def bench_bc_approx(scale: int = 10, degree: int = 8, eps: float = 0.05,
     return record
 
 
+def _parse_mesh_spec(spec: str) -> Tuple[int, ...]:
+    """``"DxM"`` → (data, model) sizes, ``"PxDxM"`` → (pod, data, model).
+
+    Mirrors ``launch.bc_run.build_mesh``'s validation but stays jax-free
+    and local: ``main`` must know the device count *before* anything
+    imports jax (to set XLA_FLAGS), and importing bc_run pulls in
+    ``repro.core`` and hence jax at module scope.
+    """
+    try:
+        dims = tuple(int(d) for d in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects DxM or PxDxM (e.g. 2x2), got "
+                         f"{spec!r}")
+    if len(dims) not in (2, 3) or min(dims) < 1:
+        raise SystemExit(f"--mesh expects 2 or 3 positive axis sizes, got "
+                         f"{spec!r}")
+    return dims
+
+
+def bench_mesh_epochs(scale: int = 10, degree: int = 8, eps: float = 0.05,
+                      delta: float = 0.1, nb: int = 64, rule: str = "normal",
+                      seed: int = 0, mesh_shape: Tuple[int, ...] = (1, 1),
+                      iters: int = 64) -> Dict:
+    """Adaptive stopping on the mesh path vs single host vs Hoeffding.
+
+    Runs the same (ε, δ) adaptive estimator through the single-host
+    moments step and the distributed mesh moments step, and reports for
+    each: epochs-to-converge, samples drawn, and ``samples_saved`` —
+    how far under the fixed Hoeffding budget (the mesh path's old
+    ceiling) the empirical-Bernstein/CLT stopping rule got.
+
+    Timing caveat: the single-host leg is jit-warmed (one capped run)
+    so its ``seconds`` is steady-state, but the mesh leg's ``seconds``
+    necessarily includes step preparation + shard_map compilation —
+    ``approx_bc(mesh=...)`` builds a fresh jitted step per call, so
+    that cost is paid by every real caller and excluding it would
+    flatter the mesh path. Epochs and samples are the apples-to-apples
+    comparison; seconds are per-path end-to-end latencies.
+    """
+    import jax
+
+    from repro.approx import approx_bc, hoeffding_budget
+    from repro.graphs.generators import rmat
+
+    g = rmat(scale, degree, seed=seed)
+    g, _ = g.remove_isolated()
+    names = (("data", "model") if len(mesh_shape) == 2
+             else ("pod", "data", "model"))
+    need = 1
+    for d in mesh_shape:
+        need *= d
+    n_dev = len(jax.devices())
+    if need != n_dev:
+        raise SystemExit(f"mesh shape {mesh_shape} needs {need} devices, "
+                         f"jax sees {n_dev}")
+    mesh = jax.make_mesh(mesh_shape, names)
+    budget = hoeffding_budget(g.n, eps, delta)
+
+    # jit warm-up for the single-host step (the mesh step compiles per
+    # call — see the timing caveat above).
+    approx_bc(g, eps=eps, delta=delta, rule=rule, n_b=nb,
+              max_samples=nb, seed=seed + 1)
+
+    def one(tag, **kw):
+        t0 = time.time()
+        res = approx_bc(g, eps=eps, delta=delta, rule=rule, n_b=nb,
+                        seed=seed, **kw)
+        return {
+            "path": tag,
+            "n_samples": res.n_samples,
+            "n_epochs": res.n_epochs,
+            "converged": res.converged,
+            "has_moments": res.has_moments,
+            "samples_saved": budget - res.n_samples,
+            "seconds": time.time() - t0,
+        }
+
+    host = one("single_host")
+    dist = one("mesh", mesh=mesh, iters=iters)
+    return {
+        "n": g.n,
+        "m": g.m,
+        "eps": eps,
+        "delta": delta,
+        "rule": rule,
+        "mesh_shape": list(mesh_shape),
+        "hoeffding_budget": budget,
+        "hoeffding_epochs": -(-budget // nb),
+        "single_host": host,
+        "mesh": dist,
+    }
+
+
 def main(argv=None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=10)
@@ -98,12 +201,31 @@ def main(argv=None) -> Dict:
     ap.add_argument("--out", default="BENCH_approx.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (scale 8)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="DxM or PxDxM axis sizes for the epoch benchmark "
+                         "(forces fake host devices when needed)")
+    ap.add_argument("--mesh-iters", type=int, default=64,
+                    help="static sweep bound for the mesh step")
     args = ap.parse_args(argv)
+
+    mesh_shape = _parse_mesh_spec(args.mesh)
+    n_dev = 1
+    for d in mesh_shape:
+        n_dev *= d
+    if n_dev > 1 and "jax" not in sys.modules:
+        # Must happen before jax initializes; all repro imports are lazy.
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n_dev} "
+            + os.environ.get("XLA_FLAGS", ""))
 
     scale = 8 if args.smoke else args.scale
     rec = bench_bc_approx(scale=scale, degree=args.degree, eps=args.eps,
                           delta=args.delta, k=args.k, nb=args.nb,
                           rule=args.rule, seed=args.seed)
+    rec["mesh_epochs"] = bench_mesh_epochs(
+        scale=scale, degree=args.degree, eps=args.eps, delta=args.delta,
+        nb=args.nb, rule=args.rule, seed=args.seed, mesh_shape=mesh_shape,
+        iters=args.mesh_iters)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
     print(f"[bc_approx] n={rec['n']} m={rec['m']} "
@@ -114,6 +236,13 @@ def main(argv=None) -> Dict:
     print(f"[bc_approx] top-{rec['k']} precision {rec['topk_precision']:.2f} "
           f"spearman {rec['spearman']:.3f} "
           f"max_norm_err {rec['max_norm_err']:.4f} (eps {rec['eps']})")
+    me = rec["mesh_epochs"]
+    print(f"[bc_approx] mesh {args.mesh}: "
+          f"{me['mesh']['n_samples']} samples in {me['mesh']['n_epochs']} "
+          f"epochs (single-host {me['single_host']['n_samples']} in "
+          f"{me['single_host']['n_epochs']}) vs Hoeffding budget "
+          f"{me['hoeffding_budget']} ({me['hoeffding_epochs']} epochs) — "
+          f"saved {me['mesh']['samples_saved']} samples")
     print(f"[bc_approx] wrote {args.out}")
     return rec
 

@@ -77,11 +77,17 @@ def bench_sec52_spgemm() -> None:
 
 def bench_bc_approx() -> None:
     from benchmarks.bc_approx import bench_bc_approx as bench
+    from benchmarks.bc_approx import bench_mesh_epochs
 
     r = bench(scale=8, nb=64)  # smoke-sized inside the CSV sweep
     _row(f"approx_{r['name']}", r["seconds_approx"] * 1e6,
          f"speedup={r['speedup']:.2f}x;topk_prec={r['topk_precision']:.2f};"
          f"spearman={r['spearman']:.3f};samples={r['n_samples']}")
+    m = bench_mesh_epochs(scale=8, nb=64)
+    _row("approx_mesh_epochs_s8", m["mesh"]["seconds"] * 1e6,
+         f"epochs={m['mesh']['n_epochs']};samples={m['mesh']['n_samples']};"
+         f"hoeffding={m['hoeffding_budget']};"
+         f"saved={m['mesh']['samples_saved']}")
 
 
 def bench_kernels() -> None:

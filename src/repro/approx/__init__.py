@@ -33,7 +33,10 @@ Mapping to 1910.11039 (their ADS algorithm, itself a KADABRA descendant):
 * **distributed epochs** — the batch step is mesh-oblivious: the driver
   runs epochs through the single-host step or through
   ``core.dist_bc.build_mfbc_step`` (Theorem 5.1 collectives), matching the
-  paper's MPI scaling story.
+  paper's MPI scaling story. Both paths return per-vertex (Σδ, Σδ²) — the
+  mesh step fuses the Σδ² reduction into the same stacked all-reduce as
+  Σδ — so empirical-Bernstein/CLT adaptive stopping works identically at
+  pod scale (no Hoeffding fallback).
 
 ``driver.approx_bc`` is the entry point; ``launch.bc_run --approx`` and
 ``serve.bc_service`` wrap it for CLI and serving use.
@@ -42,11 +45,11 @@ from repro.approx.driver import ApproxResult, approx_bc, choose_sample_batch
 from repro.approx.sampling import (AdaptiveSampler, UniformSampler,
                                    allocate_delta, bernstein_halfwidth,
                                    epoch_schedule, hoeffding_budget,
-                                   hoeffding_halfwidth, normal_halfwidth)
+                                   normal_halfwidth)
 
 __all__ = [
     "ApproxResult", "approx_bc", "choose_sample_batch",
     "AdaptiveSampler", "UniformSampler", "allocate_delta",
     "bernstein_halfwidth", "epoch_schedule", "hoeffding_budget",
-    "hoeffding_halfwidth", "normal_halfwidth",
+    "normal_halfwidth",
 ]

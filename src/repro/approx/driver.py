@@ -61,6 +61,7 @@ class ApproxResult:
     eps: float
     delta: float
     rule: str
+    has_moments: bool = True  # CIs backed by real Σδ² (always, since PR 2)
 
     def topk(self, k: int) -> np.ndarray:
         """Vertex ids of the k largest estimates, descending."""
@@ -75,26 +76,39 @@ class ApproxResult:
 class LambdaEstimator:
     """Running moments of per-source dependencies, with CIs.
 
-    ``has_moments=False`` marks estimators fed only first moments (the
-    distributed step): CIs fall back to the variance-free Hoeffding bound
-    instead of trusting a zeroed Σδ².
+    The (Σδ, Σδ²) contract: every batch step feeding this estimator —
+    single-host ``core.mfbc.mfbc_batch_moments`` and the distributed
+    ``core.dist_bc.prepare_mesh_batch_step(..., moments=True)`` — returns
+    per-vertex first and second moments of the *unnormalized* dependency
+    ``δ_s(v) ∈ [0, n-2]`` summed over the batch's valid sources:
+    ``S1(v) = Σ_s δ_s(v)`` and ``S2(v) = Σ_s δ_s(v)²``. ``update`` folds
+    them into running sums; halfwidths are computed on the normalized
+    scale ``x_s(v) = δ_s(v)/(n-2) ∈ [0, 1]`` (divide S1 by n-2, S2 by
+    (n-2)²). Since PR 2 the mesh path supplies real second moments too,
+    so variance-based (Bernstein/CLT) stopping is available everywhere
+    and the old first-moments-only Hoeffding fallback is gone.
+
+    Stopping rule per code path: ``rule="bernstein"`` — rigorous
+    empirical-Bernstein CIs (``sampling.bernstein_halfwidth``), the
+    default of ``approx_bc`` and ``launch.bc_run --approx``;
+    ``rule="normal"`` — CLT profile (``sampling.normal_halfwidth``), the
+    ``serve.bc_service`` default. Both consume the same (Σδ, Σδ²) sums.
     """
 
-    def __init__(self, n: int, eps: float, delta: float, rule: str,
-                 has_moments: bool = True):
+    def __init__(self, n: int, eps: float, delta: float, rule: str):
         if rule not in ("bernstein", "normal"):
             raise ValueError(f"unknown stopping rule {rule!r}")
         self.n = n
         self.eps = eps
         self.delta = delta
         self.rule = rule
-        self.has_moments = has_moments
         self.s1 = np.zeros(n, dtype=np.float64)
         self.s2 = np.zeros(n, dtype=np.float64)
         self.tau = 0
 
     def update(self, s1_batch: np.ndarray, s2_batch: np.ndarray,
                n_valid: int) -> None:
+        """Fold one batch's (S1, S2) sums over ``n_valid`` sources in."""
         self.s1 += s1_batch
         self.s2 += s2_batch
         self.tau += n_valid
@@ -113,9 +127,6 @@ class LambdaEstimator:
         shrink fastest.
         """
         d = self.delta if delta is None else delta
-        if not self.has_moments:
-            return np.full(self.n, S.hoeffding_halfwidth(self.tau,
-                                                         d / self.n))
         c = self._norm()
         x1, x2 = self.s1 / c, self.s2 / (c * c)
         tau = max(self.tau, 2)
@@ -127,7 +138,14 @@ class LambdaEstimator:
         return fn(x1, x2, self.tau, delta_v)
 
     def lam_scaled(self) -> np.ndarray:
-        """λ̂(v) = (n/τ)·S1(v)."""
+        """λ̂(v) = (n/τ)·S1(v) — unnormalized λ units.
+
+        Same ordered-pair convention as ``core.mfbc.mfbc`` (λ(v) =
+        Σ_s δ_s(v), endpoints excluded): the Horvitz–Thompson scale-up
+        n/τ makes the uniform-source sample mean unbiased for λ. Divide
+        by n·(n-2) to land on the normalized [0, 1] scale that ``eps``
+        is quoted on.
+        """
         return self.s1 * (self.n / max(self.tau, 1))
 
     def hw_scaled(self, hw_normalized: np.ndarray) -> np.ndarray:
@@ -169,6 +187,12 @@ def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
     otherwise). With a ``budget_hint`` (e.g. the first epoch's length)
     candidates larger than the whole budget only waste padded rows and
     are skipped.
+
+    Both sampling paths consult this: ``p=1`` for the single-host
+    ``mfbc_batch_moments`` step, ``p=mesh.devices.size`` for the
+    distributed moments step (whose P(model, data)-sharded adjacency
+    divides the per-device footprint by p; ``prepare_mesh_batch_step``
+    then rounds the chosen n_b up to a mesh-divisible count).
     """
     from repro.spgemm.autotune import choose_bc_regime
 
@@ -253,8 +277,10 @@ def approx_bc(g: Graph, *, eps: float = 0.05, delta: float = 0.1,
         (relative-error early exit).
       mesh: optional jax device mesh — epochs run through the distributed
         Theorem 5.1 batch step instead of the single-host one. The mesh
-        step has no per-sample second moments, so the strategy is forced
-        to "uniform" and CIs use the variance-free Hoeffding bound.
+        step returns real per-vertex (Σδ, Σδ²) (one fused all-reduce per
+        batch), so adaptive Bernstein/CLT stopping and variance-weighted
+        δ allocation work identically at pod scale — the result reports
+        ``has_moments=True`` on both paths.
       max_samples: hard cap overriding the Hoeffding budget cap.
       progress_cb: optional callback(epoch, tau, max_halfwidth).
 
@@ -270,29 +296,20 @@ def approx_bc(g: Graph, *, eps: float = 0.05, delta: float = 0.1,
                                          budget_hint=hoeffding))
     cap = max_samples if max_samples is not None else None
 
-    dist_run = None
     if mesh is not None:
         from repro.core.dist_bc import prepare_mesh_batch_step
 
-        dist_run, n_b = prepare_mesh_batch_step(
+        step, n_b = prepare_mesh_batch_step(
             g, mesh, nb=n_b, iters=iters if iters > 0 else n,
-            use_kernel=use_kernel, block=block)
-        # The mesh step folds sources on-device and returns only Σδ (no
-        # second moment): variance-based adaptive CIs are unavailable for
-        # ANY rule — run the fixed uniform budget with Hoeffding CIs.
-        strategy = "uniform"
+            use_kernel=use_kernel, block=block, moments=True)
     else:
         step = _single_host_step(g, backend, block, use_kernel)
 
-    est = LambdaEstimator(n, eps, delta, rule, has_moments=dist_run is None)
+    est = LambdaEstimator(n, eps, delta, rule)
 
     def run_batch(b: S.SampleBatch) -> None:
-        if dist_run is not None:
-            s1 = dist_run(b.sources, b.valid)
-            est.update(s1, np.zeros_like(s1), b.n_valid)
-        else:
-            s1, s2, _ = step(b.sources, b.valid)
-            est.update(s1, s2, b.n_valid)
+        s1, s2, _ = step(b.sources, b.valid)
+        est.update(s1, s2, b.n_valid)
 
     def honest_converged() -> bool:
         """A cap below the Hoeffding budget carries no a-priori guarantee

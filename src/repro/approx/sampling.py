@@ -10,7 +10,10 @@ Stopping rules (all on the normalized scale, see ``approx/__init__``):
 
 * ``hoeffding_budget`` — a-priori sample count ``τ ≥ ln(2n/δ)/(2ε²)``
   such that P(∃v: |x̄(v) − μ(v)| > ε) ≤ δ. The uniform strategy's fixed
-  budget and the adaptive strategy's hard cap.
+  budget and the adaptive strategy's hard cap. (A per-τ Hoeffding CI
+  used to back the moments-free mesh path; since the distributed step
+  returns (Σδ, Σδ²) that fallback is gone and the budget is the only
+  Hoeffding artifact left.)
 * ``bernstein_halfwidth`` — empirical-Bernstein CI [Maurer & Pontil 2009]
   with the failure budget union-bounded across vertices
   (δ_v = δ/n), the rule of 1910.11039 Alg. 1: adaptive sampling stops as
@@ -68,17 +71,6 @@ def allocate_delta(var: np.ndarray, delta: float) -> np.ndarray:
     if total <= 0.0:
         return np.full(n, delta / n)
     return delta * (0.5 / n + 0.5 * var / total)
-
-
-def hoeffding_halfwidth(tau: int, delta_v) -> np.ndarray:
-    """Variance-free CI halfwidth √(ln(2/δ_v)/(2τ)) for [0,1] samples.
-
-    Used when only first moments are available (the distributed batch
-    step folds sources on-device and returns Σδ, not Σδ²).
-    """
-    tau = max(tau, 1)
-    return np.sqrt(np.log(2.0 / np.asarray(delta_v, np.float64))
-                   / (2.0 * tau))
 
 
 def bernstein_halfwidth(s1: np.ndarray, s2: np.ndarray, tau: int,

@@ -210,9 +210,17 @@ def _seed_multpath(cfg, sources_loc, n):
                     jnp.where(hit, 1.0, 0.0).astype(jnp.float32))
 
 
-def _batch_step_local(cfg: BCMeshConfig, a_loc, at_loc, sources_loc,
-                      valid_loc):
-    """The full Algorithm 3 batch, local (per-device) view."""
+def _batch_delta_local(cfg: BCMeshConfig, a_loc, at_loc, sources_loc,
+                       valid_loc):
+    """The full Algorithm 3 batch, local (per-device) view.
+
+    Returns ``(contrib, mask)`` with ``contrib[s, v] = δ_s(v)`` for this
+    device's source rows and vertex columns (zeroed on unreachable and
+    padding entries) and ``mask[s, v] = [v reachable from s ∧ s valid]``.
+    The Σδ-only (``_batch_step_local``) and moments
+    (``_batch_step_moments_local``) entry points share this body; only
+    their final reductions differ.
+    """
     n = cfg.n
     # ---- MFBF ----
     seed = _seed_multpath(cfg, sources_loc, n)
@@ -272,28 +280,65 @@ def _batch_step_local(cfg: BCMeshConfig, a_loc, at_loc, sources_loc,
     else:
         Zp, _, _, _ = jax.lax.fori_loop(0, cfg.iters_br, br_body, state0)
 
-    # ---- λ accumulation: sum over local sources, then over batch axes ----
-    contrib = jnp.where(finite & valid_loc[:, None], Zp * T.m, 0.0)
+    mask = finite & valid_loc[:, None]
+    contrib = jnp.where(mask, Zp * T.m, 0.0)
+    return contrib, mask
+
+
+def _batch_step_local(cfg: BCMeshConfig, a_loc, at_loc, sources_loc,
+                      valid_loc):
+    """Σδ-only batch step (the exact all-sources sweep's reduction)."""
+    contrib, _ = _batch_delta_local(cfg, a_loc, at_loc, sources_loc,
+                                    valid_loc)
+    # λ accumulation: sum over local sources, then over the batch axes.
     lam_part = jnp.sum(contrib, axis=0)  # (n/model,)
-    lam = jax.lax.psum(lam_part, cfg.data_axis)
-    if cfg.pod_axis is not None:
-        lam = jax.lax.psum(lam, cfg.pod_axis)
-    return lam
+    return jax.lax.psum(lam_part, cfg.batch_axes)
 
 
-def build_mfbc_step(mesh: Mesh, cfg: BCMeshConfig):
-    """Returns a jit'd ``step(a, a_t, sources, valid) -> λ`` on ``mesh``.
+def _batch_step_moments_local(cfg: BCMeshConfig, a_loc, at_loc, sources_loc,
+                              valid_loc):
+    """Moments batch step: per-vertex (Σδ, Σδ², n_reach) over the batch.
+
+    The mesh analogue of ``core.mfbc.mfbc_batch_moments``: instead of
+    folding sources into a pre-summed λ, the step keeps the per-source
+    dependency rows long enough to also square them, then reduces all
+    three statistics in a *single* stacked ``psum`` over the batch axes —
+    one fused all-reduce of 3·n/model floats per batch, not a second
+    collective per source. This is what lets the adaptive approximate-BC
+    estimator run empirical-Bernstein/CLT stopping at pod scale (ROADMAP
+    "Distributed sampling epochs with second moments").
+    """
+    contrib, mask = _batch_delta_local(cfg, a_loc, at_loc, sources_loc,
+                                       valid_loc)
+    stats = jnp.stack([
+        jnp.sum(contrib, axis=0),                       # S1 = Σ_s δ_s(v)
+        jnp.sum(contrib * contrib, axis=0),             # S2 = Σ_s δ_s(v)²
+        jnp.sum(mask, axis=0).astype(jnp.float32),      # n_reach
+    ])  # (3, n/model)
+    return jax.lax.psum(stats, cfg.batch_axes)
+
+
+def build_mfbc_step(mesh: Mesh, cfg: BCMeshConfig, *, moments: bool = False):
+    """Returns a jit'd distributed batch step on ``mesh``.
 
     a / a_t: (n, n) dense adjacency and its transpose, laid out
     P(model, data) (replicated over pod). sources/valid: (nb,) laid out
-    P((pod, data)). λ: (n,) sharded over model.
+    P((pod, data)).
+
+    With ``moments=False`` the step returns λ: (n,) sharded over model
+    (the exact sweep's Σδ). With ``moments=True`` it returns a (3, n)
+    stack of (Σδ, Σδ², n_reach) sharded over model in the vertex
+    dimension — the distributed counterpart of
+    ``core.mfbc.mfbc_batch_moments``.
     """
     state_spec, adj_spec, src_spec, lam_spec = cfg.specs()
+    body = _batch_step_moments_local if moments else _batch_step_local
+    out_spec = P(None, cfg.model_axis) if moments else lam_spec
     fn = shard_map(
-        functools.partial(_batch_step_local, cfg),
+        functools.partial(body, cfg),
         mesh=mesh,
         in_specs=(adj_spec, adj_spec, src_spec, src_spec),
-        out_specs=lam_spec,
+        out_specs=out_spec,
         check_vma=False,
     )
     return jax.jit(fn)
@@ -327,14 +372,27 @@ def vertex_row_permutation(n: int, d_sz: int, m_sz: int):
 
 
 def prepare_mesh_batch_step(g, mesh: Mesh, *, nb: int, iters: int = 0,
-                            use_kernel: bool = False, block: int = 512):
+                            use_kernel: bool = False, block: int = 512,
+                            moments: bool = False):
     """Shared host-side mesh setup: pad, permute, shard, jit.
 
-    Returns ``(run, nb_pad)`` where ``run(sources, valid) -> λ_partial``
-    takes host arrays of up to ``nb_pad`` sources (shorter inputs are
-    zero-padded with ``valid=False``) and returns the batch's λ
-    contribution in *original* vertex order, length ``g.n``. Used by both
-    the exact sweep (``dist_mfbc``) and the approximate-BC driver.
+    Returns ``(run, nb_pad)`` where ``run`` takes host arrays of up to
+    ``nb_pad`` sources (shorter inputs are zero-padded with
+    ``valid=False``) and returns results in *original* vertex order,
+    length ``g.n``:
+
+    * ``moments=False`` (the exact sweep, ``dist_mfbc``):
+      ``run(sources, valid) -> λ_partial`` — the batch's Σδ contribution,
+      float64 (n,).
+    * ``moments=True`` (the adaptive approximate-BC driver): ``run(sources,
+      valid) -> (S1, S2, n_reach)`` with ``S1(v) = Σ_s δ_s(v)`` and
+      ``S2(v) = Σ_s δ_s(v)²`` over the batch's valid sources and
+      ``n_reach(v)`` the count of sources that reach v — the same
+      (Σδ, Σδ²) contract as ``core.mfbc.mfbc_batch_moments``, so
+      ``approx.driver.LambdaEstimator`` can run Bernstein/CLT stopping
+      on the mesh path. The Σδ² reduction rides the same fused all-reduce
+      as Σδ (see ``_batch_step_moments_local``), so the extra
+      communication is one stacked psum per batch.
     """
     import numpy as np
 
@@ -356,23 +414,33 @@ def prepare_mesh_batch_step(g, mesh: Mesh, *, nb: int, iters: int = 0,
     nb_pad = -(-nb // (p_sz * d_sz)) * (p_sz * d_sz)
     cfg = BCMeshConfig(n=n_pad, nb=nb_pad, iters_bf=iters, iters_br=iters,
                        pod_axis=pod, use_kernel=use_kernel, block=block)
-    step = build_mfbc_step(mesh, cfg)
+    step = build_mfbc_step(mesh, cfg, moments=moments)
     sh_a, sh_at, sh_src, sh_val = input_shardings(mesh, cfg)
     a_dev = jax.device_put(jnp.asarray(a[perm, :]), sh_a)
     at_dev = jax.device_put(jnp.asarray(a.T[perm, :]), sh_at)
 
-    def run(sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
+    def _device_call(sources: np.ndarray, valid: np.ndarray):
         src = np.zeros(nb_pad, np.int32)
         val = np.zeros(nb_pad, bool)
         k = min(sources.shape[0], nb_pad)
         src[:k], val[:k] = sources[:k], valid[:k]
-        lam_b = step(a_dev, at_dev, jax.device_put(jnp.asarray(src), sh_src),
-                     jax.device_put(jnp.asarray(val), sh_val))
+        return step(a_dev, at_dev, jax.device_put(jnp.asarray(src), sh_src),
+                    jax.device_put(jnp.asarray(val), sh_val))
+
+    def run(sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        lam_b = _device_call(sources, valid)
         lam = np.zeros(n_pad, dtype=np.float64)
         lam[perm] = np.asarray(lam_b, np.float64)  # undo the permutation
         return lam[:g.n]
 
-    return run, nb_pad
+    def run_moments(sources: np.ndarray, valid: np.ndarray):
+        stats_b = _device_call(sources, valid)
+        stats = np.zeros((3, n_pad), dtype=np.float64)
+        stats[:, perm] = np.asarray(stats_b, np.float64)  # undo permutation
+        return (stats[0, :g.n], stats[1, :g.n],
+                stats[2, :g.n].astype(np.int64))
+
+    return (run_moments if moments else run), nb_pad
 
 
 def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,

@@ -1,5 +1,6 @@
 from repro.graphs.formats import Graph, coo_to_csr, coo_to_dense, pad_edges
-from repro.graphs.generators import erdos_renyi, rmat, uniform_random, ring_of_cliques
+from repro.graphs.generators import (erdos_renyi, rmat, uniform_random,
+                                     ring_of_cliques, star_graph)
 
 __all__ = [
     "Graph",
@@ -10,4 +11,5 @@ __all__ = [
     "rmat",
     "uniform_random",
     "ring_of_cliques",
+    "star_graph",
 ]

@@ -102,6 +102,24 @@ def ring_of_cliques(n_cliques: int, clique_size: int, *, weighted: bool = False,
                  name=f"roc_{n_cliques}x{clique_size}").dedup()
 
 
+def star_graph(n: int, *, weighted: bool = False, seed: int = 0,
+               max_weight: int = 10) -> Graph:
+    """Hub vertex 0 joined to ``n-1`` leaves.
+
+    The adaptive sampler's best case: every leaf source has the identical
+    dependency profile (δ_s(hub) = n-2, zero elsewhere), so the empirical
+    variance collapses and Bernstein/CLT stopping certifies ε long before
+    the variance-free Hoeffding budget is spent.
+    """
+    rng = np.random.default_rng(seed)
+    leaves = np.arange(1, n, dtype=np.int32)
+    src = np.concatenate([np.zeros(n - 1, np.int32), leaves])
+    dst = np.concatenate([leaves, np.zeros(n - 1, np.int32)])
+    half = _weights(rng, n - 1, weighted, max_weight)
+    w = np.concatenate([half, half])
+    return Graph(n, src, dst, w, directed=False, name=f"star_{n}")
+
+
 def path_graph(n: int, *, weighted: bool = False, seed: int = 0,
                max_weight: int = 10) -> Graph:
     rng = np.random.default_rng(seed)

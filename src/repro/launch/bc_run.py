@@ -11,11 +11,18 @@ Approximate mode (adaptive source sampling, see ``repro.approx``):
 
   PYTHONPATH=src python -m repro.launch.bc_run --graph rmat --scale 10 \
       --approx 0.05,0.1 [--topk 10] [--strategy adaptive|uniform] \
-      [--rule bernstein|normal]
+      [--rule bernstein|normal] [--mesh DxM | PxDxM]
 
 ``--approx eps,delta`` replaces the exact all-sources sweep with the
 epoch-doubling sampler and prints the top-k central vertices with their
 confidence intervals.
+
+``--mesh`` runs the sampling epochs through the distributed Theorem 5.1
+moments step instead of the single-host one: ``--mesh 2x4`` maps (data=2,
+model=4), ``--mesh 2x2x2`` maps (pod=2, data=2, model=2). The axis-size
+product must equal the visible jax device count. Since the mesh step
+returns per-vertex (Σδ, Σδ²), adaptive Bernstein/CLT stopping works
+unchanged at mesh scale — no Hoeffding fallback.
 """
 from __future__ import annotations
 
@@ -42,6 +49,31 @@ def build_graph(args):
     raise ValueError(args.graph)
 
 
+def build_mesh(spec: str):
+    """``"DxM"`` → (data, model) mesh; ``"PxDxM"`` → (pod, data, model)."""
+    import jax
+
+    try:
+        dims = tuple(int(d) for d in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects DxM or PxDxM (e.g. 2x4), got "
+                         f"{spec!r}")
+    if len(dims) == 2:
+        names = ("data", "model")
+    elif len(dims) == 3:
+        names = ("pod", "data", "model")
+    else:
+        raise SystemExit(f"--mesh expects 2 or 3 axis sizes, got {spec!r}")
+    n_dev = len(jax.devices())
+    need = 1
+    for d in dims:
+        need *= d
+    if need != n_dev:
+        raise SystemExit(f"--mesh {spec} needs {need} devices, "
+                         f"jax sees {n_dev}")
+    return jax.make_mesh(dims, names)
+
+
 def run_approx(args, g):
     """Adaptive-sampling approximate BC + top-k report (repro.approx)."""
     from repro.approx import approx_bc
@@ -56,8 +88,10 @@ def run_approx(args, g):
     if not (0 < eps < 1 and 0 < delta < 1):
         raise SystemExit(f"--approx eps and delta must be in (0, 1), got "
                          f"eps={eps} delta={delta}")
+    mesh = build_mesh(args.mesh) if args.mesh else None
     print(f"[bc] approx mode: eps={eps} delta={delta} "
-          f"strategy={args.strategy} rule={args.rule}")
+          f"strategy={args.strategy} rule={args.rule}"
+          + (f" mesh={args.mesh}" if args.mesh else ""))
 
     def progress(epoch, tau, max_hw):
         print(f"[bc] epoch {epoch}: tau={tau} max_halfwidth={max_hw:.4f}")
@@ -67,7 +101,7 @@ def run_approx(args, g):
                     rule=args.rule, backend=args.backend,
                     use_kernel=args.use_kernel, topk=args.topk,
                     n_b=args.nb or None,  # 0 = cost-model pick
-                    seed=args.seed,
+                    seed=args.seed, mesh=mesh, iters=args.iters,
                     max_samples=args.max_samples or None,
                     progress_cb=progress)
     dt = time.time() - t0
@@ -121,7 +155,16 @@ def main(argv=None):
     ap.add_argument("--rule", default="bernstein",
                     choices=["bernstein", "normal"])
     ap.add_argument("--max-samples", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="DxM or PxDxM axis sizes — run --approx epochs "
+                         "through the distributed moments step")
+    ap.add_argument("--iters", type=int, default=0,
+                    help="static sweep bound for --mesh (0 = graph size)")
     args = ap.parse_args(argv)
+
+    if args.mesh and not args.approx:
+        raise SystemExit("--mesh requires --approx (the exact mesh sweep "
+                         "is examples/bc_distributed.py)")
 
     g = build_graph(args)
     g, _ = g.remove_isolated()

@@ -13,6 +13,11 @@ Graphs are registered up front (like model weights); their jitted batch
 steps and device-resident adjacencies are built lazily and shared across
 every request that names them — the serving-side amortization that makes
 "BC from millions of users" viable.
+
+With a ``mesh``, epochs run through the distributed Theorem 5.1 moments
+step (``core.dist_bc.prepare_mesh_batch_step(..., moments=True)``): the
+same (Σδ, Σδ²) estimator contract, so adaptive Bernstein/CLT stopping —
+and its early-exit latency wins — carry over to pod-scale graphs.
 """
 from __future__ import annotations
 
@@ -64,12 +69,21 @@ class _Job:
 
 
 class BCService:
-    """Slot-scheduled approximate-BC query service (single host)."""
+    """Slot-scheduled approximate-BC query service.
+
+    ``mesh=None`` serves from the single-host batch step; with a jax
+    device mesh every registered graph's step is the distributed moments
+    step instead (identical (S1, S2, n_reach) signature, so the slot
+    loop is mesh-oblivious). ``iters`` bounds the mesh step's static
+    forward/backward sweeps (0 = graph size, always safe).
+    """
 
     def __init__(self, graphs: Dict[str, Graph], *, n_slots: int = 4,
-                 backend: str = "dense"):
+                 backend: str = "dense", mesh=None, iters: int = 0):
         self.graphs = dict(graphs)
         self.backend = backend
+        self.mesh = mesh
+        self.iters = iters
         self.n_slots = n_slots
         self.slots: List[Optional[_Job]] = [None] * n_slots
         self.queue: Deque[BCRequest] = deque()
@@ -86,8 +100,20 @@ class BCService:
     def _graph_step(self, name: str):
         if name not in self._steps:
             g = self.graphs[name]
-            self._nb[name] = min(g.n, choose_sample_batch(g.n, g.m))
-            self._steps[name] = _single_host_step(g, self.backend, 512, False)
+            if self.mesh is not None:
+                from repro.core.dist_bc import prepare_mesh_batch_step
+
+                p = int(self.mesh.devices.size)
+                nb = min(g.n, choose_sample_batch(g.n, g.m, p=p))
+                step, nb = prepare_mesh_batch_step(
+                    g, self.mesh, nb=nb,
+                    iters=self.iters if self.iters > 0 else g.n,
+                    moments=True)
+                self._steps[name], self._nb[name] = step, nb
+            else:
+                self._nb[name] = min(g.n, choose_sample_batch(g.n, g.m))
+                self._steps[name] = _single_host_step(g, self.backend, 512,
+                                                      False)
         return self._steps[name], self._nb[name]
 
     def _admit(self) -> None:

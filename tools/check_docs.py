@@ -1,0 +1,107 @@
+"""Staleness checker for the prose docs (README.md + docs/).
+
+Architecture and algorithm specs carry HTML comments tying each section
+to the source of truth they describe:
+
+    <!-- staleness-marker: src/repro/core/dist_bc.py:prepare_mesh_batch_step -->
+
+This script fails (exit 1) when any marker's target rots:
+
+* the file path (relative to the repo root) no longer exists, or
+* the symbol — ``def``/``class``/module-level assignment, a dotted
+  ``Class.method``, or a literal ``--cli-flag`` — no longer appears in
+  that file.
+
+It also enforces coverage inside ``docs/``: every ``##`` section of every
+markdown file there must contain at least one marker, so new sections
+cannot be added without naming the code they document. CI runs this next
+to ruff (see .github/workflows/ci.yml); run locally with
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MARKER = re.compile(r"<!--\s*staleness-marker:\s*([^\s:]+?)"
+                    r"(?::([A-Za-z_][\w.]*|--[\w-]+))?\s*-->")
+SECTION = re.compile(r"^##\s+(.+)$", re.MULTILINE)
+
+
+def _symbol_defined(text: str, symbol: str) -> bool:
+    """True iff ``symbol`` is still defined (or present, for flags)."""
+    if symbol.startswith("--"):
+        return symbol in text
+    parts = symbol.split(".")
+    for part in parts:
+        pat = re.compile(
+            rf"(?:^|\s)(?:def|class)\s+{re.escape(part)}\b"
+            rf"|^{re.escape(part)}\s*[:=]", re.MULTILINE)
+        if not pat.search(text):
+            return False
+    return True
+
+
+def check_markers(md_path: Path) -> tuple[list[str], int]:
+    """Returns (errors, marker count) for one markdown file."""
+    errors = []
+    text = md_path.read_text()
+    rel = md_path.relative_to(REPO)
+    markers = MARKER.findall(text)
+    if not markers:
+        errors.append(f"{rel}: no staleness markers at all")
+    for target, symbol in markers:
+        target_path = REPO / target
+        if not target_path.is_file():
+            errors.append(f"{rel}: marker target {target} does not exist")
+            continue
+        if symbol and not _symbol_defined(target_path.read_text(), symbol):
+            errors.append(f"{rel}: symbol {symbol!r} not found in {target}")
+    return errors, len(markers)
+
+
+def check_section_coverage(md_path: Path) -> list[str]:
+    """Every ## section of a docs/ file must contain >= 1 marker."""
+    errors = []
+    text = md_path.read_text()
+    rel = md_path.relative_to(REPO)
+    heads = list(SECTION.finditer(text))
+    for i, head in enumerate(heads):
+        end = heads[i + 1].start() if i + 1 < len(heads) else len(text)
+        if not MARKER.search(text, head.end(), end):
+            errors.append(f"{rel}: section {head.group(1)!r} has no "
+                          f"staleness marker")
+    return errors
+
+
+def main() -> int:
+    docs = sorted((REPO / "docs").rglob("*.md")) if (REPO / "docs").is_dir() \
+        else []
+    readme = REPO / "README.md"
+    files = ([readme] if readme.is_file() else []) + docs
+    if not files:
+        print("check_docs: no README.md or docs/ found", file=sys.stderr)
+        return 1
+    errors: list[str] = []
+    n_markers = 0
+    for f in files:
+        errs, n = check_markers(f)
+        errors += errs
+        n_markers += n
+    for f in docs:
+        errors += check_section_coverage(f)
+    if errors:
+        for e in errors:
+            print(f"check_docs: STALE  {e}", file=sys.stderr)
+        print(f"check_docs: {len(errors)} problem(s) in {len(files)} file(s)",
+              file=sys.stderr)
+        return 1
+    print(f"check_docs: OK — {n_markers} markers across {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
