@@ -1,19 +1,22 @@
 """Exact-vs-approximate BC benchmark (the new sampling workload).
 
-Runs exact MFBC (all n sources) and adaptive-sampling approximate BC
-(``repro.approx``) on the same R-MAT graph, reporting
+Both legs now run through the unified solver API: one
+``repro.bc.solve(graph, BCQuery(...))`` call per leg, with the chosen
+``BCPlan`` (backend, n_b, placement, predicted cost) recorded next to
+the timings — the perf trajectory captures planner decisions, not just
+seconds. Reports
 
 * ``speedup``        — t_exact / t_approx (both jit-warm),
 * ``topk_precision`` — |top-k(exact) ∩ top-k(approx)| / k,
 * ``spearman``       — rank correlation of λ̂ vs λ over all vertices,
 * ``max_norm_err``   — max_v |λ̂ − λ| / (n·(n−2)), comparable to ε,
+* ``plan`` / ``mesh_epochs.*.plan`` — the executed ``BCPlan`` records,
 
 plus a mesh-vs-single-host *epoch* comparison (``mesh_epochs`` record):
 both paths run the same adaptive estimator — the mesh step returns fused
-(Σδ, Σδ²) since PR 2 — so the numbers to watch are epochs-to-converge
-and ``samples_saved`` vs the fixed Hoeffding budget the mesh path used
-to be stuck with. Fewer sampling epochs = fewer distributed SpGEMM
-rounds for the same (ε, δ) guarantee.
+(Σδ, Σδ²) — so the numbers to watch are epochs-to-converge and
+``samples_saved`` vs the fixed Hoeffding budget. Fewer sampling epochs =
+fewer distributed SpGEMM rounds for the same (ε, δ) guarantee.
 
 Everything lands in ``BENCH_approx.json`` (consumed as a CI artifact;
 ``benchmarks.run`` prints the same numbers as CSV rows).
@@ -25,6 +28,7 @@ Everything lands in ``BENCH_approx.json`` (consumed as a CI artifact;
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -47,29 +51,39 @@ def bench_bc_approx(scale: int = 10, degree: int = 8, eps: float = 0.05,
                     delta: float = 0.1, k: int = 10, nb: int = 64,
                     rule: str = "normal", seed: int = 0) -> Dict:
     """One exact-vs-approx comparison; returns the BENCH record."""
-    from repro.approx import approx_bc
-    from repro.core import mfbc
-    from repro.graphs.generators import rmat
+    from repro.bc import BCQuery, solve
+    from repro.bc import plan as bc_plan
+    from repro.graphs.generators import from_spec
 
-    g = rmat(scale, degree, seed=seed)
+    g = from_spec("rmat", scale=scale, degree=degree, seed=seed)
     g, _ = g.remove_isolated()
+
+    # backend/n_b/placement pinned (comparability with earlier BENCH
+    # records, and fake mesh devices must not reroute the headline legs);
+    # the plan's ``regime`` field still records the planner's unpinned
+    # dense-vs-COO opinion.
+    exact_q = BCQuery(mode="exact", n_b=nb, backend="dense")
+    approx_q = BCQuery(mode="approx", eps=eps, delta=delta, rule=rule,
+                       n_b=nb, backend="dense", topk=k, seed=seed)
+    exact_pl = bc_plan(g, exact_q, n_devices=1)
+    approx_pl = bc_plan(g, approx_q, n_devices=1)
 
     # jit warm-up for both paths (one small restricted run each), so the
     # timed section measures steady-state batch throughput, not XLA.
-    mfbc(g, n_b=nb, backend="dense", sources=np.arange(nb))
-    approx_bc(g, eps=eps, delta=delta, rule=rule, n_b=nb,
-              max_samples=nb, seed=seed + 1)
+    solve(g, exact_q, plan=exact_pl, sources=np.arange(nb, dtype=np.int32))
+    solve(g, dataclasses.replace(approx_q, max_samples=nb, seed=seed + 1),
+          plan=approx_pl)
 
     t0 = time.time()
-    lam_exact = mfbc(g, n_b=nb, backend="dense")
+    exact = solve(g, exact_q, plan=exact_pl)
     t_exact = time.time() - t0
 
     t0 = time.time()
-    res = approx_bc(g, eps=eps, delta=delta, rule=rule, n_b=nb,
-                    topk=k, seed=seed)
+    out = solve(g, approx_q, plan=approx_pl)
     t_approx = time.time() - t0
+    res = out.approx
 
-    top_exact = set(np.argsort(lam_exact)[::-1][:k].tolist())
+    top_exact = set(exact.topk(k).tolist())
     top_approx = set(res.topk(k).tolist())
     norm = g.n * max(g.n - 2, 1)
     record = {
@@ -88,28 +102,26 @@ def bench_bc_approx(scale: int = 10, degree: int = 8, eps: float = 0.05,
         "speedup": t_exact / max(t_approx, 1e-9),
         "sample_frac": res.n_samples / g.n,
         "topk_precision": len(top_exact & top_approx) / k,
-        "spearman": _spearman(lam_exact, res.lam),
-        "max_norm_err": float(np.abs(res.lam - lam_exact).max()) / norm,
+        "spearman": _spearman(exact.lam, res.lam),
+        "max_norm_err": float(np.abs(res.lam - exact.lam).max()) / norm,
+        "plan": out.plan.to_json(),
+        "plan_exact": exact.plan.to_json(),
     }
     return record
 
 
-def _parse_mesh_spec(spec: str) -> Tuple[int, ...]:
-    """``"DxM"`` → (data, model) sizes, ``"PxDxM"`` → (pod, data, model).
+def _parse_mesh_dims(spec: str) -> Tuple[int, ...]:
+    """Axis sizes of a ``DxM`` / ``PxDxM`` spec, jax-free.
 
-    Mirrors ``launch.bc_run.build_mesh``'s validation but stays jax-free
-    and local: ``main`` must know the device count *before* anything
-    imports jax (to set XLA_FLAGS), and importing bc_run pulls in
-    ``repro.core`` and hence jax at module scope.
-    """
+    ``main`` must know the device count *before* anything imports jax
+    (to set XLA_FLAGS); ``repro.launch.mesh.parse_mesh_spec`` imports
+    jax only lazily inside the mesh constructors, so this is safe."""
+    from repro.launch.mesh import parse_mesh_spec
+
     try:
-        dims = tuple(int(d) for d in spec.lower().split("x"))
-    except ValueError:
-        raise SystemExit(f"--mesh expects DxM or PxDxM (e.g. 2x2), got "
-                         f"{spec!r}")
-    if len(dims) not in (2, 3) or min(dims) < 1:
-        raise SystemExit(f"--mesh expects 2 or 3 positive axis sizes, got "
-                         f"{spec!r}")
+        dims, _ = parse_mesh_spec(spec)
+    except ValueError as e:
+        raise SystemExit(f"--mesh: {e}")
     return dims
 
 
@@ -120,25 +132,26 @@ def bench_mesh_epochs(scale: int = 10, degree: int = 8, eps: float = 0.05,
     """Adaptive stopping on the mesh path vs single host vs Hoeffding.
 
     Runs the same (ε, δ) adaptive estimator through the single-host
-    moments step and the distributed mesh moments step, and reports for
-    each: epochs-to-converge, samples drawn, and ``samples_saved`` —
-    how far under the fixed Hoeffding budget (the mesh path's old
-    ceiling) the empirical-Bernstein/CLT stopping rule got.
+    moments executor and the distributed mesh moments executor, and
+    reports for each: epochs-to-converge, samples drawn, the executed
+    ``BCPlan`` and ``samples_saved`` — how far under the fixed Hoeffding
+    budget the empirical-Bernstein/CLT stopping rule got.
 
     Timing caveat: the single-host leg is jit-warmed (one capped run)
     so its ``seconds`` is steady-state, but the mesh leg's ``seconds``
     necessarily includes step preparation + shard_map compilation —
-    ``approx_bc(mesh=...)`` builds a fresh jitted step per call, so
-    that cost is paid by every real caller and excluding it would
-    flatter the mesh path. Epochs and samples are the apples-to-apples
-    comparison; seconds are per-path end-to-end latencies.
+    the mesh executor is built fresh per solve call, so that cost is
+    paid by every real caller and excluding it would flatter the mesh
+    path. Epochs and samples are the apples-to-apples comparison;
+    seconds are per-path end-to-end latencies.
     """
     import jax
 
-    from repro.approx import approx_bc, hoeffding_budget
-    from repro.graphs.generators import rmat
+    from repro.approx import hoeffding_budget
+    from repro.bc import BCQuery, solve
+    from repro.graphs.generators import from_spec
 
-    g = rmat(scale, degree, seed=seed)
+    g = from_spec("rmat", scale=scale, degree=degree, seed=seed)
     g, _ = g.remove_isolated()
     names = (("data", "model") if len(mesh_shape) == 2
              else ("pod", "data", "model"))
@@ -151,16 +164,24 @@ def bench_mesh_epochs(scale: int = 10, degree: int = 8, eps: float = 0.05,
                          f"jax sees {n_dev}")
     mesh = jax.make_mesh(mesh_shape, names)
     budget = hoeffding_budget(g.n, eps, delta)
+    base_q = BCQuery(mode="approx", eps=eps, delta=delta, rule=rule,
+                     n_b=nb, backend="dense", seed=seed)
 
-    # jit warm-up for the single-host step (the mesh step compiles per
-    # call — see the timing caveat above).
-    approx_bc(g, eps=eps, delta=delta, rule=rule, n_b=nb,
-              max_samples=nb, seed=seed + 1)
+    from repro.bc import plan as bc_plan
 
-    def one(tag, **kw):
+    # pin the single-host leg's placement: with fake devices visible the
+    # planner would otherwise route both legs through the mesh
+    host_plan = bc_plan(g, base_q, n_devices=1)
+
+    # jit warm-up for the single-host executor (the mesh executor compiles
+    # per call — see the timing caveat above).
+    solve(g, dataclasses.replace(base_q, max_samples=nb, seed=seed + 1),
+          plan=host_plan)
+
+    def one(tag, q=base_q, **kw):
         t0 = time.time()
-        res = approx_bc(g, eps=eps, delta=delta, rule=rule, n_b=nb,
-                        seed=seed, **kw)
+        out = solve(g, q, **kw)
+        res = out.approx
         return {
             "path": tag,
             "n_samples": res.n_samples,
@@ -169,10 +190,11 @@ def bench_mesh_epochs(scale: int = 10, degree: int = 8, eps: float = 0.05,
             "has_moments": res.has_moments,
             "samples_saved": budget - res.n_samples,
             "seconds": time.time() - t0,
+            "plan": out.plan.to_json(),
         }
 
-    host = one("single_host")
-    dist = one("mesh", mesh=mesh, iters=iters)
+    host = one("single_host", plan=host_plan)
+    dist = one("mesh", q=dataclasses.replace(base_q, iters=iters), mesh=mesh)
     return {
         "n": g.n,
         "m": g.m,
@@ -208,7 +230,7 @@ def main(argv=None) -> Dict:
                     help="static sweep bound for the mesh step")
     args = ap.parse_args(argv)
 
-    mesh_shape = _parse_mesh_spec(args.mesh)
+    mesh_shape = _parse_mesh_dims(args.mesh)
     n_dev = 1
     for d in mesh_shape:
         n_dev *= d
@@ -228,9 +250,12 @@ def main(argv=None) -> Dict:
         iters=args.mesh_iters)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
+    pl = rec["plan"]
     print(f"[bc_approx] n={rec['n']} m={rec['m']} "
           f"samples={rec['n_samples']}/{rec['n']} "
           f"({rec['n_epochs']} epochs, converged={rec['converged']})")
+    print(f"[bc_approx] plan: {pl['placement']} backend={pl['backend']} "
+          f"n_b={pl['n_b']} predicted {pl['predicted_seconds']:.3g}s")
     print(f"[bc_approx] exact {rec['seconds_exact']:.2f}s vs approx "
           f"{rec['seconds_approx']:.2f}s — speedup {rec['speedup']:.2f}x")
     print(f"[bc_approx] top-{rec['k']} precision {rec['topk_precision']:.2f} "

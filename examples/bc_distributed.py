@@ -1,8 +1,9 @@
 """Distributed MFBC on a multi-pod device mesh (Theorem 5.1 layout).
 
-Runs the shard_map production step on 8 emulated devices — a (2, 2, 2)
-(pod, data, model) mesh with the adjacency replicated across pods (the
-paper's replication factor c) — and verifies against the oracle.
+Runs the exact sweep of the unified ``repro.bc`` solver on 8 emulated
+devices — a (2, 2, 2) (pod, data, model) mesh with the adjacency
+replicated across pods (the paper's replication factor c) — inspects the
+``BCPlan`` first, and verifies against the oracle.
 
   PYTHONPATH=src python examples/bc_distributed.py
 """
@@ -14,8 +15,8 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
 import jax
 import numpy as np
 
+from repro.bc import BCQuery, plan, solve
 from repro.core.brandes_ref import brandes_bc
-from repro.core.dist_bc import dist_mfbc
 from repro.graphs.generators import erdos_renyi
 from repro.spgemm.cost_model import best_replication
 
@@ -29,11 +30,15 @@ def main():
     c = best_replication(g.n, g.m, 8, mem_bytes=1 << 30)
     print(f"cost-model replication factor c* = {c} (pod axis realizes c=2)")
 
-    lam = dist_mfbc(g, mesh, nb=16)
+    query = BCQuery(mode="exact", n_b=16)
+    pl = plan(g, query, mesh=mesh)
+    print(pl.summary())
+
+    res = solve(g, query, plan=pl, mesh=mesh)
     ref = brandes_bc(g)
-    np.testing.assert_allclose(lam, ref, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(res.lam, ref, rtol=1e-4, atol=1e-6)
     print("distributed λ == Brandes oracle ✓")
-    print("top-3:", np.argsort(lam)[::-1][:3].tolist())
+    print("top-3:", res.topk(3).tolist())
 
 
 if __name__ == "__main__":

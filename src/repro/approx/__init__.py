@@ -38,8 +38,11 @@ Mapping to 1910.11039 (their ADS algorithm, itself a KADABRA descendant):
   Σδ — so empirical-Bernstein/CLT adaptive stopping works identically at
   pod scale (no Hoeffding fallback).
 
-``driver.approx_bc`` is the entry point; ``launch.bc_run --approx`` and
-``serve.bc_service`` wrap it for CLI and serving use.
+The entry point is the unified solver facade:
+``repro.bc.solve(g, BCQuery(mode="approx", ...))`` — the sampling loop
+lives in ``repro.bc.solve``, the estimator mathematics here.
+``launch.bc_run --approx`` and ``serve.bc_service`` go through that
+facade; ``driver.approx_bc`` remains as a deprecated delegating shim.
 """
 from repro.approx.driver import ApproxResult, approx_bc, choose_sample_batch
 from repro.approx.sampling import (AdaptiveSampler, UniformSampler,

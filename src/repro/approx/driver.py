@@ -1,11 +1,14 @@
-"""Adaptive approximate-BC driver over the batched MFBC step.
+"""Adaptive approximate-BC estimator (λ moments, CIs, stopping rule).
 
-The driver owns the host-side loop: pull padded source batches from a
-strategy (``approx.sampling``), push them through the jitted batch step —
-single-host ``core.mfbc.mfbc_batch_moments`` or the distributed
-``core.dist_bc`` step — and fold the per-vertex dependency moments into a
-running λ estimator with confidence intervals. The stopping rule is
-evaluated only at epoch boundaries (epoch-doubling, 1910.11039 §4).
+The host-side sampling loop itself now lives in ``repro.bc.solve`` (the
+unified query/plan/executor API): it pulls padded source batches from a
+strategy (``approx.sampling``), pushes them through a ``BatchExecutor``
+and folds the per-vertex dependency moments into the ``LambdaEstimator``
+defined here, testing ``stopping_check`` at epoch boundaries
+(epoch-doubling, 1910.11039 §4). This module keeps the estimator
+mathematics plus ``choose_sample_batch`` (the n_b cost-model pick that
+``repro.bc.BCPlanner`` consults); ``approx_bc`` remains as a deprecated
+shim delegating to ``repro.bc.solve``.
 
 Estimator. For τ uniform source samples with running sums
 ``S1(v) = Σ_s δ_s(v)`` and ``S2(v) = Σ_s δ_s(v)²``:
@@ -28,14 +31,12 @@ amortizing per-batch dispatch without wasting samples.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.approx import sampling as S
-from repro.core.adjacency import coo_adj_from_graph, dense_adj_from_graph
-from repro.core.mfbc import mfbc_batch_moments
 from repro.graphs.formats import Graph
 
 
@@ -170,6 +171,27 @@ class LambdaEstimator:
         )
 
 
+def adjacency_bytes(n: int, m_edges: int, *, backend: str = "dense",
+                    p: int = 1, transpose: bool = False) -> float:
+    """Per-device bytes of the adjacency operand.
+
+    The one memory model shared by ``choose_sample_batch`` (n_b
+    rejection) and ``repro.bc.BCPlanner`` (plan predictions): f32 dense
+    (n, n) divided across ``p`` devices, or replicated COO (src, dst, w)
+    edge arrays. ``transpose=True`` doubles dense storage for paths that
+    keep A and Aᵀ resident (the distributed step does).
+    """
+    if backend == "dense":
+        b = 4.0 * n * n / max(p, 1)
+        return 2.0 * b if transpose else b
+    return 12.0 * m_edges
+
+
+def state_bytes(n: int, nb: int, *, p: int = 1) -> float:
+    """Per-device bytes of one batch's BC state (≈6 f32 (nb, n) mats)."""
+    return 6.0 * 4.0 * nb * n / max(p, 1)
+
+
 def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
                         backend: str = "dense",
                         mem_bytes: float = 4 * 2 ** 30,
@@ -196,18 +218,14 @@ def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
     """
     from repro.spgemm.autotune import choose_bc_regime
 
-    if backend == "dense" and p == 1:
-        adj_bytes = 4.0 * n * n
-    elif backend == "dense":
-        adj_bytes = 4.0 * n * n / p  # P(model, data)-sharded
-    else:
-        adj_bytes = 12.0 * m_edges  # COO (src, dst, w)
+    adj_b = adjacency_bytes(n, m_edges, backend=backend, p=p)
     best_nb, best_cost = candidates[0], float("inf")
     for nb in candidates:
         if budget_hint is not None and nb > max(budget_hint, candidates[0]):
             continue
-        state_bytes = 6.0 * 4.0 * nb * n
-        if adj_bytes + state_bytes > mem_bytes:
+        # state priced unsharded (p=1) on purpose: a conservative bound
+        # that keeps n_b picks stable whatever the batch-axis layout
+        if adj_b + state_bytes(n, nb) > mem_bytes:
             continue
         reg = choose_bc_regime(n, m_edges, nb, fill=0.5, p=p)
         step_s = min(reg["dense_s"], reg["coo_s"])
@@ -215,24 +233,6 @@ def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
         if per_source < best_cost:
             best_nb, best_cost = nb, per_source
     return best_nb
-
-
-def _single_host_step(g: Graph, backend: str, block: int, use_kernel: bool):
-    """Returns step(sources, valid) -> (S1, S2, n_reach) on one host."""
-    if backend == "dense":
-        adj = dense_adj_from_graph(g, block=block, use_kernel=use_kernel)
-    elif backend == "coo":
-        adj = coo_adj_from_graph(g)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
-
-    def step(sources: np.ndarray, valid: np.ndarray):
-        s1, s2, nr = mfbc_batch_moments(adj, jnp.asarray(sources),
-                                        jnp.asarray(valid))
-        return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
-                np.asarray(nr))
-
-    return step
 
 
 def stopping_check(est: "LambdaEstimator", eps: float, topk: Optional[int],
@@ -262,88 +262,29 @@ def approx_bc(g: Graph, *, eps: float = 0.05, delta: float = 0.1,
               mesh=None, iters: int = 0,
               max_samples: Optional[int] = None,
               progress_cb: Optional[Callable] = None) -> ApproxResult:
-    """Approximate betweenness centrality by adaptive source sampling.
+    """Deprecated: use ``repro.bc.solve(g, BCQuery(mode="approx", ...))``.
 
-    Args:
-      g: host COO graph.
-      eps: target CI halfwidth on the normalized dependency scale
-        (δ_s(v)/(n-2) ∈ [0,1]); λ̂(v) is within ε·n·(n-2) of λ(v) w.p. 1-δ.
-      delta: total failure probability (union-bounded across vertices).
-      strategy: "adaptive" (epoch-doubling + stopping rule) or "uniform"
-        (fixed Hoeffding budget, no early exit).
-      rule: "bernstein" (rigorous empirical-Bernstein CIs) or "normal"
-        (CLT profile — the practical serving configuration).
-      topk: when set, also stop as soon as the top-k set is CI-separated
-        (relative-error early exit).
-      mesh: optional jax device mesh — epochs run through the distributed
-        Theorem 5.1 batch step instead of the single-host one. The mesh
-        step returns real per-vertex (Σδ, Σδ²) (one fused all-reduce per
-        batch), so adaptive Bernstein/CLT stopping and variance-weighted
-        δ allocation work identically at pod scale — the result reports
-        ``has_moments=True`` on both paths.
-      max_samples: hard cap overriding the Hoeffding budget cap.
-      progress_cb: optional callback(epoch, tau, max_halfwidth).
-
-    Returns:
-      ApproxResult with λ̂, per-vertex CI halfwidths (λ scale) and
-      convergence metadata.
+    Thin shim kept for one release: builds the equivalent ``BCQuery``,
+    delegates to the unified solver (same samplers, estimator and
+    stopping rule — identical results for identical seeds) and returns
+    the embedded ``ApproxResult``.
     """
-    n = g.n
-    hoeffding = S.hoeffding_budget(n, eps, delta)
-    if n_b is None:
-        p = int(mesh.devices.size) if mesh is not None else 1
-        n_b = min(n, choose_sample_batch(n, g.m, p=p, backend=backend,
-                                         budget_hint=hoeffding))
-    cap = max_samples if max_samples is not None else None
+    warnings.warn(
+        "approx.driver.approx_bc is deprecated; use repro.bc.solve with "
+        "BCQuery(mode='approx', ...)", DeprecationWarning, stacklevel=2)
+    from repro.bc import BCPlanner, BCQuery, solve
 
-    if mesh is not None:
-        from repro.core.dist_bc import prepare_mesh_batch_step
-
-        step, n_b = prepare_mesh_batch_step(
-            g, mesh, nb=n_b, iters=iters if iters > 0 else n,
-            use_kernel=use_kernel, block=block, moments=True)
-    else:
-        step = _single_host_step(g, backend, block, use_kernel)
-
-    est = LambdaEstimator(n, eps, delta, rule)
-
-    def run_batch(b: S.SampleBatch) -> None:
-        s1, s2, _ = step(b.sources, b.valid)
-        est.update(s1, s2, b.n_valid)
-
-    def honest_converged() -> bool:
-        """A cap below the Hoeffding budget carries no a-priori guarantee
-        — only the empirical CIs can still certify convergence there."""
-        if est.tau >= hoeffding:
-            return True
-        return est.converged()
-
-    if strategy == "uniform":
-        sampler = S.UniformSampler(n, eps=eps, delta=delta, n_b=n_b,
-                                   budget=cap, seed=seed)
-        epochs = 0
-        for b in sampler.batches():
-            run_batch(b)
-            epochs = b.epoch + 1
-        return est.result(n_epochs=epochs, converged=honest_converged())
-
-    if strategy != "adaptive":
-        raise ValueError(f"unknown strategy {strategy!r}")
-
-    sampler = S.AdaptiveSampler(n, eps=eps, delta=delta, n_b=n_b,
-                                cap=cap, seed=seed)
-    n_epochs = 0
-    converged = False
-    for ei, batches in sampler.epochs():
-        for b in batches:
-            run_batch(b)
-        n_epochs = ei + 1
-        stop, hw = stopping_check(est, eps, topk, ei)
-        if progress_cb is not None:
-            progress_cb(ei, est.tau, float(hw.max()))
-        if stop:
-            converged = True
-            sampler.stop()
-    if sampler.capped and not converged:
-        converged = honest_converged()
-    return est.result(n_epochs=n_epochs, converged=converged)
+    # The old driver ignored ``backend`` on the mesh path (the
+    # distributed step is dense-only); keep that lenience here rather
+    # than let the planner reject mesh + backend="coo".
+    query = BCQuery(mode="approx", eps=eps, delta=delta, strategy=strategy,
+                    rule=rule, topk=topk, max_samples=max_samples, seed=seed,
+                    n_b=n_b, backend=None if mesh is not None else backend,
+                    use_kernel=use_kernel, block=block, iters=iters)
+    if mesh is None:
+        # Historical contract: approx_bc without a mesh always ran single
+        # host. Pin the plan so results stay identical on multi-device
+        # hosts (the planner would otherwise auto-place a mesh there).
+        pl = BCPlanner().plan(g, query, n_devices=1)
+        return solve(g, query, plan=pl, progress_cb=progress_cb).approx
+    return solve(g, query, mesh=mesh, progress_cb=progress_cb).approx

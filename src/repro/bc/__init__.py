@@ -1,0 +1,50 @@
+"""repro.bc — the unified betweenness-centrality solver facade.
+
+One query → plan → executor surface over every BC path in the repo:
+
+* ``BCQuery`` — what the caller wants (exact/approx, ε/δ/top-k/rule,
+  seed, sample cap, optional n_b/backend overrides).
+* ``BCPlanner`` / ``BCPlan`` — the §6.2 configuration search as a
+  first-class, inspectable object: backend (dense/COO), batch size n_b,
+  single-host vs (pod, data, model) mesh placement, predicted
+  bytes/seconds/memory from the SpGEMM α-β cost layer.
+* ``BatchExecutor`` — one ``step(sources, valid) -> (S1, S2, n_reach)``
+  protocol implemented by ``SingleHostExecutor`` (jitted
+  ``mfbc_batch_moments``) and ``MeshExecutor`` (Theorem 5.1 distributed
+  moments step), so exact sweeps and adaptive sampling epochs are just
+  two drivers over the same executor.
+
+Typical use::
+
+    from repro.bc import BCQuery, plan, solve
+
+    res = solve(g, BCQuery(mode="approx", eps=0.05, delta=0.1, topk=10))
+    res.topk(10), res.approx.halfwidth      # λ̂ ids + CI halfwidths
+
+    pl = plan(g, BCQuery(mode="exact"))     # inspect before running
+    print(pl.summary())
+
+The estimator surface (``LambdaEstimator``, ``stopping_check``,
+``AdaptiveSampler``, ``ApproxResult``, ``choose_sample_batch``) is
+re-exported so downstream packages (serving) need only public
+``repro.bc`` names.
+
+``approx.driver.approx_bc`` and ``core.dist_bc.dist_mfbc`` remain as
+thin ``DeprecationWarning`` shims delegating to ``solve``.
+"""
+from repro.approx.driver import (ApproxResult, LambdaEstimator,
+                                 choose_sample_batch, stopping_check)
+from repro.approx.sampling import AdaptiveSampler, UniformSampler
+from repro.bc.executor import (BatchExecutor, MeshExecutor,
+                               SingleHostExecutor, build_executor)
+from repro.bc.planner import BCPlan, BCPlanner
+from repro.bc.query import BCQuery
+from repro.bc.solve import BCResult, plan, solve
+
+__all__ = [
+    "BCQuery", "BCPlan", "BCPlanner", "BCResult",
+    "BatchExecutor", "SingleHostExecutor", "MeshExecutor", "build_executor",
+    "plan", "solve",
+    "ApproxResult", "LambdaEstimator", "stopping_check",
+    "choose_sample_batch", "AdaptiveSampler", "UniformSampler",
+]

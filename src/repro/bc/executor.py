@@ -1,0 +1,160 @@
+"""Executors — one batch-step protocol over every BC backend.
+
+A ``BatchExecutor`` turns a padded source batch into per-vertex
+dependency statistics through two methods: ``step(sources, valid) ->
+(S1, S2, n_reach)`` with ``S1(v) = Σ_s δ_s(v)`` and
+``S2(v) = Σ_s δ_s(v)²`` over the batch's valid sources (the (Σδ, Σδ²)
+contract of ``approx.driver.LambdaEstimator``, what the sampling epochs
+call), and ``step_sum(sources, valid) -> S1`` (the exact sweep's
+Σδ-only reduction, skipping the moments overhead). Both drivers in
+``repro.bc.solve`` run over this one protocol, so "exact vs approx" and
+"single host vs mesh" are orthogonal choices.
+
+``SingleHostExecutor`` is the former ``approx.driver._single_host_step``
+made public: dense or COO adjacency on one device, jitted
+``core.mfbc.mfbc_batch_moments``. ``MeshExecutor`` wraps
+``core.dist_bc.prepare_mesh_batch_step(..., moments=True)`` (Theorem 5.1
+collectives, fused (Σδ, Σδ², n_reach) all-reduce); its ``n_b`` is the
+mesh-divisible rounded-up batch size, which callers must use when sizing
+sample batches.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bc.planner import BCPlan
+from repro.core.adjacency import coo_adj_from_graph, dense_adj_from_graph
+from repro.core.mfbc import mfbc_batch, mfbc_batch_moments
+from repro.graphs.formats import Graph
+
+Moments = Tuple[np.ndarray, np.ndarray, np.ndarray]  # (S1, S2, n_reach)
+
+
+@runtime_checkable
+class BatchExecutor(Protocol):
+    """The one surface both solve drivers (exact sweep, epochs) run over."""
+
+    n_b: int  # effective batch size (mesh executors round the plan's up)
+    plan: BCPlan
+
+    def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
+        """Per-vertex (Σδ, Σδ², n_reach) over the batch's valid sources."""
+        ...
+
+    def step_sum(self, sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        """Σδ only — the exact sweep's reduction, skipping the moments
+        overhead (on the mesh: one n/p_model all-reduce instead of the
+        3× stacked one). Built lazily, so approx-only callers never
+        compile it."""
+        ...
+
+
+def _pad_batch(sources: np.ndarray, valid: np.ndarray, n_b: int):
+    sources = np.asarray(sources, np.int32)
+    valid = np.asarray(valid, bool)
+    if sources.shape[0] > n_b:
+        # Never truncate silently: dropped sources would bias any
+        # estimator fed the full batch's n_valid.
+        raise ValueError(f"batch of {sources.shape[0]} sources exceeds "
+                         f"the executor's n_b={n_b}; split it or build "
+                         f"an executor from a plan with a larger n_b")
+    if sources.shape[0] == n_b:
+        return sources, valid
+    src = np.zeros(n_b, np.int32)
+    val = np.zeros(n_b, bool)
+    k = sources.shape[0]
+    src[:k], val[:k] = sources[:k], valid[:k]
+    return src, val
+
+
+class SingleHostExecutor:
+    """One-device moments step (dense blocked or COO segment-op relax)."""
+
+    def __init__(self, g: Graph, plan: BCPlan):
+        self.plan = plan
+        self.n_b = plan.n_b
+        if plan.backend == "dense":
+            self._adj = dense_adj_from_graph(g, block=plan.block,
+                                             use_kernel=plan.use_kernel)
+        elif plan.backend == "coo":
+            self._adj = coo_adj_from_graph(g)
+        else:
+            raise ValueError(f"unknown backend {plan.backend!r}")
+
+    def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
+        src, val = _pad_batch(sources, valid, self.n_b)
+        s1, s2, nr = mfbc_batch_moments(self._adj, jnp.asarray(src),
+                                        jnp.asarray(val))
+        return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
+                np.asarray(nr))
+
+    def step_sum(self, sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        src, val = _pad_batch(sources, valid, self.n_b)
+        lam_b, _, _ = mfbc_batch(self._adj, jnp.asarray(src),
+                                 jnp.asarray(val))
+        return np.asarray(lam_b, np.float64)
+
+
+class MeshExecutor:
+    """Distributed Theorem 5.1 moments step on a (pod, data, model) mesh.
+
+    ``mesh=None`` builds the mesh the plan chose (``plan.mesh_axes``) from
+    the visible devices; pass an explicit mesh to reuse one.
+    """
+
+    def __init__(self, g: Graph, plan: BCPlan, mesh=None):
+        if mesh is None:
+            import jax
+
+            axes = plan.axes_dict()
+            if axes is None:
+                raise ValueError("plan has no mesh_axes and no mesh given")
+            mesh = jax.make_mesh(tuple(axes.values()), tuple(axes.keys()))
+        self.plan = plan
+        self.mesh = mesh
+        self._g = g
+        # Lazy per-variant builds: an exact-only caller never compiles the
+        # moments step and vice versa (each build is its own shard_map+jit).
+        self._run_moments = None
+        self._run_sum = None
+        # prepare_mesh_batch_step's batch rounding (sources are sharded
+        # over pod×data), computed up front so callers can size sample
+        # batches before any device work happens; _prepare asserts the
+        # two stay in sync.
+        sizes = dict(zip(mesh.axis_names, (int(s) for s in
+                                           mesh.devices.shape)))
+        chunk = sizes.get("pod", 1) * sizes.get("data", 1)
+        self.n_b = -(-plan.n_b // chunk) * chunk
+
+    def _prepare(self, *, moments: bool):
+        from repro.core.dist_bc import prepare_mesh_batch_step
+
+        pl = self.plan
+        run, nb = prepare_mesh_batch_step(
+            self._g, self.mesh, nb=pl.n_b,
+            iters=pl.iters if pl.iters > 0 else self._g.n,
+            use_kernel=pl.use_kernel, block=pl.block, moments=moments)
+        assert nb == self.n_b, (nb, self.n_b)
+        return run
+
+    def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
+        if self._run_moments is None:
+            self._run_moments = self._prepare(moments=True)
+        src, val = _pad_batch(sources, valid, self.n_b)
+        return self._run_moments(src, val)
+
+    def step_sum(self, sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
+        if self._run_sum is None:
+            self._run_sum = self._prepare(moments=False)
+        src, val = _pad_batch(sources, valid, self.n_b)
+        return self._run_sum(src, val)
+
+
+def build_executor(g: Graph, plan: BCPlan, *, mesh=None) -> BatchExecutor:
+    """Instantiate the executor a ``BCPlan`` calls for."""
+    if plan.placement == "mesh" or mesh is not None:
+        return MeshExecutor(g, plan, mesh=mesh)
+    return SingleHostExecutor(g, plan)

@@ -1,0 +1,230 @@
+"""BCPlanner — the configuration search as a first-class object.
+
+The paper's §6.2 claim is that MFBC "automatically searches a space of
+distributed data decompositions and sparse matrix multiplication
+algorithms for the most advantageous configuration". Before this package
+that search was scattered: ``approx.driver`` picked n_b, ``bc_run``
+hard-coded the exact batch size, ``bc_service`` made its own mesh
+decisions, and placement was whatever entry point the caller happened to
+import. ``BCPlanner`` centralizes it: given a graph, a ``BCQuery`` and
+the device topology it consults the SpGEMM cost layer
+(``spgemm.autotune.choose_bc_regime`` for the dense-vs-COO relax regime,
+``spgemm.cost_model.best_replication`` for the replication factor c,
+``approx.driver.choose_sample_batch`` for n_b) and returns an
+inspectable, JSON-serializable ``BCPlan``.
+
+Placement rule: an explicit ``mesh`` always wins (even 1x1 — callers
+that hand us a mesh want the distributed step); otherwise one visible
+device plans single-host and multiple devices plan a (pod, data, model)
+decomposition with c = min(best_replication, p^(1/3)) clamped to a
+divisor of p and the remaining p/c grid split near-square — the debug
+8-device topology lands on the paper's (2, 2, 2) grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.approx.driver import (adjacency_bytes, choose_sample_batch,
+                                 state_bytes)
+from repro.approx.sampling import hoeffding_budget
+from repro.graphs.formats import Graph
+from repro.spgemm.autotune import choose_bc_regime
+from repro.spgemm.cost_model import DEFAULT, CostParams, best_replication
+
+import numpy as np
+
+_WORD = 4.0  # f32 device word
+
+
+@dataclasses.dataclass(frozen=True)
+class BCPlan:
+    """One fully resolved execution configuration (what the planner chose).
+
+    Predictions come from the α-β cost layer and are *per device*:
+    ``predicted_step_seconds`` prices one relax iteration of one batch,
+    ``predicted_comm_bytes`` the whole run's collective traffic
+    (Theorem 5.1 bound ``(nnz(F) + 2·nnz(C))/√(p/c)`` per iteration, 0 on
+    a single host), ``predicted_seconds`` the end-to-end estimate over
+    ``n_batches`` batches of ``est_iters`` forward+backward iterations,
+    and ``predicted_mem_bytes`` the peak adjacency+state footprint.
+    """
+
+    mode: str  # "exact" | "approx"
+    placement: str  # "single_host" | "mesh"
+    backend: str  # "dense" | "coo"
+    use_kernel: bool
+    n_b: int
+    block: int
+    iters: int  # static mesh sweep bound (0 = graph size)
+    n_devices: int
+    mesh_axes: Optional[Tuple[Tuple[str, int], ...]]  # None on single host
+    sample_budget: int  # n for exact; Hoeffding budget / cap for approx
+    n_batches: int
+    est_iters: int  # relax iterations priced per batch (heuristic)
+    predicted_step_seconds: float
+    predicted_comm_bytes: float
+    predicted_seconds: float
+    predicted_mem_bytes: float
+    regime: Dict[str, float]  # choose_bc_regime output (dense vs COO)
+
+    def axes_dict(self) -> Optional[Dict[str, int]]:
+        return dict(self.mesh_axes) if self.mesh_axes is not None else None
+
+    def to_json(self) -> Dict:
+        """JSON-serializable view (benchmarks record this next to timings)."""
+        d = dataclasses.asdict(self)
+        d["mesh_axes"] = self.axes_dict()
+        return d
+
+    def summary(self) -> str:
+        where = (f"mesh{self.axes_dict()}" if self.placement == "mesh"
+                 else "single_host")
+        return (f"BCPlan[{self.mode}] {where} backend={self.backend} "
+                f"n_b={self.n_b} batches={self.n_batches} "
+                f"~{self.predicted_seconds:.3g}s "
+                f"~{self.predicted_comm_bytes:.3g}B comm "
+                f"~{self.predicted_mem_bytes:.3g}B/dev")
+
+
+def _near_square(q: int) -> Tuple[int, int]:
+    """(data, model) with data·model = q, data ≥ model, as square as q allows."""
+    model = 1
+    for d in range(1, int(math.isqrt(q)) + 1):
+        if q % d == 0:
+            model = d
+    return q // model, model
+
+
+def _clamped_replication(n: int, m: int, p: int, mem_bytes: float) -> int:
+    """Replication factor c: cost-model optimum, clamped to a divisor of p
+    no larger than p^(1/3) (the Theorem 5.1 regime where replication pays)."""
+    c_opt = best_replication(n, m, p, mem_bytes)
+    cap = max(1, min(c_opt, int(round(p ** (1.0 / 3.0)))))
+    c = 1
+    for d in range(1, cap + 1):
+        if p % d == 0:
+            c = d
+    return c
+
+
+class BCPlanner:
+    """Chooses backend, batch size and placement for a ``BCQuery``."""
+
+    def __init__(self, *, mem_bytes: float = 4 * 2 ** 30,
+                 params: CostParams = DEFAULT):
+        self.mem_bytes = float(mem_bytes)
+        self.params = params
+
+    # ------------------------------------------------------------------
+    def plan(self, g: Graph, query, *, mesh=None,
+             n_devices: Optional[int] = None) -> BCPlan:
+        """Resolve ``query`` against the device topology.
+
+        ``mesh``: explicit jax mesh — pins placement (and axes) to it.
+        ``n_devices``: topology override for planning without touching
+        jax device state (tests, dry runs). Default: ``len(jax.devices())``.
+        """
+        n, m = g.n, g.m
+        placement, axes = self._placement(n, m, query, mesh, n_devices)
+        p = 1
+        if axes is not None:
+            for _, s in axes:
+                p *= s
+
+        weighted = (query.weighted if query.weighted is not None
+                    else bool(np.any(g.w != 1.0)))
+        # n_b sizing hint: the *uncapped* a-priori budget (a max_samples cap
+        # below it should not shrink the batch the hardware wants to run).
+        hint = (n if query.mode == "exact"
+                else hoeffding_budget(n, query.eps, query.delta))
+        budget = (n if query.mode == "exact"
+                  else min(hint, query.max_samples or (1 << 62)))
+
+        backend = query.backend
+        if placement == "mesh":
+            # the distributed step is dense-adjacency only
+            backend = "dense" if backend is None else backend
+            if backend != "dense":
+                raise ValueError(f"mesh placement supports only the dense "
+                                 f"backend, got {backend!r}")
+        elif backend is None:
+            # Resolve the regime *before* sizing n_b: on graphs whose
+            # dense adjacency busts the memory budget, sizing against the
+            # dense model would reject every candidate and collapse n_b
+            # to the minimum even though the COO executor has room.
+            backend = choose_bc_regime(n, m, query.n_b or 64, fill=0.5,
+                                       p=p)["regime"]
+        n_b = query.n_b or min(n, choose_sample_batch(
+            n, m, p=p, backend=backend,
+            mem_bytes=self.mem_bytes, budget_hint=hint))
+        regime = choose_bc_regime(n, m, n_b, fill=0.5, p=p)
+
+        # -- predictions (α-β cost layer, per device) -------------------
+        est_iters = self._est_iters(n, weighted, query.iters)
+        step_s = regime["dense_s"] if backend == "dense" else regime["coo_s"]
+        n_batches = -(-budget // n_b)
+        state_nnz = _WORD * n_b * n  # one (n_b, n) f32 state matrix
+        if placement == "mesh":
+            c = dict(axes).get("pod", 1)
+            # Theorem 5.1: (nnz(F) + 2·nnz(C))/√(p/c) per relax iteration
+            comm_per_iter = 3.0 * state_nnz / max(math.sqrt(p / c), 1.0)
+        else:
+            comm_per_iter = 0.0
+        # MFBF + MFBr ≈ 2 sweeps of est_iters relaxations per batch
+        iters_total = 2 * est_iters * n_batches
+        comm_bytes = comm_per_iter * iters_total
+        seconds = (step_s * iters_total
+                   + self.params.cost(msgs=3.0 * iters_total, bytes_=comm_bytes))
+        mem = self._mem_bytes(n, m, n_b, backend, placement, axes, p)
+
+        return BCPlan(
+            mode=query.mode, placement=placement, backend=backend,
+            use_kernel=query.use_kernel, n_b=int(n_b), block=query.block,
+            iters=query.iters, n_devices=p, mesh_axes=axes,
+            sample_budget=int(budget), n_batches=int(n_batches),
+            est_iters=int(est_iters), predicted_step_seconds=float(step_s),
+            predicted_comm_bytes=float(comm_bytes),
+            predicted_seconds=float(seconds), predicted_mem_bytes=float(mem),
+            regime=regime)
+
+    # ------------------------------------------------------------------
+    def _placement(self, n: int, m: int, query, mesh,
+                   n_devices: Optional[int]):
+        if mesh is not None:
+            axes = tuple(zip(mesh.axis_names, (int(s) for s in
+                                               mesh.devices.shape)))
+            return "mesh", axes
+        if n_devices is None:
+            import jax
+
+            n_devices = len(jax.devices())
+        # A pinned COO backend has no distributed step — stay on one host.
+        if n_devices <= 1 or query.backend == "coo":
+            return "single_host", None
+        c = _clamped_replication(n, m, n_devices, self.mem_bytes)
+        data, model = _near_square(n_devices // c)
+        axes = (("pod", c),) if c > 1 else ()
+        return "mesh", axes + (("data", data), ("model", model))
+
+    @staticmethod
+    def _est_iters(n: int, weighted: bool, iters: int) -> int:
+        if iters > 0:
+            return iters
+        # small-world heuristic: O(log n) hops, stretched by edge weights
+        base = max(8, 2 * int(math.log2(max(n, 2))) + 2)
+        return min(n, base * (8 if weighted else 1))
+
+    def _mem_bytes(self, n, m, n_b, backend, placement, axes, p) -> float:
+        """Peak per-device footprint, from the shared adjacency/state
+        memory model in ``approx.driver`` (mesh: A and Aᵀ sharded over
+        the (data, model) grid and replicated over pods, state over p)."""
+        if placement == "mesh":
+            sizes = dict(axes)
+            grid = sizes.get("data", 1) * sizes.get("model", 1)
+            return (adjacency_bytes(n, m, backend="dense", p=grid,
+                                    transpose=True)
+                    + state_bytes(n, n_b, p=p))
+        return (adjacency_bytes(n, m, backend=backend)
+                + state_bytes(n, n_b))

@@ -1,0 +1,73 @@
+"""BCQuery — what the caller wants, decoupled from how it runs.
+
+The unified solver API splits a betweenness-centrality request into three
+layers (the §6.2 "automatic configuration search" made first-class):
+
+* **query** (this module) — accuracy/budget intent: exact or approximate,
+  (ε, δ) targets, top-k early exit, stopping rule, seed, sample cap.
+* **plan** (``repro.bc.planner``) — the chosen execution configuration:
+  backend, batch size n_b, single-host vs mesh placement, predicted cost.
+* **executor** (``repro.bc.executor``) — the jitted batch step behind one
+  ``step(sources, valid) -> (S1, S2, n_reach)`` protocol.
+
+A ``BCQuery`` carries *optional overrides* (``n_b``, ``backend``,
+``use_kernel``) for callers that want to pin part of the configuration —
+``None``/default means "let the planner decide".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+MODES = ("exact", "approx")
+RULES = ("bernstein", "normal")
+STRATEGIES = ("adaptive", "uniform")
+BACKENDS = ("dense", "coo")
+
+
+@dataclasses.dataclass(frozen=True)
+class BCQuery:
+    """One betweenness-centrality request.
+
+    Accuracy semantics for ``mode="approx"`` match ``repro.approx``:
+    ``eps`` is the CI halfwidth target on the normalized dependency scale
+    ``δ_s(v)/(n-2) ∈ [0, 1]``, ``delta`` the total failure probability,
+    ``rule`` the CI family (rigorous empirical-Bernstein vs CLT profile),
+    ``topk`` an optional CI-separation early exit, and ``max_samples`` a
+    hard cap overriding the Hoeffding budget. ``mode="exact"`` ignores
+    the accuracy knobs and sweeps every source.
+    """
+
+    mode: str = "exact"
+    # -- approx accuracy / budget ---------------------------------------
+    eps: float = 0.05
+    delta: float = 0.1
+    rule: str = "bernstein"
+    strategy: str = "adaptive"
+    topk: Optional[int] = None
+    max_samples: Optional[int] = None
+    seed: int = 0
+    # -- hints ----------------------------------------------------------
+    weighted: Optional[bool] = None  # None = infer from the graph
+    # -- planner overrides (None / 0 / False = planner decides) ---------
+    n_b: Optional[int] = None
+    backend: Optional[str] = None  # "dense" | "coo"
+    use_kernel: bool = False
+    block: int = 512
+    iters: int = 0  # static sweep bound for mesh executors (0 = graph size)
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.rule not in RULES:
+            raise ValueError(f"rule must be one of {RULES}, got {self.rule!r}")
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}, "
+                             f"got {self.strategy!r}")
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"backend must be None or one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.mode == "approx" and not (0.0 < self.eps < 1.0
+                                          and 0.0 < self.delta < 1.0):
+            raise ValueError(f"approx mode needs eps, delta in (0, 1), got "
+                             f"eps={self.eps} delta={self.delta}")

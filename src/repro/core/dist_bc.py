@@ -381,9 +381,11 @@ def prepare_mesh_batch_step(g, mesh: Mesh, *, nb: int, iters: int = 0,
     ``valid=False``) and returns results in *original* vertex order,
     length ``g.n``:
 
-    * ``moments=False`` (the exact sweep, ``dist_mfbc``):
+    * ``moments=False`` (the Σδ-only reduction):
       ``run(sources, valid) -> λ_partial`` — the batch's Σδ contribution,
-      float64 (n,).
+      float64 (n,). This is what the unified ``repro.bc`` exact sweep
+      runs (``MeshExecutor.step_sum``): one n/p_model all-reduce per
+      batch instead of the moments step's 3× stacked one.
     * ``moments=True`` (the adaptive approximate-BC driver): ``run(sources,
       valid) -> (S1, S2, n_reach)`` with ``S1(v) = Σ_s δ_s(v)`` and
       ``S2(v) = Σ_s δ_s(v)²`` over the batch's valid sources and
@@ -445,18 +447,20 @@ def prepare_mesh_batch_step(g, mesh: Mesh, *, nb: int, iters: int = 0,
 
 def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,
               use_kernel: bool = False, block: int = 512):
-    """Full betweenness centrality on a device mesh (host batch loop).
+    """Deprecated: use ``repro.bc.solve(g, BCQuery(mode="exact"), mesh=...)``.
 
-    Pads the graph to mesh-divisible n, permutes adjacency rows, runs
-    ``⌈n/nb⌉`` batches of the distributed step, undoes the permutation.
+    Thin shim kept for one release: the exact all-sources mesh sweep is
+    now one of the two ``repro.bc`` drivers (a ``MeshExecutor`` under the
+    exact sweep — same batches, same Theorem 5.1 step, λ = Σ S1).
     """
-    import numpy as np
+    import warnings
 
-    run, nb_pad = prepare_mesh_batch_step(g, mesh, nb=nb, iters=iters,
-                                          use_kernel=use_kernel, block=block)
-    lam = np.zeros(g.n, dtype=np.float64)
-    for b in range(-(-g.n // nb_pad)):
-        chunk = np.arange(b * nb_pad, min((b + 1) * nb_pad, g.n),
-                          dtype=np.int32)
-        lam += run(chunk, np.ones(chunk.shape[0], dtype=bool))
-    return lam
+    warnings.warn(
+        "core.dist_bc.dist_mfbc is deprecated; use repro.bc.solve with "
+        "BCQuery(mode='exact', ...) and a mesh", DeprecationWarning,
+        stacklevel=2)
+    from repro.bc import BCQuery, solve
+
+    query = BCQuery(mode="exact", n_b=nb, iters=iters,
+                    use_kernel=use_kernel, block=block)
+    return solve(g, query, mesh=mesh).lam

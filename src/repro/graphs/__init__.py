@@ -1,6 +1,7 @@
 from repro.graphs.formats import Graph, coo_to_csr, coo_to_dense, pad_edges
-from repro.graphs.generators import (erdos_renyi, rmat, uniform_random,
-                                     ring_of_cliques, star_graph)
+from repro.graphs.generators import (erdos_renyi, from_spec, rmat,
+                                     uniform_random, ring_of_cliques,
+                                     star_graph)
 
 __all__ = [
     "Graph",
@@ -8,6 +9,7 @@ __all__ = [
     "coo_to_dense",
     "pad_edges",
     "erdos_renyi",
+    "from_spec",
     "rmat",
     "uniform_random",
     "ring_of_cliques",

@@ -27,6 +27,30 @@ def _weights(rng: np.random.Generator, nnz: int, weighted: bool, max_weight: int
     return np.ones(nnz, dtype=np.float32)
 
 
+def from_spec(kind: str, *, scale: int, degree: float = 8,
+              weighted: bool = False, seed: int = 0,
+              max_weight: int = 100) -> Graph:
+    """The shared CLI/benchmark graph family spec: kind + (scale, degree).
+
+    ``kind`` is one of ``"rmat"`` (power-law, n = 2^scale, E = degree),
+    ``"uniform"`` (fixed expected degree) or ``"er"`` (Erdős–Rényi with
+    p = degree/n). One helper so ``launch.bc_run``, the benchmarks and
+    the tests all build byte-identical graphs from the same flags.
+    """
+    n = 1 << scale
+    if kind == "rmat":
+        return rmat(scale, int(degree), weighted=weighted, seed=seed,
+                    max_weight=max_weight)
+    if kind == "uniform":
+        return uniform_random(n, degree, weighted=weighted, seed=seed,
+                              max_weight=max_weight)
+    if kind == "er":
+        return erdos_renyi(n, degree / n, weighted=weighted, seed=seed,
+                           max_weight=max_weight)
+    raise ValueError(f"unknown graph kind {kind!r} "
+                     f"(expected rmat | uniform | er)")
+
+
 def erdos_renyi(n: int, p_edge: float, *, seed: int = 0, weighted: bool = False,
                 max_weight: int = 100, directed: bool = False) -> Graph:
     rng = np.random.default_rng(seed)

@@ -1,7 +1,13 @@
 """Betweenness-centrality launcher (the paper's own workload).
 
   PYTHONPATH=src python -m repro.launch.bc_run --graph rmat --scale 8 \
-      --degree 8 --nb 64 [--weighted] [--backend dense|coo] [--ckpt-dir d]
+      --degree 8 --nb 64 [--weighted] [--backend auto|dense|coo] \
+      [--ckpt-dir d]
+
+Every mode is one call into the unified solver API: build a
+``repro.bc.BCQuery``, let ``BCPlanner`` resolve backend / batch size /
+placement (printed as the ``BCPlan`` line; pin with --nb / --backend /
+--mesh), and run ``repro.bc.solve``.
 
 Per-batch checkpointing: the λ accumulator + batch index is saved after
 every batch, so a killed run resumes without recomputing finished batches
@@ -17,67 +23,39 @@ Approximate mode (adaptive source sampling, see ``repro.approx``):
 epoch-doubling sampler and prints the top-k central vertices with their
 confidence intervals.
 
-``--mesh`` runs the sampling epochs through the distributed Theorem 5.1
-moments step instead of the single-host one: ``--mesh 2x4`` maps (data=2,
-model=4), ``--mesh 2x2x2`` maps (pod=2, data=2, model=2). The axis-size
-product must equal the visible jax device count. Since the mesh step
-returns per-vertex (Σδ, Σδ²), adaptive Bernstein/CLT stopping works
-unchanged at mesh scale — no Hoeffding fallback.
+``--mesh`` pins placement to the distributed Theorem 5.1 moments step:
+``--mesh 2x4`` maps (data=2, model=4), ``--mesh 2x2x2`` maps (pod=2,
+data=2, model=2). The axis-size product must equal the visible jax
+device count. Without the flag the planner places automatically
+(single host on one device, a (pod, data, model) decomposition when
+more are visible).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import numpy as np
 
-from repro.core import brandes_bc, mfbc
-from repro.graphs.generators import erdos_renyi, rmat, uniform_random
+from repro.bc import BCQuery
+from repro.bc import plan as bc_plan
+from repro.bc import solve as bc_solve
+from repro.core import brandes_bc
+from repro.graphs.generators import from_spec
+from repro.launch.mesh import mesh_from_spec
 from repro.train import checkpoint as ckpt_lib
 
 
-def build_graph(args):
-    if args.graph == "rmat":
-        return rmat(args.scale, args.degree, weighted=args.weighted,
-                    seed=args.seed)
-    if args.graph == "uniform":
-        return uniform_random(1 << args.scale, args.degree,
-                              weighted=args.weighted, seed=args.seed)
-    if args.graph == "er":
-        return erdos_renyi(1 << args.scale, args.degree / (1 << args.scale),
-                           weighted=args.weighted, seed=args.seed)
-    raise ValueError(args.graph)
-
-
-def build_mesh(spec: str):
-    """``"DxM"`` → (data, model) mesh; ``"PxDxM"`` → (pod, data, model)."""
-    import jax
-
-    try:
-        dims = tuple(int(d) for d in spec.lower().split("x"))
-    except ValueError:
-        raise SystemExit(f"--mesh expects DxM or PxDxM (e.g. 2x4), got "
-                         f"{spec!r}")
-    if len(dims) == 2:
-        names = ("data", "model")
-    elif len(dims) == 3:
-        names = ("pod", "data", "model")
-    else:
-        raise SystemExit(f"--mesh expects 2 or 3 axis sizes, got {spec!r}")
-    n_dev = len(jax.devices())
-    need = 1
-    for d in dims:
-        need *= d
-    if need != n_dev:
-        raise SystemExit(f"--mesh {spec} needs {need} devices, "
-                         f"jax sees {n_dev}")
-    return jax.make_mesh(dims, names)
+def _query_from_args(args, mode: str, **kw) -> BCQuery:
+    backend = None if args.backend == "auto" else args.backend
+    return BCQuery(mode=mode, n_b=args.nb or None, backend=backend,
+                   use_kernel=args.use_kernel, seed=args.seed,
+                   iters=args.iters, **kw)
 
 
 def run_approx(args, g):
-    """Adaptive-sampling approximate BC + top-k report (repro.approx)."""
-    from repro.approx import approx_bc
-
+    """Adaptive-sampling approximate BC + top-k report via repro.bc."""
     try:
         eps_s, delta_s = args.approx.split(",")
         eps, delta = float(eps_s), float(delta_s)
@@ -88,22 +66,29 @@ def run_approx(args, g):
     if not (0 < eps < 1 and 0 < delta < 1):
         raise SystemExit(f"--approx eps and delta must be in (0, 1), got "
                          f"eps={eps} delta={delta}")
-    mesh = build_mesh(args.mesh) if args.mesh else None
+    try:
+        mesh = mesh_from_spec(args.mesh) if args.mesh else None
+    except ValueError as e:
+        raise SystemExit(f"--mesh: {e}")
+    query = _query_from_args(args, "approx", eps=eps, delta=delta,
+                             strategy=args.strategy, rule=args.rule,
+                             topk=args.topk,
+                             max_samples=args.max_samples or None)
     print(f"[bc] approx mode: eps={eps} delta={delta} "
           f"strategy={args.strategy} rule={args.rule}"
           + (f" mesh={args.mesh}" if args.mesh else ""))
+    try:
+        pl = bc_plan(g, query, mesh=mesh)
+    except ValueError as e:  # e.g. --mesh with --backend coo
+        raise SystemExit(f"[bc] cannot plan this query: {e}")
+    print(f"[bc] {pl.summary()}")
 
     def progress(epoch, tau, max_hw):
         print(f"[bc] epoch {epoch}: tau={tau} max_halfwidth={max_hw:.4f}")
 
     t0 = time.time()
-    res = approx_bc(g, eps=eps, delta=delta, strategy=args.strategy,
-                    rule=args.rule, backend=args.backend,
-                    use_kernel=args.use_kernel, topk=args.topk,
-                    n_b=args.nb or None,  # 0 = cost-model pick
-                    seed=args.seed, mesh=mesh, iters=args.iters,
-                    max_samples=args.max_samples or None,
-                    progress_cb=progress)
+    out = bc_solve(g, query, mesh=mesh, plan=pl, progress_cb=progress)
+    res = out.approx
     dt = time.time() - t0
     teps = g.m * res.n_samples / dt
     print(f"[bc] approx done in {dt:.2f}s — {res.n_samples} samples "
@@ -139,8 +124,10 @@ def main(argv=None):
     ap.add_argument("--degree", type=int, default=8)
     ap.add_argument("--weighted", action="store_true")
     ap.add_argument("--nb", type=int, default=0,
-                    help="batch size (0 = 64 exact / cost-model pick approx)")
-    ap.add_argument("--backend", default="dense", choices=["dense", "coo"])
+                    help="batch size (0 = planner's cost-model pick)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "dense", "coo"],
+                    help="relax backend (auto = planner's regime choice)")
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
@@ -156,46 +143,64 @@ def main(argv=None):
                     choices=["bernstein", "normal"])
     ap.add_argument("--max-samples", type=int, default=0)
     ap.add_argument("--mesh", default="",
-                    help="DxM or PxDxM axis sizes — run --approx epochs "
-                         "through the distributed moments step")
+                    help="DxM or PxDxM axis sizes — pin placement to the "
+                         "distributed moments step")
     ap.add_argument("--iters", type=int, default=0,
-                    help="static sweep bound for --mesh (0 = graph size)")
+                    help="static sweep bound for mesh placement "
+                         "(0 = graph size)")
     args = ap.parse_args(argv)
 
     if args.mesh and not args.approx:
         raise SystemExit("--mesh requires --approx (the exact mesh sweep "
                          "is examples/bc_distributed.py)")
 
-    g = build_graph(args)
+    g = from_spec(args.graph, scale=args.scale, degree=args.degree,
+                  weighted=args.weighted, seed=args.seed)
     g, _ = g.remove_isolated()
     print(f"[bc] graph {g.name}: n={g.n} m={g.m}")
 
     if args.approx:
         return run_approx(args, g)
 
+    query = _query_from_args(args, "exact")
     start_batch = 0
-    lam_acc = {"lam": np.zeros(g.n), "batch": -1}
+    lam_acc = np.zeros(g.n)
     if args.ckpt_dir:
         step = ckpt_lib.latest_step(args.ckpt_dir)
         if step is not None:
             flat, _ = ckpt_lib.restore(args.ckpt_dir)
-            lam_acc["lam"] = flat["lam"]
+            lam_acc = flat["lam"]
             start_batch = step + 1
-            print(f"[bc] resuming at batch {start_batch}")
+            # The sweep's source ranges are keyed by nb: a resume must
+            # reuse the checkpoint's batch size, not whatever the planner
+            # (or a changed --nb) would pick today. Checkpoints predating
+            # the 'nb' key were written with the old fixed default
+            # (args.nb or 64), so that is the only safe legacy fallback.
+            ckpt_nb = int(flat["nb"]) if "nb" in flat else (args.nb or 64)
+            if args.nb and args.nb != ckpt_nb:
+                raise SystemExit(f"--nb {args.nb} mismatches checkpoint "
+                                 f"batch size nb={ckpt_nb}")
+            query = dataclasses.replace(query, n_b=ckpt_nb)
+            print(f"[bc] resuming at batch {start_batch} (nb={ckpt_nb})")
+
+    pl = bc_plan(g, query, n_devices=1)  # exact CLI sweep is single-host
+    print(f"[bc] {pl.summary()}")
+    nb = pl.n_b
+    total_batches = -(-g.n // nb)
 
     def progress(b, n_batches, lam):
+        gb = start_batch + b  # global batch index across resumes
         if args.ckpt_dir:
-            ckpt_lib.save(args.ckpt_dir, b, {"lam": lam, "batch": b})
-        print(f"[bc] batch {b + 1}/{n_batches}")
+            # Cumulative λ at the global step: a second kill + resume
+            # restores the whole prefix, not just this run's segment.
+            ckpt_lib.save(args.ckpt_dir, gb,
+                          {"lam": lam + lam_acc, "batch": gb, "nb": nb})
+        print(f"[bc] batch {gb + 1}/{total_batches}")
 
     t0 = time.time()
-    nb = args.nb or 64
-    n_batches = -(-g.n // nb)
     sources = np.arange(start_batch * nb, g.n, dtype=np.int32)
-    lam = mfbc(g, n_b=nb, backend=args.backend,
-               use_kernel=args.use_kernel, sources=sources,
-               progress_cb=progress)
-    lam = lam + lam_acc["lam"]
+    out = bc_solve(g, query, plan=pl, sources=sources, progress_cb=progress)
+    lam = out.lam + lam_acc
     dt = time.time() - t0
     # TEPS as the paper counts it: every edge is traversed once per source
     teps = g.m * g.n / dt

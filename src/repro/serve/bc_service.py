@@ -9,15 +9,20 @@ big graph) therefore never block short ones (loose ε / top-k early exit):
 a slot frees the moment its estimator converges, exactly the
 no-head-of-line-blocking property of the decode engine.
 
-Graphs are registered up front (like model weights); their jitted batch
-steps and device-resident adjacencies are built lazily and shared across
-every request that names them — the serving-side amortization that makes
-"BC from millions of users" viable.
+Graphs are registered up front (like model weights); the unified
+``repro.bc`` planner resolves each one to a ``BCPlan`` and a shared
+``BatchExecutor`` — jitted batch step plus device-resident adjacency —
+reused by every request that names the graph: the serving-side
+amortization that makes "BC from millions of users" viable. With a
+``mesh``, the planner pins placement to the distributed Theorem 5.1
+moments step; the slot loop is executor-oblivious either way because
+both executors speak the same ``step(sources, valid) -> (S1, S2,
+n_reach)`` protocol.
 
-With a ``mesh``, epochs run through the distributed Theorem 5.1 moments
-step (``core.dist_bc.prepare_mesh_batch_step(..., moments=True)``): the
-same (Σδ, Σδ²) estimator contract, so adaptive Bernstein/CLT stopping —
-and its early-exit latency wins — carry over to pod-scale graphs.
+This module deliberately imports only public ``repro.bc`` names — the
+facade re-exports the estimator surface — so the old private-API leak
+(``approx.driver._single_host_step``) is gone; ``tools/
+check_private_imports.py`` enforces that in CI.
 """
 from __future__ import annotations
 
@@ -28,9 +33,10 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.approx import sampling as S
-from repro.approx.driver import LambdaEstimator, _single_host_step, \
-    choose_sample_batch, stopping_check
+from repro.bc import (AdaptiveSampler, BatchExecutor, BCQuery,
+                      LambdaEstimator, build_executor)
+from repro.bc import plan as bc_plan
+from repro.bc import stopping_check
 from repro.graphs.formats import Graph
 
 
@@ -61,7 +67,7 @@ class BCResponse:
 @dataclasses.dataclass
 class _Job:
     req: BCRequest
-    sampler: S.AdaptiveSampler
+    sampler: AdaptiveSampler
     est: LambdaEstimator
     epochs: object  # iterator from sampler.epochs()
     t0: float
@@ -71,11 +77,13 @@ class _Job:
 class BCService:
     """Slot-scheduled approximate-BC query service.
 
-    ``mesh=None`` serves from the single-host batch step; with a jax
-    device mesh every registered graph's step is the distributed moments
-    step instead (identical (S1, S2, n_reach) signature, so the slot
-    loop is mesh-oblivious). ``iters`` bounds the mesh step's static
-    forward/backward sweeps (0 = graph size, always safe).
+    ``mesh=None`` lets the ``repro.bc`` planner place each graph (one
+    visible device → single host); with a jax device mesh every
+    registered graph's executor is the distributed moments step instead
+    (identical (S1, S2, n_reach) protocol, so the slot loop never
+    branches on placement). ``iters`` bounds the mesh step's static
+    forward/backward sweeps (0 = graph size, always safe). Per-graph
+    plans are inspectable via ``plan_for(name)``.
     """
 
     def __init__(self, graphs: Dict[str, Graph], *, n_slots: int = 4,
@@ -88,8 +96,7 @@ class BCService:
         self.slots: List[Optional[_Job]] = [None] * n_slots
         self.queue: Deque[BCRequest] = deque()
         self.finished: List[BCResponse] = []
-        self._steps: Dict[str, object] = {}  # graph name -> jitted step
-        self._nb: Dict[str, int] = {}
+        self._executors: Dict[str, BatchExecutor] = {}
 
     # ------------------------------------------------------------------
     def submit(self, req: BCRequest) -> None:
@@ -97,24 +104,21 @@ class BCService:
             raise KeyError(f"unknown graph {req.graph!r}")
         self.queue.append(req)
 
-    def _graph_step(self, name: str):
-        if name not in self._steps:
+    def _graph_executor(self, name: str) -> BatchExecutor:
+        """Plan + executor per registered graph, built lazily, shared by
+        every request (n_b is per-graph; per-query re-sizing is the open
+        ROADMAP autotuning item)."""
+        if name not in self._executors:
             g = self.graphs[name]
-            if self.mesh is not None:
-                from repro.core.dist_bc import prepare_mesh_batch_step
+            pl = bc_plan(g, BCQuery(mode="approx", backend=self.backend,
+                                    iters=self.iters),
+                         mesh=self.mesh)
+            self._executors[name] = build_executor(g, pl, mesh=self.mesh)
+        return self._executors[name]
 
-                p = int(self.mesh.devices.size)
-                nb = min(g.n, choose_sample_batch(g.n, g.m, p=p))
-                step, nb = prepare_mesh_batch_step(
-                    g, self.mesh, nb=nb,
-                    iters=self.iters if self.iters > 0 else g.n,
-                    moments=True)
-                self._steps[name], self._nb[name] = step, nb
-            else:
-                self._nb[name] = min(g.n, choose_sample_batch(g.n, g.m))
-                self._steps[name] = _single_host_step(g, self.backend, 512,
-                                                      False)
-        return self._steps[name], self._nb[name]
+    def plan_for(self, name: str):
+        """The ``BCPlan`` serving this graph (builds the executor)."""
+        return self._graph_executor(name).plan
 
     def _admit(self) -> None:
         for i in range(self.n_slots):
@@ -122,9 +126,9 @@ class BCService:
                 continue
             req = self.queue.popleft()
             g = self.graphs[req.graph]
-            _, nb = self._graph_step(req.graph)
-            sampler = S.AdaptiveSampler(g.n, eps=req.eps, delta=req.delta,
-                                        n_b=nb, seed=req.seed)
+            ex = self._graph_executor(req.graph)
+            sampler = AdaptiveSampler(g.n, eps=req.eps, delta=req.delta,
+                                      n_b=ex.n_b, seed=req.seed)
             est = LambdaEstimator(g.n, req.eps, req.delta, req.rule)
             self.slots[i] = _Job(req=req, sampler=sampler, est=est,
                                  epochs=sampler.epochs(), t0=time.time())
@@ -152,19 +156,20 @@ class BCService:
             job = self.slots[i]
             if job is None:
                 continue
-            step_fn, _ = self._graph_step(job.req.graph)
+            ex = self._graph_executor(job.req.graph)
             try:
                 ei, batches = next(job.epochs)
             except StopIteration:
                 self._retire(i, converged=job.sampler.capped)
                 continue
             for b in batches:
-                s1, s2, _ = step_fn(b.sources, b.valid)
+                s1, s2, _ = ex.step(b.sources, b.valid)
                 job.est.update(s1, s2, b.n_valid)
                 processed += b.n_valid
             job.n_epochs = ei + 1
-            # Same sequential test as approx_bc (one hw pass per epoch,
-            # δ split across checks) so CLI and service answers agree.
+            # Same sequential test as repro.bc.solve (one hw pass per
+            # epoch, δ split across checks) so CLI and service answers
+            # agree.
             done, _ = stopping_check(job.est, job.req.eps, job.req.k, ei)
             if done:
                 job.sampler.stop()

@@ -1,6 +1,10 @@
 """Approximate-BC subsystem: estimator convergence vs the Brandes oracle,
 top-k precision, stopping-rule/sampler units, mesh-path second moments,
-and the serving endpoint."""
+and the serving endpoint.
+
+End-to-end runs go through the unified ``repro.bc.solve`` facade (the
+``approx_bc`` shim's own deprecation contract is covered in
+``test_bc_api.py``)."""
 import os
 import subprocess
 import sys
@@ -8,12 +12,19 @@ import sys
 import numpy as np
 import pytest
 
-from repro.approx import (approx_bc, bernstein_halfwidth, epoch_schedule,
+from repro.approx import (bernstein_halfwidth, epoch_schedule,
                           hoeffding_budget, normal_halfwidth)
 from repro.approx.driver import LambdaEstimator, choose_sample_batch
 from repro.approx.sampling import AdaptiveSampler, UniformSampler
+from repro.bc import BCQuery
+from repro.bc import solve as bc_solve
 from repro.core import brandes_bc
 from repro.graphs.generators import ring_of_cliques, rmat, star_graph
+
+
+def approx_bc(g, *, mesh=None, **kw):
+    """The old driver call spelled as one unified-solver query."""
+    return bc_solve(g, BCQuery(mode="approx", **kw), mesh=mesh).approx
 
 
 @pytest.fixture(scope="module")

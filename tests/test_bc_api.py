@@ -1,0 +1,278 @@
+"""Unified ``repro.bc`` solver API: planner decisions, BCPlan contents,
+exact-vs-approx parity through both executors, and the deprecation shims.
+
+The multi-device half of the planner contract (8 visible devices → mesh
+placement, auto-built MeshExecutor, mesh-vs-host parity) runs in a
+subprocess: ``md_bc_planner_check.py``, alongside the moments check.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.bc import (BCPlanner, BCQuery, MeshExecutor, SingleHostExecutor,
+                      build_executor, plan, solve)
+from repro.core import brandes_bc
+from repro.graphs.generators import from_spec, ring_of_cliques
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    g = from_spec("rmat", scale=6, degree=8, seed=5)
+    g, _ = g.remove_isolated()
+    return g, brandes_bc(g)
+
+
+def _mesh_1x1():
+    import jax
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+
+
+# ---------------------------------------------------------------- planner
+def test_planner_single_host_on_one_device(small_graph):
+    g, _ = small_graph
+    pl = BCPlanner().plan(g, BCQuery(mode="approx"), n_devices=1)
+    assert pl.placement == "single_host"
+    assert pl.mesh_axes is None and pl.n_devices == 1
+    assert pl.predicted_comm_bytes == 0.0  # no collectives on one host
+    assert pl.backend in ("dense", "coo") and pl.n_b >= 1
+
+
+def test_planner_mesh_on_eight_devices(small_graph):
+    """The §6.2 search picks a (pod, data, model) decomposition for p=8."""
+    g, _ = small_graph
+    pl = BCPlanner().plan(g, BCQuery(mode="exact"), n_devices=8)
+    assert pl.placement == "mesh"
+    axes = pl.axes_dict()
+    assert axes == {"pod": 2, "data": 2, "model": 2}
+    assert pl.backend == "dense"  # the distributed step is dense-only
+    assert pl.predicted_comm_bytes > 0.0
+    assert pl.predicted_mem_bytes < BCPlanner().plan(
+        g, BCQuery(mode="exact"), n_devices=1).predicted_mem_bytes
+
+
+def test_planner_respects_overrides_and_budget(small_graph):
+    g, _ = small_graph
+    pl = BCPlanner().plan(g, BCQuery(mode="approx", n_b=16, backend="coo"),
+                          n_devices=1)
+    assert pl.n_b == 16 and pl.backend == "coo"
+    # a pinned COO backend has no distributed step: auto-placement must
+    # stay on one host even with devices available
+    pl8 = BCPlanner().plan(g, BCQuery(mode="approx", backend="coo"),
+                           n_devices=8)
+    assert pl8.placement == "single_host"
+    # exact budget is the full sweep; approx budget is the Hoeffding cap
+    e = BCPlanner().plan(g, BCQuery(mode="exact"), n_devices=1)
+    a = BCPlanner().plan(g, BCQuery(mode="approx", eps=0.1, delta=0.1,
+                                    max_samples=50), n_devices=1)
+    assert e.sample_budget == g.n
+    assert a.sample_budget == 50
+    assert e.n_batches == -(-g.n // e.n_b)
+
+
+def test_plan_is_json_serializable(small_graph):
+    g, _ = small_graph
+    pl = plan(g, BCQuery(mode="approx", topk=5), n_devices=8)
+    d = json.loads(json.dumps(pl.to_json()))
+    assert d["placement"] == "mesh"
+    assert d["mesh_axes"] == {"pod": 2, "data": 2, "model": 2}
+    assert d["regime"]["regime"] in ("dense", "coo")
+    assert "single_host" in pl.summary() or "mesh" in pl.summary()
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        BCQuery(mode="both")
+    with pytest.raises(ValueError):
+        BCQuery(mode="approx", eps=0.0)
+    with pytest.raises(ValueError):
+        BCQuery(rule="gaussian")
+    with pytest.raises(ValueError):
+        BCQuery(backend="csr")
+
+
+# ------------------------------------------------------------- executors
+def test_build_executor_matches_plan(small_graph):
+    g, _ = small_graph
+    ex = build_executor(g, plan(g, BCQuery(), n_devices=1))
+    assert isinstance(ex, SingleHostExecutor)
+    mesh = _mesh_1x1()
+    exm = build_executor(g, plan(g, BCQuery(n_b=16, iters=32), mesh=mesh),
+                         mesh=mesh)
+    assert isinstance(exm, MeshExecutor)
+    # the shared protocol: same (S1, S2, n_reach) from identical batches
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, g.n, 16).astype(np.int32)
+    val = np.ones(16, bool)
+    s1a, s2a, nra = ex.step(src, val)
+    s1b, s2b, nrb = exm.step(src, val)
+    np.testing.assert_allclose(s1a, s1b, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(s2a, s2b, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(nra, np.asarray(nrb))
+    # the Σδ-only exact reduction agrees with the moments S1 on both
+    np.testing.assert_allclose(ex.step_sum(src, val), s1a,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(exm.step_sum(src, val), s1b,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_executor_rejects_oversized_batch(small_graph):
+    """step() must never silently truncate a too-large batch."""
+    g, _ = small_graph
+    ex = build_executor(g, plan(g, BCQuery(mode="exact", n_b=16),
+                                n_devices=1))
+    with pytest.raises(ValueError, match="exceeds"):
+        ex.step(np.arange(17, dtype=np.int32), np.ones(17, bool))
+
+
+# ------------------------------------------------------ solve: both modes
+def test_exact_solve_single_host_matches_oracle(small_graph):
+    g, ref = small_graph
+    res = solve(g, BCQuery(mode="exact"))
+    np.testing.assert_allclose(res.lam, ref, rtol=1e-4, atol=1e-6)
+    assert res.converged and res.approx is None
+    assert res.n_samples == g.n
+
+
+def test_exact_solve_mesh_matches_oracle(small_graph):
+    g, ref = small_graph
+    res = solve(g, BCQuery(mode="exact", n_b=16, iters=32), mesh=_mesh_1x1())
+    np.testing.assert_allclose(res.lam, ref, rtol=1e-4, atol=1e-6)
+    assert res.plan.placement == "mesh"
+
+
+def test_exact_solve_restricted_sources(small_graph):
+    """The checkpoint-resume hook: a partial sweep is a partial λ sum."""
+    g, ref = small_graph
+    q = BCQuery(mode="exact", n_b=16)
+    head = solve(g, q, sources=np.arange(16, dtype=np.int32))
+    tail = solve(g, q, sources=np.arange(16, g.n, dtype=np.int32))
+    np.testing.assert_allclose(head.lam + tail.lam, ref,
+                               rtol=1e-4, atol=1e-6)
+    # n_samples reports what was actually swept, not the full budget
+    assert head.n_samples == 16 and tail.n_samples == g.n - 16
+
+
+def test_bc_run_checkpoint_resume(tmp_path):
+    """CLI resume: cumulative λ checkpoints + persisted nb survive a kill."""
+    import shutil
+
+    from repro.launch import bc_run
+    from repro.train import checkpoint as ckpt_lib
+
+    ck = str(tmp_path / "ck")
+    args = ["--graph", "rmat", "--scale", "5", "--nb", "8",
+            "--ckpt-dir", ck, "--verify"]
+    bc_run.main(args)  # full run; saves cumulative λ at global steps
+    # simulate a kill after global batch 1: drop the later checkpoints
+    for s in ckpt_lib.all_steps(ck):
+        if s > 1:
+            shutil.rmtree(os.path.join(ck, f"step_{s:010d}"))
+    bc_run.main(args)  # resumes at batch 2; --verify checks final λ
+    # a resume with a mismatched --nb must refuse, not misalign sources
+    with pytest.raises(SystemExit, match="mismatches checkpoint"):
+        bc_run.main(["--graph", "rmat", "--scale", "5", "--nb", "4",
+                     "--ckpt-dir", ck])
+
+
+def test_approx_solve_converges_within_eps_both_executors(small_graph):
+    """Exact-vs-approx parity through one entry point on both executors."""
+    g, ref = small_graph
+    eps = 0.05
+    norm = g.n * (g.n - 2)
+    host = solve(g, BCQuery(mode="approx", eps=eps, delta=0.1,
+                            rule="bernstein", seed=0))
+    assert host.approx.converged
+    assert np.abs(host.lam - ref).max() / norm <= eps
+    mesh_out = solve(g, BCQuery(mode="approx", eps=eps, delta=0.1,
+                                rule="bernstein", seed=0, iters=32),
+                     mesh=_mesh_1x1())
+    assert mesh_out.approx.converged
+    assert np.abs(mesh_out.lam - ref).max() / norm <= eps
+    # same seed + same n_b → identical sample sequence → identical λ̂
+    if host.plan.n_b == mesh_out.plan.n_b:
+        np.testing.assert_allclose(mesh_out.lam, host.lam,
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_solve_reuses_prebuilt_executor(small_graph):
+    """Serving pattern: one executor, many queries."""
+    g, ref = small_graph
+    pl = plan(g, BCQuery(mode="approx"), n_devices=1)
+    ex = build_executor(g, pl)
+    a = solve(g, BCQuery(mode="approx", eps=0.1, delta=0.1, seed=1),
+              executor=ex)
+    b = solve(g, BCQuery(mode="approx", eps=0.1, delta=0.1, seed=1),
+              executor=ex)
+    np.testing.assert_array_equal(a.lam, b.lam)
+    assert a.plan is pl
+
+
+def test_topk_through_facade(small_graph):
+    g, ref = small_graph
+    k = 10
+    res = solve(g, BCQuery(mode="approx", eps=0.05, delta=0.1,
+                           rule="normal", topk=k, seed=0))
+    top_ref = set(np.argsort(ref)[::-1][:k].tolist())
+    assert len(top_ref & set(res.topk(k).tolist())) / k >= 0.9
+
+
+# ------------------------------------------------------ deprecation shims
+def test_approx_bc_shim_warns_and_matches(small_graph):
+    g, _ = small_graph
+    from repro.approx import approx_bc
+
+    ref = solve(g, BCQuery(mode="approx", eps=0.1, delta=0.1,
+                           rule="normal", seed=4)).approx
+    with pytest.warns(DeprecationWarning, match="repro.bc.solve"):
+        old = approx_bc(g, eps=0.1, delta=0.1, rule="normal", seed=4)
+    np.testing.assert_array_equal(old.lam, ref.lam)
+    np.testing.assert_array_equal(old.halfwidth, ref.halfwidth)
+    assert (old.n_samples, old.n_epochs, old.converged) == \
+        (ref.n_samples, ref.n_epochs, ref.converged)
+
+
+def test_dist_mfbc_shim_warns_and_matches(small_graph):
+    g, _ = small_graph
+    from repro.core.dist_bc import dist_mfbc
+
+    mesh = _mesh_1x1()
+    ref = solve(g, BCQuery(mode="exact", n_b=16, iters=32), mesh=mesh)
+    with pytest.warns(DeprecationWarning, match="repro.bc.solve"):
+        old = dist_mfbc(g, mesh, nb=16, iters=32)
+    np.testing.assert_array_equal(old, ref.lam)
+
+
+# ------------------------------------------------------------ service path
+def test_service_exposes_plan(small_graph):
+    from repro.serve.bc_service import BCRequest, BCService
+
+    g, ref = small_graph
+    svc = BCService({"web": g, "ring": ring_of_cliques(4, 5)}, n_slots=2)
+    pl = svc.plan_for("web")
+    assert pl.placement == "single_host" and pl.mode == "approx"
+    svc.submit(BCRequest(rid=0, graph="web", k=5, rule="normal"))
+    out = svc.run()
+    assert len(out) == 1 and out[0].converged
+    top_ref = set(np.argsort(ref)[::-1][:5].tolist())
+    assert len(top_ref & set(out[0].topk)) >= 4
+
+
+# ------------------------------------------------------------ multi-device
+@pytest.mark.slow
+def test_multidevice_planner_subprocess():
+    """8 visible devices: auto mesh plan + solve parity (subprocess)."""
+    script = os.path.join(os.path.dirname(__file__),
+                          "md_bc_planner_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL-OK" in out.stdout
