@@ -1,0 +1,164 @@
+"""Fused vs unfused serving throughput (the cross-request batching win).
+
+Drives ``serve.BCService`` at 1–16 concurrent approximate-BC queries on
+one R-MAT graph, twice per concurrency level: ``fuse=False`` (the
+pre-fusion behavior — every request's epoch runs as its own batch,
+padded to the graph-wide ``n_b``) and ``fuse=True`` (per-request (ε, δ)
+plans via ``repro.bc.plan_for_request`` + slot-tagged fused batches
+through the executors' ``step_segmented``). The metric is tick-loop
+throughput in *source samples per second*: fusion packs several
+requests' ragged epoch demand into shared power-of-two buckets, so the
+fixed per-batch cost (kernel dispatch; on a mesh, the fused moments
+all-reduce) and the padding waste are amortized across queries.
+
+The request mix cycles (ε, seed) so per-request plans differ — exactly
+the ragged multi-tenant demand fusion exists for. Each leg is jit-warmed
+by a throwaway identical run (module-level jitted steps cache by shape),
+so timings are steady-state serving, not XLA compilation.
+
+Everything lands in ``BENCH_serve.json`` with the per-request executed
+``BCPlan``s and the graph capacity plan recorded next to the timings;
+``tools/check_bench.py`` asserts the record's shape in CI.
+
+  PYTHONPATH=src python -m benchmarks.bc_serve            # scale 10
+  PYTHONPATH=src python -m benchmarks.bc_serve --smoke    # scale 8, CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Sequence
+
+# (ε, δ) mix cycled over concurrent requests: distinct accuracy contracts
+# produce distinct per-request plans (tight ε → large n_b/budget, loose
+# ε → small n_b and a sub-batch Hoeffding cap) and ragged epoch demand —
+# the multi-tenant shape fusion is for. The loose tiers model cheap
+# "find the hubs" queries; without fusion every one of their under-
+# filled epochs pads to the graph-wide n_b.
+EPS_MIX = (0.05, 0.3, 0.1, 0.4)
+
+
+def _requests(concurrency: int, rule: str, seed: int):
+    from repro.serve.bc_service import BCRequest
+
+    return [BCRequest(rid=i, graph="web", k=10, eps=EPS_MIX[i % len(EPS_MIX)],
+                      delta=0.1, rule=rule, seed=seed + i)
+            for i in range(concurrency)]
+
+
+def _drive(svc, reqs, max_ticks: int = 10_000):
+    """Submit, tick to completion, count sources; returns (rec, responses)."""
+    for r in reqs:
+        svc.submit(r)
+    t0 = time.time()
+    sources = 0
+    ticks = 0
+    while (svc.queue or svc.active) and ticks < max_ticks:
+        sources += svc.step()
+        ticks += 1
+    seconds = time.time() - t0
+    out = svc.finished
+    assert not svc.pending and len(out) == len(reqs), \
+        (len(out), len(reqs), svc.pending)
+    return {
+        "seconds": seconds,
+        "sources": sources,
+        "sources_per_sec": sources / max(seconds, 1e-9),
+        "ticks": ticks,
+        "n_requests": len(reqs),
+        "all_converged": all(r.converged for r in out),
+    }, out
+
+
+def bench_bc_serve(scale: int = 10, degree: int = 8,
+                   levels: Sequence[int] = (1, 2, 4, 8, 16),
+                   n_slots: int = 16, rule: str = "normal",
+                   seed: int = 0) -> Dict:
+    """Fused-vs-unfused serving sweep; returns the BENCH record."""
+    from repro.graphs.generators import from_spec
+    from repro.serve.bc_service import BCService
+
+    g = from_spec("rmat", scale=scale, degree=degree, seed=seed)
+    g, _ = g.remove_isolated()
+
+    def make_service(fuse: bool) -> BCService:
+        return BCService({"web": g}, n_slots=n_slots, fuse=fuse)
+
+    runs: List[Dict] = []
+    graph_plan = None
+    for concurrency in levels:
+        for fuse in (False, True):
+            reqs = _requests(concurrency, rule, seed)
+            # throwaway identical run: compiles every (bucket, variant)
+            # shape this leg will touch, so the timed run is steady-state
+            _drive(make_service(fuse), list(reqs))
+            svc = make_service(fuse)
+            rec, out = _drive(svc, list(reqs))
+            rec.update(concurrency=concurrency, fused=fuse)
+            # The per-request plans that *sized* each run (deduped:
+            # requests sharing (ε, δ, rule) share a cached plan object;
+            # the unfused leg is sized by the graph capacity plan). The
+            # executor configuration that ran them is graph_plan.
+            plans = {id(r.plan): r.plan.to_json() for r in out}
+            rec["plans"] = list(plans.values())
+            runs.append(rec)
+            graph_plan = svc.plan_for("web").to_json()
+
+    speedups = {}
+    by = {(r["concurrency"], r["fused"]): r for r in runs}
+    for c in levels:
+        speedups[str(c)] = (by[(c, True)]["sources_per_sec"]
+                            / max(by[(c, False)]["sources_per_sec"], 1e-9))
+    return {
+        "name": f"bc_serve_rmat_s{scale}_e{degree}",
+        "n": g.n,
+        "m": g.m,
+        "rule": rule,
+        "n_slots": n_slots,
+        "eps_mix": list(EPS_MIX),
+        "levels": list(levels),
+        "graph_plan": graph_plan,
+        "runs": runs,
+        "fused_speedup": speedups,
+    }
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--degree", type=int, default=8)
+    ap.add_argument("--levels", default="1,2,4,8,16",
+                    help="comma-separated concurrency levels")
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--rule", default="normal",
+                    choices=["normal", "bernstein"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (scale 8, levels 1,2,4)")
+    args = ap.parse_args(argv)
+
+    scale = 8 if args.smoke else args.scale
+    levels = ((1, 2, 4) if args.smoke
+              else tuple(int(x) for x in args.levels.split(",")))
+    rec = bench_bc_serve(scale=scale, degree=args.degree, levels=levels,
+                         n_slots=args.slots, rule=args.rule, seed=args.seed)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[bc_serve] n={rec['n']} m={rec['m']} slots={rec['n_slots']} "
+          f"eps_mix={rec['eps_mix']}")
+    for r in rec["runs"]:
+        tag = "fused  " if r["fused"] else "unfused"
+        print(f"[bc_serve] c={r['concurrency']:>2} {tag} "
+              f"{r['sources_per_sec']:8.1f} src/s "
+              f"({r['sources']} sources, {r['ticks']} ticks, "
+              f"{r['seconds']:.2f}s, converged={r['all_converged']})")
+    for c, s in rec["fused_speedup"].items():
+        print(f"[bc_serve] fused speedup @ {c} concurrent: {s:.2f}x")
+    print(f"[bc_serve] wrote {args.out}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

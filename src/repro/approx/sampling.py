@@ -157,10 +157,24 @@ class UniformSampler:
 class AdaptiveSampler:
     """Epoch-doubling adaptive source sampling (1910.11039 §4).
 
-    The driver pulls batches; after each epoch boundary it updates the
-    estimator and calls ``stop()``. ``cap`` bounds the total draw at the
-    Hoeffding budget — by then the a-priori guarantee holds regardless of
-    what the empirical CIs say, so sampling past it is pure waste.
+    Demand and assembly are separate surfaces. The *demand* side —
+    ``next_epoch() -> (epoch_index, m)`` ("give me m sources this
+    epoch") plus ``draw(k)`` — is what cross-request fusion consumes:
+    ``repro.bc.fusion.BatchAssembler`` drains many live samplers' demand
+    on the same graph and packs it into slot-tagged fused batches, so
+    how sources are *drawn* (this class) is decoupled from how they are
+    *batched* (the assembler, or the classic per-request chunking). The
+    ``epochs()`` iterator is the single-query assembly built on that
+    demand side: padded ``n_b``-sized batches, drawing chunk by chunk —
+    the sequential driver in ``repro.bc.solve`` pulls these and updates
+    the estimator at epoch boundaries, then calls ``stop()``. Both
+    assemblies consume the identical RNG stream (numpy draws bounded
+    integers element-wise), so a request samples the same sources
+    whichever path batches it.
+
+    ``cap`` bounds the total draw at the Hoeffding budget — by then the
+    a-priori guarantee holds regardless of what the empirical CIs say,
+    so sampling past it is pure waste.
     """
 
     def __init__(self, n: int, *, eps: float = 0.05, delta: float = 0.1,
@@ -174,6 +188,7 @@ class AdaptiveSampler:
         self.cap = int(cap if cap is not None
                        else hoeffding_budget(n, eps, delta))
         self._epochs = epoch_schedule(tau0 if tau0 else n_b, growth)
+        self._ei = 0
         self.rng = np.random.default_rng(seed)
         self._drawn = 0
         self._stop = False
@@ -190,12 +205,33 @@ class AdaptiveSampler:
     def capped(self) -> bool:
         return self._drawn >= self.cap
 
+    # ------------------------------------------------------- demand side
+    def next_epoch(self) -> Optional[Tuple[int, int]]:
+        """Demand for one epoch: ``(epoch_index, n_sources)``, or ``None``
+        once stopped/capped. Advances the epoch schedule — callers must
+        ``draw`` the returned count (in any chunking) before asking for
+        the next epoch."""
+        if self._stop or self._drawn >= self.cap:
+            return None
+        tau_e = min(next(self._epochs), self.cap - self._drawn)
+        ei = self._ei
+        self._ei += 1
+        return ei, tau_e
+
+    def draw(self, k: int) -> np.ndarray:
+        """Draw k uniform sources (int32) and account for them."""
+        srcs = self.rng.integers(0, self.n, k).astype(np.int32)
+        self._drawn += k
+        return srcs
+
+    # ---------------------------------------------- single-query assembly
     def epochs(self) -> Iterator[Tuple[int, Iterator[SampleBatch]]]:
         """Yields (epoch_index, batch iterator); check ``stop`` between."""
-        for ei, tau_e in enumerate(self._epochs):
-            if self._stop or self._drawn >= self.cap:
+        while True:
+            nxt = self.next_epoch()
+            if nxt is None:
                 return
-            tau_e = min(tau_e, self.cap - self._drawn)
+            ei, tau_e = nxt
             yield ei, self._epoch_batches(ei, tau_e)
 
     def _epoch_batches(self, epoch: int, tau_e: int) -> Iterator[SampleBatch]:
@@ -203,9 +239,8 @@ class AdaptiveSampler:
         while left > 0:
             k = min(self.n_b, left)
             sources = np.zeros(self.n_b, np.int32)
-            sources[:k] = self.rng.integers(0, self.n, k).astype(np.int32)
+            sources[:k] = self.draw(k)
             valid = np.zeros(self.n_b, bool)
             valid[:k] = True
-            self._drawn += k
             left -= k
             yield SampleBatch(sources, valid, epoch)

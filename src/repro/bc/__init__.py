@@ -24,6 +24,12 @@ Typical use::
     pl = plan(g, BCQuery(mode="exact"))     # inspect before running
     print(pl.summary())
 
+The serving stack's fusion surface lives here too: ``plan_for_request``
+(per-query (ε, δ)-aware configuration search), ``BatchAssembler`` /
+``FusedBatch`` (cross-request batch fusion over the executors'
+``step_segmented``), and ``honest_converged`` (the one rule for
+certifying capped runs, shared by ``solve`` and ``serve.BCService``).
+
 The estimator surface (``LambdaEstimator``, ``stopping_check``,
 ``AdaptiveSampler``, ``ApproxResult``, ``choose_sample_batch``) is
 re-exported so downstream packages (serving) need only public
@@ -37,14 +43,18 @@ from repro.approx.driver import (ApproxResult, LambdaEstimator,
 from repro.approx.sampling import AdaptiveSampler, UniformSampler
 from repro.bc.executor import (BatchExecutor, MeshExecutor,
                                SingleHostExecutor, build_executor)
-from repro.bc.planner import BCPlan, BCPlanner
+from repro.bc.fusion import BatchAssembler, FusedBatch, scatter
+from repro.bc.planner import (BCPlan, BCPlanner, bucket_sizes,
+                              plan_for_request)
 from repro.bc.query import BCQuery
-from repro.bc.solve import BCResult, plan, solve
+from repro.bc.solve import BCResult, honest_converged, plan, solve
 
 __all__ = [
     "BCQuery", "BCPlan", "BCPlanner", "BCResult",
     "BatchExecutor", "SingleHostExecutor", "MeshExecutor", "build_executor",
-    "plan", "solve",
+    "plan", "solve", "honest_converged",
+    "BatchAssembler", "FusedBatch", "scatter",
+    "plan_for_request", "bucket_sizes",
     "ApproxResult", "LambdaEstimator", "stopping_check",
     "choose_sample_batch", "AdaptiveSampler", "UniformSampler",
 ]

@@ -1,22 +1,34 @@
 """Executors — one batch-step protocol over every BC backend.
 
 A ``BatchExecutor`` turns a padded source batch into per-vertex
-dependency statistics through two methods: ``step(sources, valid) ->
+dependency statistics through three methods: ``step(sources, valid) ->
 (S1, S2, n_reach)`` with ``S1(v) = Σ_s δ_s(v)`` and
 ``S2(v) = Σ_s δ_s(v)²`` over the batch's valid sources (the (Σδ, Σδ²)
 contract of ``approx.driver.LambdaEstimator``, what the sampling epochs
-call), and ``step_sum(sources, valid) -> S1`` (the exact sweep's
-Σδ-only reduction, skipping the moments overhead). Both drivers in
-``repro.bc.solve`` run over this one protocol, so "exact vs approx" and
-"single host vs mesh" are orthogonal choices.
+call), ``step_sum(sources, valid) -> S1`` (the exact sweep's Σδ-only
+reduction, skipping the moments overhead), and ``step_segmented(sources,
+valid, slot_ids, n_slots) -> (S1, S2, n_reach)`` shaped ``(n_slots, n)``
+— the cross-request fusion primitive: one device call (one fused
+all-reduce on the mesh) serving a batch packed from several concurrent
+queries, segment-reduced per slot. Both drivers in ``repro.bc.solve``
+run over this one protocol, so "exact vs approx" and "single host vs
+mesh" are orthogonal choices, and ``serve.bc_service`` fuses requests
+over it without branching on placement.
+
+Shape bucketing: ``step`` / ``step_sum`` pad to the plan's ``n_b``
+exactly (so single-query results are bit-stable across releases), while
+``step_segmented`` pads to the smallest power-of-two bucket ≥ the batch
+length (``plan.buckets``, see ``planner.bucket_sizes``) — one executor
+serves many ragged fused batch sizes with a bounded set of compiled
+shapes instead of a retrace per length or an always-pad-to-``n_b``.
 
 ``SingleHostExecutor`` is the former ``approx.driver._single_host_step``
 made public: dense or COO adjacency on one device, jitted
-``core.mfbc.mfbc_batch_moments``. ``MeshExecutor`` wraps
-``core.dist_bc.prepare_mesh_batch_step(..., moments=True)`` (Theorem 5.1
-collectives, fused (Σδ, Σδ², n_reach) all-reduce); its ``n_b`` is the
-mesh-divisible rounded-up batch size, which callers must use when sizing
-sample batches.
+``core.mfbc.mfbc_batch_moments``. ``MeshExecutor`` holds one
+``core.dist_bc.MeshBCContext`` (device-resident A/Aᵀ shared by every
+bucket and variant; Theorem 5.1 collectives, fused (Σδ, Σδ², n_reach)
+all-reduce); its ``n_b`` is the mesh-divisible rounded-up batch size,
+which callers must use when sizing sample batches.
 """
 from __future__ import annotations
 
@@ -25,9 +37,10 @@ from typing import Protocol, Tuple, runtime_checkable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.bc.planner import BCPlan
+from repro.bc.planner import BCPlan, bucket_sizes
 from repro.core.adjacency import coo_adj_from_graph, dense_adj_from_graph
-from repro.core.mfbc import mfbc_batch, mfbc_batch_moments
+from repro.core.mfbc import (mfbc_batch, mfbc_batch_moments,
+                             mfbc_batch_moments_segmented)
 from repro.graphs.formats import Graph
 
 Moments = Tuple[np.ndarray, np.ndarray, np.ndarray]  # (S1, S2, n_reach)
@@ -38,6 +51,7 @@ class BatchExecutor(Protocol):
     """The one surface both solve drivers (exact sweep, epochs) run over."""
 
     n_b: int  # effective batch size (mesh executors round the plan's up)
+    buckets: Tuple[int, ...]  # padded shapes served (ascending, max = n_b)
     plan: BCPlan
 
     def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
@@ -49,6 +63,20 @@ class BatchExecutor(Protocol):
         overhead (on the mesh: one n/p_model all-reduce instead of the
         3× stacked one). Built lazily, so approx-only callers never
         compile it."""
+        ...
+
+    def step_segmented(self, sources: np.ndarray, valid: np.ndarray,
+                       slot_ids: np.ndarray, n_slots: int) -> Moments:
+        """Per-slot (Σδ, Σδ², n_reach), each ``(n_slots, n)`` — the fused
+        cross-request batch: row tags ``slot_ids ∈ [0, n_slots)`` say
+        which query each source belongs to. Slot j's statistics are
+        bitwise what an unfused run of its rows (in the same order)
+        would produce on the same executor. Batches are padded to the
+        smallest serving bucket, not ``n_b``."""
+        ...
+
+    def bucket_for(self, k: int) -> int:
+        """The padded shape a k-source fused batch runs at."""
         ...
 
 
@@ -70,12 +98,55 @@ def _pad_batch(sources: np.ndarray, valid: np.ndarray, n_b: int):
     return src, val
 
 
+def _pad_segmented(sources, valid, slot_ids, bucket: int, pad_slot: int):
+    """Pad a fused batch to its bucket; padding rows carry ``valid=False``
+    and slot id ``pad_slot`` (the segment count the kernel runs with —
+    its dump segment, dropped from the result)."""
+    sources = np.asarray(sources, np.int32)
+    valid = np.asarray(valid, bool)
+    slot_ids = np.asarray(slot_ids, np.int32)
+    if not (sources.shape == valid.shape == slot_ids.shape):
+        raise ValueError("sources, valid and slot_ids must share one shape")
+    k = sources.shape[0]
+    if k == bucket:
+        return sources, valid, slot_ids
+    src = np.zeros(bucket, np.int32)
+    val = np.zeros(bucket, bool)
+    sid = np.full(bucket, pad_slot, np.int32)
+    src[:k], val[:k], sid[:k] = sources, valid, slot_ids
+    return src, val, sid
+
+
+def _bucket_for(k: int, buckets: Tuple[int, ...], n_b: int) -> int:
+    for b in buckets:
+        if k <= b:
+            return b
+    raise ValueError(f"batch of {k} sources exceeds the executor's "
+                     f"n_b={n_b}; split it (the BatchAssembler caps "
+                     f"fused batches at executor capacity)")
+
+
+def _slot_bucket(n_slots: int) -> int:
+    """Segment-count bucket: next power of two ≥ n_slots.
+
+    ``n_slots`` is a static jit argument, so compiling per exact slot
+    count would retrace as requests retire (16, 15, 14, … live slots).
+    Bucketing the slot dimension the same way as the batch dimension
+    keeps the compiled-shape set at O(log buckets · log slots); the
+    extra segments are empty and sliced off."""
+    b = 1
+    while b < n_slots:
+        b <<= 1
+    return b
+
+
 class SingleHostExecutor:
     """One-device moments step (dense blocked or COO segment-op relax)."""
 
     def __init__(self, g: Graph, plan: BCPlan):
         self.plan = plan
         self.n_b = plan.n_b
+        self.buckets = plan.buckets or bucket_sizes(plan.n_b)
         if plan.backend == "dense":
             self._adj = dense_adj_from_graph(g, block=plan.block,
                                              use_kernel=plan.use_kernel)
@@ -83,6 +154,9 @@ class SingleHostExecutor:
             self._adj = coo_adj_from_graph(g)
         else:
             raise ValueError(f"unknown backend {plan.backend!r}")
+
+    def bucket_for(self, k: int) -> int:
+        return _bucket_for(k, self.buckets, self.n_b)
 
     def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
         src, val = _pad_batch(sources, valid, self.n_b)
@@ -97,12 +171,28 @@ class SingleHostExecutor:
                                  jnp.asarray(val))
         return np.asarray(lam_b, np.float64)
 
+    def step_segmented(self, sources: np.ndarray, valid: np.ndarray,
+                       slot_ids: np.ndarray, n_slots: int) -> Moments:
+        bucket = self.bucket_for(np.asarray(sources).shape[0])
+        n_seg = _slot_bucket(n_slots)  # pad the slot dim too (jit-static)
+        src, val, sid = _pad_segmented(sources, valid, slot_ids, bucket,
+                                       n_seg)
+        s1, s2, nr = mfbc_batch_moments_segmented(
+            self._adj, jnp.asarray(src), jnp.asarray(val), jnp.asarray(sid),
+            n_slots=n_seg)
+        return (np.asarray(s1, np.float64)[:n_slots],
+                np.asarray(s2, np.float64)[:n_slots],
+                np.asarray(nr)[:n_slots])
+
 
 class MeshExecutor:
     """Distributed Theorem 5.1 moments step on a (pod, data, model) mesh.
 
     ``mesh=None`` builds the mesh the plan chose (``plan.mesh_axes``) from
-    the visible devices; pass an explicit mesh to reuse one.
+    the visible devices; pass an explicit mesh to reuse one. All variants
+    and buckets share one lazily built ``MeshBCContext`` — the padded,
+    permuted adjacency is uploaded once, and each (bucket, variant) pair
+    compiles once.
     """
 
     def __init__(self, g: Graph, plan: BCPlan, mesh=None):
@@ -116,41 +206,57 @@ class MeshExecutor:
         self.plan = plan
         self.mesh = mesh
         self._g = g
-        # Lazy per-variant builds: an exact-only caller never compiles the
-        # moments step and vice versa (each build is its own shard_map+jit).
-        self._run_moments = None
-        self._run_sum = None
-        # prepare_mesh_batch_step's batch rounding (sources are sharded
-        # over pod×data), computed up front so callers can size sample
-        # batches before any device work happens; _prepare asserts the
+        # Lazy context: an executor built for planning introspection never
+        # pads or uploads the adjacency.
+        self._ctx = None
+        # MeshBCContext's batch rounding (sources are sharded over
+        # pod×data), computed up front so callers can size sample
+        # batches before any device work happens; _context asserts the
         # two stay in sync.
         sizes = dict(zip(mesh.axis_names, (int(s) for s in
                                            mesh.devices.shape)))
         chunk = sizes.get("pod", 1) * sizes.get("data", 1)
         self.n_b = -(-plan.n_b // chunk) * chunk
+        # Bucket set: the plan's power-of-two shapes, each rounded up to
+        # the mesh divisibility (dedup keeps them ascending).
+        rounded = [-(-b // chunk) * chunk
+                   for b in (plan.buckets or bucket_sizes(plan.n_b))]
+        rounded.append(self.n_b)
+        self.buckets = tuple(sorted({min(b, self.n_b) for b in rounded}))
 
-    def _prepare(self, *, moments: bool):
-        from repro.core.dist_bc import prepare_mesh_batch_step
+    def _context(self):
+        from repro.core.dist_bc import MeshBCContext
 
-        pl = self.plan
-        run, nb = prepare_mesh_batch_step(
-            self._g, self.mesh, nb=pl.n_b,
-            iters=pl.iters if pl.iters > 0 else self._g.n,
-            use_kernel=pl.use_kernel, block=pl.block, moments=moments)
-        assert nb == self.n_b, (nb, self.n_b)
-        return run
+        if self._ctx is None:
+            pl = self.plan
+            self._ctx = MeshBCContext(self._g, self.mesh,
+                                      iters=pl.iters if pl.iters > 0 else 0,
+                                      use_kernel=pl.use_kernel,
+                                      block=pl.block)
+            assert self._ctx.round_nb(pl.n_b) == self.n_b, \
+                (self._ctx.round_nb(pl.n_b), self.n_b)
+        return self._ctx
+
+    def bucket_for(self, k: int) -> int:
+        return _bucket_for(k, self.buckets, self.n_b)
 
     def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
-        if self._run_moments is None:
-            self._run_moments = self._prepare(moments=True)
         src, val = _pad_batch(sources, valid, self.n_b)
-        return self._run_moments(src, val)
+        return self._context().run_moments(src, val, nb=self.n_b)
 
     def step_sum(self, sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
-        if self._run_sum is None:
-            self._run_sum = self._prepare(moments=False)
         src, val = _pad_batch(sources, valid, self.n_b)
-        return self._run_sum(src, val)
+        return self._context().run_sum(src, val, nb=self.n_b)
+
+    def step_segmented(self, sources: np.ndarray, valid: np.ndarray,
+                       slot_ids: np.ndarray, n_slots: int) -> Moments:
+        bucket = self.bucket_for(np.asarray(sources).shape[0])
+        n_seg = _slot_bucket(n_slots)  # pad the slot dim too (jit-static)
+        src, val, sid = _pad_segmented(sources, valid, slot_ids, bucket,
+                                       n_seg)
+        s1, s2, nr = self._context().run_segmented(src, val, sid, n_seg,
+                                                   nb=bucket)
+        return s1[:n_slots], s2[:n_slots], nr[:n_slots]
 
 
 def build_executor(g: Graph, plan: BCPlan, *, mesh=None) -> BatchExecutor:

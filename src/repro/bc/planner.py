@@ -36,6 +36,29 @@ from repro.spgemm.cost_model import DEFAULT, CostParams, best_replication
 import numpy as np
 
 _WORD = 4.0  # f32 device word
+BUCKET_FLOOR = 8  # smallest padded batch shape an executor compiles
+
+
+def bucket_sizes(n_b: int, floor: int = BUCKET_FLOOR) -> Tuple[int, ...]:
+    """Power-of-two padded batch buckets up to (and including) ``n_b``.
+
+    The shape-bucketing contract shared by the planner (which records the
+    set in the ``BCPlan``) and the executors (which keep one jitted step
+    per bucket): a batch of k sources runs at the smallest bucket ≥ k, so
+    an executor serves many ragged batch sizes with at most
+    ``log2(n_b / floor) + 1`` compiled shapes — no retrace storms, no
+    always-pad-to-``n_b`` waste. Mesh executors additionally round each
+    bucket up to their pod·data divisibility.
+    """
+    if n_b <= 0:
+        raise ValueError(f"n_b must be positive, got {n_b}")
+    out = []
+    b = floor
+    while b < n_b:
+        out.append(b)
+        b <<= 1
+    out.append(int(n_b))
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +91,7 @@ class BCPlan:
     predicted_seconds: float
     predicted_mem_bytes: float
     regime: Dict[str, float]  # choose_bc_regime output (dense vs COO)
+    buckets: Tuple[int, ...] = ()  # padded batch shapes the executor serves
 
     def axes_dict(self) -> Optional[Dict[str, int]]:
         return dict(self.mesh_axes) if self.mesh_axes is not None else None
@@ -76,6 +100,7 @@ class BCPlan:
         """JSON-serializable view (benchmarks record this next to timings)."""
         d = dataclasses.asdict(self)
         d["mesh_axes"] = self.axes_dict()
+        d["buckets"] = list(self.buckets)
         return d
 
     def summary(self) -> str:
@@ -187,7 +212,7 @@ class BCPlanner:
             est_iters=int(est_iters), predicted_step_seconds=float(step_s),
             predicted_comm_bytes=float(comm_bytes),
             predicted_seconds=float(seconds), predicted_mem_bytes=float(mem),
-            regime=regime)
+            regime=regime, buckets=bucket_sizes(int(n_b)))
 
     # ------------------------------------------------------------------
     def _placement(self, n: int, m: int, query, mesh,
@@ -228,3 +253,34 @@ class BCPlanner:
                     + state_bytes(n, n_b, p=p))
         return (adjacency_bytes(n, m, backend=backend)
                 + state_bytes(n, n_b))
+
+
+_REQUEST_PLANNER = BCPlanner()
+
+
+def plan_for_request(g: Graph, *, eps: float, delta: float,
+                     rule: str = "normal", topk: Optional[int] = None,
+                     max_samples: Optional[int] = None, seed: int = 0,
+                     backend: Optional[str] = None, iters: int = 0,
+                     mesh=None, n_devices: Optional[int] = None,
+                     planner: Optional[BCPlanner] = None) -> BCPlan:
+    """Size an approximate-BC plan from one serving request's (ε, δ).
+
+    The per-query half of the serving autotuning story: instead of one
+    frozen per-graph ``n_b``, each request's accuracy contract flows
+    through the α-β cost model — the (ε, δ) Hoeffding budget is the
+    ``budget_hint`` that ``choose_sample_batch`` sizes ``n_b`` against,
+    so a loose-ε request plans a small first epoch and a tight-ε request
+    a large one — and the resulting plan records the power-of-two
+    ``buckets`` its batches will run at. ``serve.BCService`` calls this
+    once per distinct (graph, ε, δ, rule) and caches the result; the
+    cross-request half (packing several requests' demand into one fused
+    batch) is ``repro.bc.fusion.BatchAssembler``.
+    """
+    from repro.bc.query import BCQuery
+
+    q = BCQuery(mode="approx", eps=eps, delta=delta, rule=rule, topk=topk,
+                max_samples=max_samples, seed=seed, backend=backend,
+                iters=iters)
+    return (planner or _REQUEST_PLANNER).plan(g, q, mesh=mesh,
+                                              n_devices=n_devices)

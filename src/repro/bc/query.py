@@ -6,13 +6,19 @@ layers (the §6.2 "automatic configuration search" made first-class):
 * **query** (this module) — accuracy/budget intent: exact or approximate,
   (ε, δ) targets, top-k early exit, stopping rule, seed, sample cap.
 * **plan** (``repro.bc.planner``) — the chosen execution configuration:
-  backend, batch size n_b, single-host vs mesh placement, predicted cost.
+  backend, batch size n_b (plus its power-of-two serving ``buckets``),
+  single-host vs mesh placement, predicted cost.
 * **executor** (``repro.bc.executor``) — the jitted batch step behind one
-  ``step(sources, valid) -> (S1, S2, n_reach)`` protocol.
+  ``step(sources, valid) -> (S1, S2, n_reach)`` protocol (plus the
+  slot-tagged ``step_segmented`` fused variant the serving stack packs
+  many queries into).
 
 A ``BCQuery`` carries *optional overrides* (``n_b``, ``backend``,
 ``use_kernel``) for callers that want to pin part of the configuration —
-``None``/default means "let the planner decide".
+``None``/default means "let the planner decide". Serving requests reach
+this layer through ``repro.bc.plan_for_request``, which builds the
+equivalent approx query from one request's (ε, δ) so per-query batch
+sizing flows through the same planner as every other entry point.
 """
 from __future__ import annotations
 

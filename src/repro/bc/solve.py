@@ -36,6 +36,21 @@ from repro.graphs.formats import Graph
 _DEFAULT_PLANNER = BCPlanner()
 
 
+def honest_converged(est: LambdaEstimator) -> bool:
+    """Can this estimator's run be certified as converged at its (ε, δ)?
+
+    A sample cap *below* the Hoeffding budget carries no a-priori
+    guarantee — only the empirical CIs can still certify convergence
+    there; at or past the budget the a-priori bound holds regardless of
+    what the CIs say. Shared by the ``solve`` approx driver and
+    ``serve.BCService`` retirement, so a capped run is reported
+    converged under exactly one rule everywhere.
+    """
+    if est.tau >= S.hoeffding_budget(est.n, est.eps, est.delta):
+        return True
+    return est.converged()
+
+
 @dataclasses.dataclass
 class BCResult:
     """Solver outcome: λ plus the plan that produced it.
@@ -134,19 +149,11 @@ def _run_exact(g: Graph, ex: BatchExecutor, sources, progress_cb):
 def _run_approx(g: Graph, q: BCQuery, ex: BatchExecutor,
                 progress_cb) -> ApproxResult:
     n = g.n
-    hoeffding = S.hoeffding_budget(n, q.eps, q.delta)
     est = LambdaEstimator(n, q.eps, q.delta, q.rule)
 
     def run_batch(b: S.SampleBatch) -> None:
         s1, s2, _ = ex.step(b.sources, b.valid)
         est.update(s1, s2, b.n_valid)
-
-    def honest_converged() -> bool:
-        """A cap below the Hoeffding budget carries no a-priori guarantee
-        — only the empirical CIs can still certify convergence there."""
-        if est.tau >= hoeffding:
-            return True
-        return est.converged()
 
     if q.strategy == "uniform":
         sampler = S.UniformSampler(n, eps=q.eps, delta=q.delta, n_b=ex.n_b,
@@ -155,7 +162,7 @@ def _run_approx(g: Graph, q: BCQuery, ex: BatchExecutor,
         for b in sampler.batches():
             run_batch(b)
             epochs = b.epoch + 1
-        return est.result(n_epochs=epochs, converged=honest_converged())
+        return est.result(n_epochs=epochs, converged=honest_converged(est))
 
     sampler = S.AdaptiveSampler(n, eps=q.eps, delta=q.delta, n_b=ex.n_b,
                                 cap=q.max_samples, seed=q.seed)
@@ -172,5 +179,5 @@ def _run_approx(g: Graph, q: BCQuery, ex: BatchExecutor,
             converged = True
             sampler.stop()
     if sampler.capped and not converged:
-        converged = honest_converged()
+        converged = honest_converged(est)
     return est.result(n_epochs=n_epochs, converged=converged)

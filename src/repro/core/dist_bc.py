@@ -318,7 +318,35 @@ def _batch_step_moments_local(cfg: BCMeshConfig, a_loc, at_loc, sources_loc,
     return jax.lax.psum(stats, cfg.batch_axes)
 
 
-def build_mfbc_step(mesh: Mesh, cfg: BCMeshConfig, *, moments: bool = False):
+def _batch_step_moments_segmented_local(cfg: BCMeshConfig, n_slots: int,
+                                        a_loc, at_loc, sources_loc,
+                                        valid_loc, slots_loc):
+    """Segment-reduced moments step: per-slot (Σδ, Σδ², n_reach).
+
+    The cross-request fusion primitive on the mesh (the distributed
+    counterpart of ``core.mfbc.mfbc_batch_moments_segmented``): each
+    device segment-sums its local source rows into ``(n_slots, n/model)``
+    per-slot statistics (rows tagged ``slots_loc == n_slots`` are padding
+    and land in a dump segment that is dropped), then all three
+    statistics for *all* slots ride one stacked ``psum`` over the batch
+    axes — a fused batch packing many queries still costs exactly one
+    collective of ``3·n_slots·n/p_model`` floats, which is the whole
+    point of fusing under-filled per-request batches.
+    """
+    contrib, mask = _batch_delta_local(cfg, a_loc, at_loc, sources_loc,
+                                       valid_loc)
+    seg = functools.partial(jax.ops.segment_sum, segment_ids=slots_loc,
+                            num_segments=n_slots + 1)
+    stats = jnp.stack([
+        seg(contrib)[:n_slots],                         # S1 per slot
+        seg(contrib * contrib)[:n_slots],               # S2 per slot
+        seg(mask.astype(jnp.float32))[:n_slots],        # n_reach per slot
+    ])  # (3, n_slots, n/model)
+    return jax.lax.psum(stats, cfg.batch_axes)
+
+
+def build_mfbc_step(mesh: Mesh, cfg: BCMeshConfig, *, moments: bool = False,
+                    segments: Optional[int] = None):
     """Returns a jit'd distributed batch step on ``mesh``.
 
     a / a_t: (n, n) dense adjacency and its transpose, laid out
@@ -329,9 +357,22 @@ def build_mfbc_step(mesh: Mesh, cfg: BCMeshConfig, *, moments: bool = False):
     (the exact sweep's Σδ). With ``moments=True`` it returns a (3, n)
     stack of (Σδ, Σδ², n_reach) sharded over model in the vertex
     dimension — the distributed counterpart of
-    ``core.mfbc.mfbc_batch_moments``.
+    ``core.mfbc.mfbc_batch_moments``. With ``segments=n_slots`` the step
+    additionally takes per-row slot ids (same P((pod, data)) layout as
+    the sources) and returns a (3, n_slots, n) stack segment-reduced per
+    slot — the fused cross-request batch step.
     """
     state_spec, adj_spec, src_spec, lam_spec = cfg.specs()
+    if segments is not None:
+        fn = shard_map(
+            functools.partial(_batch_step_moments_segmented_local, cfg,
+                              segments),
+            mesh=mesh,
+            in_specs=(adj_spec, adj_spec, src_spec, src_spec, src_spec),
+            out_specs=P(None, None, cfg.model_axis),
+            check_vma=False,
+        )
+        return jax.jit(fn)
     body = _batch_step_moments_local if moments else _batch_step_local
     out_spec = P(None, cfg.model_axis) if moments else lam_spec
     fn = shard_map(
@@ -371,10 +412,130 @@ def vertex_row_permutation(n: int, d_sz: int, m_sz: int):
     return perm
 
 
+class MeshBCContext:
+    """Device-resident mesh state shared across batch-size buckets.
+
+    Pads and permutes the adjacency once, uploads A and Aᵀ once, and
+    hands out jitted batch steps per ``(nb, variant)`` from a cache — so
+    one executor can serve several padded batch sizes (the power-of-two
+    bucket set of ``repro.bc``) and the segmented fusion variant without
+    re-uploading the adjacency or retracing already-compiled shapes.
+    ``prepare_mesh_batch_step`` remains as the single-``nb`` convenience
+    wrapper over this class.
+    """
+
+    def __init__(self, g, mesh: Mesh, *, iters: int = 0,
+                 use_kernel: bool = False, block: int = 512):
+        import numpy as np
+
+        from repro.graphs.formats import coo_to_dense
+
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.mesh = mesh
+        self.n = g.n
+        self._d_sz = axis_sizes["data"]
+        self._m_sz = axis_sizes["model"]
+        self._pod = "pod" if "pod" in axis_sizes else None
+        self._p_sz = axis_sizes.get("pod", 1)
+        self.chunk = self._p_sz * self._d_sz  # source-batch divisibility
+        self.iters = iters if iters > 0 else g.n
+        self._use_kernel = use_kernel
+        self._block = block
+
+        lcm = self._d_sz * self._m_sz
+        self.n_pad = -(-g.n // lcm) * lcm
+        a = np.full((self.n_pad, self.n_pad), np.inf, dtype=np.float32)
+        a[:g.n, :g.n] = coo_to_dense(g)
+        self.perm = vertex_row_permutation(self.n_pad, self._d_sz, self._m_sz)
+        # Shardings depend only on axis names, not on nb: one probe cfg.
+        sh_a, sh_at, self._sh_src, self._sh_val = input_shardings(
+            mesh, self._cfg(self.chunk))
+        self._a_dev = jax.device_put(jnp.asarray(a[self.perm, :]), sh_a)
+        self._at_dev = jax.device_put(jnp.asarray(a.T[self.perm, :]), sh_at)
+        self._steps = {}  # (nb_pad, variant, n_slots) -> jitted step
+
+    def round_nb(self, nb: int) -> int:
+        """Smallest pod·data multiple ≥ nb (the mesh batch divisibility)."""
+        return -(-nb // self.chunk) * self.chunk
+
+    def _cfg(self, nb_pad: int) -> BCMeshConfig:
+        return BCMeshConfig(n=self.n_pad, nb=nb_pad, iters_bf=self.iters,
+                            iters_br=self.iters, pod_axis=self._pod,
+                            use_kernel=self._use_kernel, block=self._block)
+
+    def _step(self, nb_pad: int, variant: str, n_slots: Optional[int] = None):
+        key = (nb_pad, variant, n_slots)
+        if key not in self._steps:
+            cfg = self._cfg(nb_pad)
+            if variant == "segmented":
+                self._steps[key] = build_mfbc_step(self.mesh, cfg,
+                                                   segments=n_slots)
+            else:
+                self._steps[key] = build_mfbc_step(
+                    self.mesh, cfg, moments=(variant == "moments"))
+        return self._steps[key]
+
+    def _pad_inputs(self, nb_pad: int, sources, valid,
+                    slot_ids=None, n_slots: int = 0):
+        import numpy as np
+
+        src = np.zeros(nb_pad, np.int32)
+        val = np.zeros(nb_pad, bool)
+        k = min(sources.shape[0], nb_pad)
+        src[:k], val[:k] = sources[:k], valid[:k]
+        out = [jax.device_put(jnp.asarray(src), self._sh_src),
+               jax.device_put(jnp.asarray(val), self._sh_val)]
+        if slot_ids is not None:
+            # Padding rows land in the dump segment n_slots (dropped).
+            sid = np.full(nb_pad, n_slots, np.int32)
+            sid[:k] = slot_ids[:k]
+            out.append(jax.device_put(jnp.asarray(sid), self._sh_src))
+        return out
+
+    def run_sum(self, sources, valid, *, nb: int):
+        """Σδ-only batch contribution, original vertex order, length n."""
+        import numpy as np
+
+        nb_pad = self.round_nb(nb)
+        src, val = self._pad_inputs(nb_pad, sources, valid)
+        lam_b = self._step(nb_pad, "sum")(self._a_dev, self._at_dev, src, val)
+        lam = np.zeros(self.n_pad, dtype=np.float64)
+        lam[self.perm] = np.asarray(lam_b, np.float64)  # undo permutation
+        return lam[:self.n]
+
+    def run_moments(self, sources, valid, *, nb: int):
+        """(S1, S2, n_reach) per vertex — the sampling-epoch reduction."""
+        import numpy as np
+
+        nb_pad = self.round_nb(nb)
+        src, val = self._pad_inputs(nb_pad, sources, valid)
+        stats_b = self._step(nb_pad, "moments")(self._a_dev, self._at_dev,
+                                                src, val)
+        stats = np.zeros((3, self.n_pad), dtype=np.float64)
+        stats[:, self.perm] = np.asarray(stats_b, np.float64)
+        return (stats[0, :self.n], stats[1, :self.n],
+                stats[2, :self.n].astype(np.int64))
+
+    def run_segmented(self, sources, valid, slot_ids, n_slots: int, *,
+                      nb: int):
+        """Per-slot (S1, S2, n_reach), each (n_slots, n) — fused batches."""
+        import numpy as np
+
+        nb_pad = self.round_nb(nb)
+        src, val, sid = self._pad_inputs(nb_pad, sources, valid,
+                                         slot_ids, n_slots)
+        stats_b = self._step(nb_pad, "segmented", n_slots)(
+            self._a_dev, self._at_dev, src, val, sid)
+        stats = np.zeros((3, n_slots, self.n_pad), dtype=np.float64)
+        stats[:, :, self.perm] = np.asarray(stats_b, np.float64)
+        return (stats[0, :, :self.n], stats[1, :, :self.n],
+                stats[2, :, :self.n].astype(np.int64))
+
+
 def prepare_mesh_batch_step(g, mesh: Mesh, *, nb: int, iters: int = 0,
                             use_kernel: bool = False, block: int = 512,
                             moments: bool = False):
-    """Shared host-side mesh setup: pad, permute, shard, jit.
+    """Single-``nb`` convenience wrapper over ``MeshBCContext``.
 
     Returns ``(run, nb_pad)`` where ``run`` takes host arrays of up to
     ``nb_pad`` sources (shorter inputs are zero-padded with
@@ -395,54 +556,17 @@ def prepare_mesh_batch_step(g, mesh: Mesh, *, nb: int, iters: int = 0,
       on the mesh path. The Σδ² reduction rides the same fused all-reduce
       as Σδ (see ``_batch_step_moments_local``), so the extra
       communication is one stacked psum per batch.
+
+    Callers that serve several batch sizes (or the segmented fused step)
+    should hold a ``MeshBCContext`` directly — this wrapper builds a
+    fresh context, so the adjacency upload is not shared across calls.
     """
-    import numpy as np
-
-    from repro.graphs.formats import coo_to_dense
-
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    d_sz = axis_sizes["data"]
-    m_sz = axis_sizes["model"]
-    pod = "pod" if "pod" in axis_sizes else None
-    p_sz = axis_sizes.get("pod", 1)
-
-    lcm = d_sz * m_sz
-    n_pad = -(-g.n // lcm) * lcm
-    a = np.full((n_pad, n_pad), np.inf, dtype=np.float32)
-    a[:g.n, :g.n] = coo_to_dense(g)
-    perm = vertex_row_permutation(n_pad, d_sz, m_sz)
-
-    iters = iters if iters > 0 else g.n
-    nb_pad = -(-nb // (p_sz * d_sz)) * (p_sz * d_sz)
-    cfg = BCMeshConfig(n=n_pad, nb=nb_pad, iters_bf=iters, iters_br=iters,
-                       pod_axis=pod, use_kernel=use_kernel, block=block)
-    step = build_mfbc_step(mesh, cfg, moments=moments)
-    sh_a, sh_at, sh_src, sh_val = input_shardings(mesh, cfg)
-    a_dev = jax.device_put(jnp.asarray(a[perm, :]), sh_a)
-    at_dev = jax.device_put(jnp.asarray(a.T[perm, :]), sh_at)
-
-    def _device_call(sources: np.ndarray, valid: np.ndarray):
-        src = np.zeros(nb_pad, np.int32)
-        val = np.zeros(nb_pad, bool)
-        k = min(sources.shape[0], nb_pad)
-        src[:k], val[:k] = sources[:k], valid[:k]
-        return step(a_dev, at_dev, jax.device_put(jnp.asarray(src), sh_src),
-                    jax.device_put(jnp.asarray(val), sh_val))
-
-    def run(sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
-        lam_b = _device_call(sources, valid)
-        lam = np.zeros(n_pad, dtype=np.float64)
-        lam[perm] = np.asarray(lam_b, np.float64)  # undo the permutation
-        return lam[:g.n]
-
-    def run_moments(sources: np.ndarray, valid: np.ndarray):
-        stats_b = _device_call(sources, valid)
-        stats = np.zeros((3, n_pad), dtype=np.float64)
-        stats[:, perm] = np.asarray(stats_b, np.float64)  # undo permutation
-        return (stats[0, :g.n], stats[1, :g.n],
-                stats[2, :g.n].astype(np.int64))
-
-    return (run_moments if moments else run), nb_pad
+    ctx = MeshBCContext(g, mesh, iters=iters, use_kernel=use_kernel,
+                        block=block)
+    nb_pad = ctx.round_nb(nb)
+    if moments:
+        return (lambda s, v: ctx.run_moments(s, v, nb=nb_pad)), nb_pad
+    return (lambda s, v: ctx.run_sum(s, v, nb=nb_pad)), nb_pad
 
 
 def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,

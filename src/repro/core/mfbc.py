@@ -80,6 +80,35 @@ def mfbc_batch_moments(adj, sources: jax.Array, valid: jax.Array, *,
             jnp.sum(mask, axis=0).astype(jnp.int32))
 
 
+@functools.partial(jax.jit, static_argnames=("n_slots", "iterate",
+                                             "max_iters_bf", "max_iters_br"))
+def mfbc_batch_moments_segmented(adj, sources: jax.Array, valid: jax.Array,
+                                 slot_ids: jax.Array, *, n_slots: int,
+                                 iterate: str = "while",
+                                 max_iters_bf: int = 0, max_iters_br: int = 0
+                                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One Algorithm 3 batch, moments segment-reduced per request slot.
+
+    The cross-request fusion primitive: a fused batch packs sources from
+    several concurrent queries, tagged per row with ``slot_ids[s] ∈
+    [0, n_slots)`` (padding rows carry ``slot_ids == n_slots``, a dump
+    segment that is dropped). Returns (S1, S2, n_reach) each shaped
+    ``(n_slots, n)``, where row j holds exactly what
+    ``mfbc_batch_moments`` would return for slot j's rows alone — the
+    segment-sum accumulates each slot's rows in batch order, so a slot's
+    statistics are bitwise-identical to an unfused run of the same rows.
+    One device call (and, on the mesh analogue, one fused all-reduce)
+    therefore serves every query in the batch.
+    """
+    contrib, mask, _, _ = _batch_contrib(adj, sources, valid, iterate=iterate,
+                                         max_iters_bf=max_iters_bf,
+                                         max_iters_br=max_iters_br)
+    seg = functools.partial(jax.ops.segment_sum, segment_ids=slot_ids,
+                            num_segments=n_slots + 1)
+    return (seg(contrib)[:n_slots], seg(contrib * contrib)[:n_slots],
+            seg(mask.astype(jnp.int32))[:n_slots])
+
+
 def mfbc(g: Graph, *, n_b: Optional[int] = None, backend: str = "dense",
          iterate: str = "while", max_iters: int = 0, block: int = 512,
          use_kernel: bool = False, sources: Optional[np.ndarray] = None,

@@ -10,14 +10,28 @@ a slot frees the moment its estimator converges, exactly the
 no-head-of-line-blocking property of the decode engine.
 
 Graphs are registered up front (like model weights); the unified
-``repro.bc`` planner resolves each one to a ``BCPlan`` and a shared
-``BatchExecutor`` — jitted batch step plus device-resident adjacency —
-reused by every request that names the graph: the serving-side
-amortization that makes "BC from millions of users" viable. With a
-``mesh``, the planner pins placement to the distributed Theorem 5.1
-moments step; the slot loop is executor-oblivious either way because
-both executors speak the same ``step(sources, valid) -> (S1, S2,
-n_reach)`` protocol.
+``repro.bc`` planner resolves each one to a capacity ``BCPlan`` and a
+shared ``BatchExecutor`` — jitted batch step plus device-resident
+adjacency — reused by every request that names the graph. On top of
+that per-graph amortization the tick loop runs the two per-query
+optimizations of the serving stack:
+
+* **per-request planning** — each distinct (graph, ε, δ, rule) resolves
+  its own ``BCPlan`` through ``repro.bc.plan_for_request`` (cached), so
+  a loose-ε request samples small epochs instead of inheriting the
+  graph-wide batch size;
+* **cross-request fusion** — active slots are grouped by graph each
+  tick and their epoch demand is drained through one
+  ``repro.bc.BatchAssembler`` into slot-tagged fused batches for the
+  executor's ``step_segmented``: several under-filled per-request
+  batches become one padded batch, paying the step's fixed cost (kernel
+  dispatch; on a mesh, the fused moments all-reduce) once per batch
+  instead of once per request. A lone request whose batch size matches
+  the executor's runs the classic per-request path, so single-query
+  service answers are bit-identical to ``repro.bc.solve``'s driver.
+
+``fuse=False`` disables both (the pre-fusion behavior, kept for the
+fused-vs-unfused benchmark ``benchmarks/bc_serve.py``).
 
 This module deliberately imports only public ``repro.bc`` names — the
 facade re-exports the estimator surface — so the old private-API leak
@@ -29,12 +43,13 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.bc import (AdaptiveSampler, BatchExecutor, BCQuery,
-                      LambdaEstimator, build_executor)
+from repro.bc import (AdaptiveSampler, BatchAssembler, BatchExecutor,
+                      BCPlan, BCQuery, LambdaEstimator, build_executor,
+                      honest_converged, plan_for_request, scatter)
 from repro.bc import plan as bc_plan
 from repro.bc import stopping_check
 from repro.graphs.formats import Graph
@@ -49,6 +64,7 @@ class BCRequest:
     delta: float = 0.1
     rule: str = "normal"
     seed: int = 0
+    max_samples: Optional[int] = None  # hard cap under the Hoeffding budget
 
 
 @dataclasses.dataclass
@@ -62,6 +78,7 @@ class BCResponse:
     n_epochs: int
     converged: bool
     seconds: float
+    plan: Optional[BCPlan] = None  # the per-request plan that sized the run
 
 
 @dataclasses.dataclass
@@ -69,7 +86,7 @@ class _Job:
     req: BCRequest
     sampler: AdaptiveSampler
     est: LambdaEstimator
-    epochs: object  # iterator from sampler.epochs()
+    plan: BCPlan  # per-request plan (plan_for_request, cached)
     t0: float
     n_epochs: int = 0
 
@@ -83,20 +100,30 @@ class BCService:
     (identical (S1, S2, n_reach) protocol, so the slot loop never
     branches on placement). ``iters`` bounds the mesh step's static
     forward/backward sweeps (0 = graph size, always safe). Per-graph
-    plans are inspectable via ``plan_for(name)``.
+    capacity plans are inspectable via ``plan_for(name)``, per-request
+    plans via the ``plan`` field of each ``BCResponse``.
+
+    ``run`` never drops work silently: if ``max_ticks`` expires with
+    requests still queued or active, ``exhausted`` is True and
+    ``pending`` lists every unfinished request.
     """
 
     def __init__(self, graphs: Dict[str, Graph], *, n_slots: int = 4,
-                 backend: str = "dense", mesh=None, iters: int = 0):
+                 backend: str = "dense", mesh=None, iters: int = 0,
+                 fuse: bool = True):
         self.graphs = dict(graphs)
         self.backend = backend
         self.mesh = mesh
         self.iters = iters
         self.n_slots = n_slots
+        self.fuse = fuse
         self.slots: List[Optional[_Job]] = [None] * n_slots
         self.queue: Deque[BCRequest] = deque()
         self.finished: List[BCResponse] = []
+        self.exhausted = False  # run() hit max_ticks with work pending
         self._executors: Dict[str, BatchExecutor] = {}
+        self._assemblers: Dict[str, BatchAssembler] = {}
+        self._request_plans: Dict[Tuple, BCPlan] = {}
 
     # ------------------------------------------------------------------
     def submit(self, req: BCRequest) -> None:
@@ -105,9 +132,10 @@ class BCService:
         self.queue.append(req)
 
     def _graph_executor(self, name: str) -> BatchExecutor:
-        """Plan + executor per registered graph, built lazily, shared by
-        every request (n_b is per-graph; per-query re-sizing is the open
-        ROADMAP autotuning item)."""
+        """Capacity plan + executor per registered graph, built lazily,
+        shared by every request that names the graph. Fused batches are
+        capped at this executor's ``n_b``; per-request (ε, δ) sizing
+        happens in ``_plan_for_request`` on top."""
         if name not in self._executors:
             g = self.graphs[name]
             pl = bc_plan(g, BCQuery(mode="approx", backend=self.backend,
@@ -116,8 +144,26 @@ class BCService:
             self._executors[name] = build_executor(g, pl, mesh=self.mesh)
         return self._executors[name]
 
+    def _assembler(self, name: str) -> BatchAssembler:
+        if name not in self._assemblers:
+            self._assemblers[name] = BatchAssembler(
+                self._graph_executor(name))
+        return self._assemblers[name]
+
+    def _plan_for_request(self, req: BCRequest) -> BCPlan:
+        """Per-request configuration search, cached by what sizes it:
+        requests sharing (graph, ε, δ, rule, cap) share one plan."""
+        key = (req.graph, req.eps, req.delta, req.rule, req.max_samples)
+        if key not in self._request_plans:
+            self._request_plans[key] = plan_for_request(
+                self.graphs[req.graph], eps=req.eps, delta=req.delta,
+                rule=req.rule, max_samples=req.max_samples,
+                backend=self.backend, iters=self.iters, mesh=self.mesh)
+        return self._request_plans[key]
+
     def plan_for(self, name: str):
-        """The ``BCPlan`` serving this graph (builds the executor)."""
+        """The capacity ``BCPlan`` serving this graph (builds the
+        executor)."""
         return self._graph_executor(name).plan
 
     def _admit(self) -> None:
@@ -127,11 +173,25 @@ class BCService:
             req = self.queue.popleft()
             g = self.graphs[req.graph]
             ex = self._graph_executor(req.graph)
+            # The sampler's n_b sets the request's epoch schedule (τ₀)
+            # and the unfused chunking; fused batches are assembled at
+            # executor capacity regardless. Without fusion fall back to
+            # the graph-wide capacity plan (the pre-fusion behavior) —
+            # the plan on the response is whatever actually sized the run.
+            pl = (self._plan_for_request(req) if self.fuse else ex.plan)
+            # Capacity-sized requests use the *executor's* n_b (mesh
+            # executors round the plan's up) — exactly what solve() and
+            # the pre-fusion service did, which keeps the lone-request
+            # classic path bit-identical; smaller requests keep their own
+            # per-request size (the executors bucket it).
+            nb = (ex.n_b if pl.n_b >= ex.plan.n_b
+                  else min(pl.n_b, ex.n_b))
             sampler = AdaptiveSampler(g.n, eps=req.eps, delta=req.delta,
-                                      n_b=ex.n_b, seed=req.seed)
+                                      n_b=nb, cap=req.max_samples,
+                                      seed=req.seed)
             est = LambdaEstimator(g.n, req.eps, req.delta, req.rule)
             self.slots[i] = _Job(req=req, sampler=sampler, est=est,
-                                 epochs=sampler.epochs(), t0=time.time())
+                                 plan=pl, t0=time.time())
 
     def _retire(self, i: int, converged: bool) -> None:
         job = self.slots[i]
@@ -141,48 +201,107 @@ class BCService:
             rid=job.req.rid, graph=job.req.graph, topk=ids.tolist(),
             lam=res.lam[ids], halfwidth=res.halfwidth[ids],
             n_samples=res.n_samples, n_epochs=res.n_epochs,
-            converged=res.converged or job.sampler.capped,
-            seconds=time.time() - job.t0))
+            converged=res.converged,
+            seconds=time.time() - job.t0, plan=job.plan))
         self.slots[i] = None
+
+    # ------------------------------------------------------------------
+    def _run_unfused(self, ex: BatchExecutor, job: _Job,
+                     sources: np.ndarray) -> int:
+        """The classic per-request path: chop one slot's epoch into
+        sampler-sized chunks, each padded to the executor's ``n_b``."""
+        nb = job.sampler.n_b
+        done = 0
+        for lo in range(0, sources.shape[0], nb):
+            chunk = sources[lo:lo + nb]
+            s1, s2, _ = ex.step(chunk, np.ones(chunk.shape[0], bool))
+            job.est.update(s1, s2, int(chunk.shape[0]))
+            done += int(chunk.shape[0])
+        return done
+
+    def _run_fused(self, name: str, ex: BatchExecutor,
+                   demand: List[Tuple[int, np.ndarray]]) -> int:
+        """Drain several slots' epoch demand through fused batches."""
+        done = 0
+        for fb in self._assembler(name).assemble(demand):
+            s1, s2, nr = ex.step_segmented(fb.sources, fb.valid,
+                                           fb.slot_ids, fb.n_slots)
+            for slot, (r1, r2, _, cnt) in scatter(fb, (s1, s2, nr)).items():
+                self.slots[slot].est.update(r1, r2, cnt)
+            done += fb.n_valid
+        return done
 
     def step(self) -> int:
         """One tick: admit, then advance every active slot by one epoch.
 
-        Returns the number of source samples processed this tick.
+        Active slots are grouped by graph; each group resolves its
+        executor once and drains all slots' source demand together —
+        fused into slot-tagged batches when more than one request is
+        live on the graph. Returns the number of source samples
+        processed this tick.
         """
         self._admit()
         processed = 0
-        for i in range(self.n_slots):
-            job = self.slots[i]
-            if job is None:
+        by_graph: Dict[str, List[int]] = {}
+        for i, job in enumerate(self.slots):
+            if job is not None:
+                by_graph.setdefault(job.req.graph, []).append(i)
+        for name, idxs in by_graph.items():
+            ex = self._graph_executor(name)  # once per graph, not per slot
+            # -- demand: each live slot asks for one epoch of sources --
+            demand: List[Tuple[int, np.ndarray]] = []
+            epoch_of: Dict[int, int] = {}
+            for i in idxs:
+                job = self.slots[i]
+                nxt = job.sampler.next_epoch()
+                if nxt is None:
+                    # Stopped or capped: certify honestly (Hoeffding
+                    # budget reached, or the empirical CIs) — a cap
+                    # below the budget is NOT convergence by itself.
+                    self._retire(i, converged=honest_converged(job.est))
+                    continue
+                ei, tau_e = nxt
+                epoch_of[i] = ei
+                demand.append((i, job.sampler.draw(tau_e)))
+            if not demand:
                 continue
-            ex = self._graph_executor(job.req.graph)
-            try:
-                ei, batches = next(job.epochs)
-            except StopIteration:
-                self._retire(i, converged=job.sampler.capped)
-                continue
-            for b in batches:
-                s1, s2, _ = ex.step(b.sources, b.valid)
-                job.est.update(s1, s2, b.n_valid)
-                processed += b.n_valid
-            job.n_epochs = ei + 1
-            # Same sequential test as repro.bc.solve (one hw pass per
-            # epoch, δ split across checks) so CLI and service answers
-            # agree.
-            done, _ = stopping_check(job.est, job.req.eps, job.req.k, ei)
-            if done:
-                job.sampler.stop()
-                self._retire(i, converged=True)
+            # -- execute: fused across requests, or the classic path --
+            lone = (len(demand) == 1
+                    and self.slots[demand[0][0]].sampler.n_b == ex.n_b)
+            if self.fuse and not lone:
+                processed += self._run_fused(name, ex, demand)
+            else:
+                for i, srcs in demand:
+                    processed += self._run_unfused(ex, self.slots[i], srcs)
+            # -- epoch boundary: same sequential test as repro.bc.solve
+            # (one hw pass per epoch, δ split across checks) so CLI and
+            # service answers agree --
+            for i, _ in demand:
+                job = self.slots[i]
+                ei = epoch_of[i]
+                job.n_epochs = ei + 1
+                done, _ = stopping_check(job.est, job.req.eps, job.req.k, ei)
+                if done:
+                    job.sampler.stop()
+                    self._retire(i, converged=True)
         return processed
 
     @property
     def active(self) -> int:
         return sum(1 for s in self.slots if s is not None)
 
+    @property
+    def pending(self) -> List[BCRequest]:
+        """Requests admitted or queued but not yet finished."""
+        return ([job.req for job in self.slots if job is not None]
+                + list(self.queue))
+
     def run(self, max_ticks: int = 10_000) -> List[BCResponse]:
         ticks = 0
         while (self.queue or self.active) and ticks < max_ticks:
             self.step()
             ticks += 1
+        # Never drop queued/active work silently: callers can see the
+        # cut-off and the exact requests still outstanding.
+        self.exhausted = bool(self.queue or self.active)
         return self.finished

@@ -50,6 +50,12 @@ def tuples(*strats):
     return _Strategy(lambda rng: tuple(s._draw(rng) for s in strats))
 
 
+def lists(elements, *, min_size=0, max_size=10):
+    return _Strategy(lambda rng: [
+        elements._draw(rng)
+        for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+
 def composite(f):
     @functools.wraps(f)
     def builder(*args, **kwargs):
@@ -96,6 +102,7 @@ class _StrategiesNamespace:
     just = staticmethod(just)
     one_of = staticmethod(one_of)
     tuples = staticmethod(tuples)
+    lists = staticmethod(lists)
     composite = staticmethod(composite)
 
 

@@ -1,0 +1,313 @@
+"""Cross-request batch fusion: the fused-parity property, shape
+bucketing, per-request planning, and the serving-stack regressions
+(honest capped convergence, no silently dropped work, lone-request
+bit-stability).
+
+The headline property: for ANY mix of concurrent requests — random slot
+interleavings, ragged demand, several buckets — the per-slot
+``(S1, S2, n_reach)`` a fused ``step_segmented`` batch returns is
+bitwise-identical to running each request's rows sequentially (unfused)
+on the same executor, on both the single-host and the 1×1-mesh
+executor. The multi-device (8 fake CPU devices) fused tick rides the
+``md_bc_planner_check.py`` subprocess (slow lane).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare local run: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.approx.sampling import AdaptiveSampler, hoeffding_budget
+from repro.bc import (BatchAssembler, BCQuery, FusedBatch, build_executor,
+                      bucket_sizes, honest_converged, plan,
+                      plan_for_request, scatter)
+from repro.core import brandes_bc
+from repro.graphs.generators import rmat
+
+# Shared state for the @given property tests (hypothesis forbids
+# function-scoped fixtures inside @given; build lazily, once per run).
+_CACHE = {}
+
+
+def _graph():
+    if "g" not in _CACHE:
+        g = rmat(6, 8, seed=5)
+        g, _ = g.remove_isolated()
+        _CACHE["g"] = g
+    return _CACHE["g"]
+
+
+def _host_executor():
+    if "host" not in _CACHE:
+        g = _graph()
+        _CACHE["host"] = build_executor(
+            g, plan(g, BCQuery(mode="approx", n_b=64), n_devices=1))
+    return _CACHE["host"]
+
+
+def _mesh_executor():
+    if "mesh" not in _CACHE:
+        import jax
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        g = _graph()
+        pl = plan(g, BCQuery(mode="approx", n_b=64, iters=32), mesh=mesh)
+        _CACHE["mesh"] = build_executor(g, pl, mesh=mesh)
+    return _CACHE["mesh"]
+
+
+# ------------------------------------------------------------- assembler
+def test_assembler_packs_contiguous_and_chops():
+    asm = BatchAssembler(_host_executor())
+    demand = [(3, np.arange(40, dtype=np.int32)),
+              (7, np.arange(40, 70, dtype=np.int32)),
+              (1, np.zeros(0, np.int32)),  # empty demand is dropped
+              (5, np.arange(70, 100, dtype=np.int32))]
+    batches = asm.assemble(demand)
+    # 100 rows at capacity 64 -> two batches; slots stay contiguous
+    assert [len(b.sources) for b in batches] == [64, 36]
+    assert batches[0].slots == (3, 7) and batches[0].counts == (40, 24)
+    assert batches[1].slots == (7, 5) and batches[1].counts == (6, 30)
+    # the packed stream is the concatenation, per-slot order preserved
+    joined = np.concatenate([b.sources for b in batches])
+    np.testing.assert_array_equal(joined, np.arange(100, dtype=np.int32))
+    assert all(isinstance(b, FusedBatch) and b.valid.all() for b in batches)
+    assert asm.assemble([]) == []
+    # duplicate slot keys would shadow each other in scatter(): refuse
+    with pytest.raises(ValueError, match="duplicate slot keys"):
+        asm.assemble([(3, np.arange(4, dtype=np.int32)),
+                      (3, np.arange(4, dtype=np.int32))])
+
+
+def test_bucket_sizes_and_bucket_for():
+    assert bucket_sizes(64) == (8, 16, 32, 64)
+    assert bucket_sizes(100) == (8, 16, 32, 64, 100)
+    assert bucket_sizes(4) == (4,)
+    ex = _host_executor()
+    assert ex.bucket_for(1) == 8
+    assert ex.bucket_for(33) == 64
+    with pytest.raises(ValueError, match="exceeds"):
+        ex.bucket_for(65)
+
+
+# -------------------------------------------------- fused parity property
+def _fused_vs_sequential(ex, n, slot_lens, order_seed):
+    """Fused step_segmented == each request's batches run sequentially.
+
+    Bitwise leg: for every fused batch, every slot's segmented rows must
+    equal running exactly those rows alone (unfused) — fusing requests
+    into one padded batch must not perturb any request's statistics by
+    even an ulp. Numeric leg: the fused per-slot *totals* match the
+    plain (unsegmented) ``step`` over the whole demand to f32 tolerance
+    (the grouping of f32 partial sums may differ, the mathematics may
+    not).
+    """
+    rng = np.random.default_rng(order_seed)
+    demand = [(j, rng.integers(0, n, ln).astype(np.int32))
+              for j, ln in enumerate(slot_lens) if ln > 0]
+    if not demand:
+        return
+    # random interleaving of slot order into the assembler
+    rng.shuffle(demand)
+    asm = BatchAssembler(ex)
+    fused = {}
+    for fb in asm.assemble(demand):
+        s1, s2, nr = ex.step_segmented(fb.sources, fb.valid, fb.slot_ids,
+                                       fb.n_slots)
+        for j, key in enumerate(fb.slots):
+            # sequential baseline: the same rows, alone, same order
+            rows = fb.sources[(fb.slot_ids == j) & fb.valid]
+            assert rows.shape[0] == fb.counts[j]
+            b1, b2, bn = ex.step_segmented(
+                rows, np.ones(rows.shape[0], bool),
+                np.zeros(rows.shape[0], np.int32), 1)
+            np.testing.assert_array_equal(s1[j], b1[0])  # bitwise S1
+            np.testing.assert_array_equal(s2[j], b2[0])  # bitwise S2
+            np.testing.assert_array_equal(nr[j], bn[0])
+            acc = fused.setdefault(
+                key, [np.zeros(n), np.zeros(n), np.zeros(n, np.int64), 0])
+            acc[0] += s1[j]
+            acc[1] += s2[j]
+            acc[2] += nr[j]
+            acc[3] += fb.counts[j]
+    for key, srcs in demand:
+        assert fused[key][3] == srcs.shape[0]
+        # numeric leg: per-slot totals == plain moments step of the whole
+        # demand (chopped at capacity), to f32 regrouping tolerance
+        m1 = np.zeros(n)
+        mn = np.zeros(n, np.int64)
+        for lo in range(0, srcs.shape[0], ex.n_b):
+            c = srcs[lo:lo + ex.n_b]
+            r1, _, rn = ex.step(c, np.ones(c.shape[0], bool))
+            m1 += r1
+            mn += rn
+        np.testing.assert_allclose(fused[key][0], m1, rtol=1e-4, atol=1e-6)
+        np.testing.assert_array_equal(fused[key][2], mn)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=50), min_size=1,
+                max_size=5),
+       st.integers(min_value=0, max_value=2 ** 16))
+def test_fused_parity_single_host(lens, order_seed):
+    """Random slot interleavings + ragged demand across several buckets:
+    fused == sequential, bitwise, on the single-host executor."""
+    _fused_vs_sequential(_host_executor(), _graph().n, lens, order_seed)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=40), min_size=1,
+                max_size=4),
+       st.integers(min_value=0, max_value=2 ** 16))
+def test_fused_parity_mesh_1x1(lens, order_seed):
+    """Same property through the distributed (1×1 mesh) executor — the
+    segmented stacked psum must not perturb per-slot statistics."""
+    _fused_vs_sequential(_mesh_executor(), _graph().n, lens, order_seed)
+
+
+def test_mesh_and_host_fused_agree():
+    g = _graph()
+    rng = np.random.default_rng(11)
+    srcs = rng.integers(0, g.n, 48).astype(np.int32)
+    tags = np.sort(rng.integers(0, 3, 48)).astype(np.int32)
+    h = _host_executor().step_segmented(srcs, np.ones(48, bool), tags, 3)
+    m = _mesh_executor().step_segmented(srcs, np.ones(48, bool), tags, 3)
+    np.testing.assert_allclose(h[0], m[0], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(h[1], m[1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(h[2], m[2])
+
+
+# --------------------------------------------------------- demand surface
+def test_sampler_demand_matches_epoch_assembly():
+    """draw()'s RNG stream is chunking-invariant: the demand side hands a
+    fused assembler the same sources the single-query epochs() batches."""
+    a = AdaptiveSampler(100, n_b=16, cap=200, seed=9)
+    b = AdaptiveSampler(100, n_b=16, cap=200, seed=9)
+    via_epochs = []
+    for ei, batches in a.epochs():
+        for batch in batches:
+            via_epochs.append(batch.sources[batch.valid])
+        if ei == 2:
+            a.stop()
+    via_demand = []
+    while True:
+        nxt = b.next_epoch()
+        if nxt is None:
+            break
+        ei, tau = nxt
+        via_demand.append(b.draw(tau))
+        if ei == 2:
+            b.stop()
+    np.testing.assert_array_equal(np.concatenate(via_epochs),
+                                  np.concatenate(via_demand))
+    assert a.drawn == b.drawn
+
+
+def test_sampler_demand_respects_cap_and_stop():
+    s = AdaptiveSampler(100, n_b=16, cap=40, seed=0)
+    e0 = s.next_epoch()
+    assert e0 == (0, 16)
+    s.draw(16)
+    assert s.next_epoch() == (1, 24)  # 32 clamped to the 40-sample cap
+    s.draw(24)
+    assert s.capped and s.next_epoch() is None
+    s2 = AdaptiveSampler(100, n_b=16, seed=0)
+    s2.next_epoch()
+    s2.stop()
+    assert s2.next_epoch() is None
+
+
+# ------------------------------------------------------ per-request plans
+def test_plan_for_request_sizes_nb_from_eps():
+    g = _graph()
+    tight = plan_for_request(g, eps=0.03, delta=0.1, n_devices=1)
+    loose = plan_for_request(g, eps=0.4, delta=0.1, n_devices=1)
+    assert loose.n_b <= tight.n_b
+    assert tight.buckets[-1] == tight.n_b
+    assert list(tight.to_json()["buckets"]) == list(tight.buckets)
+
+
+# ------------------------------------------------------------ the service
+def test_service_fused_vs_unfused_converge_same_quality():
+    from repro.serve.bc_service import BCRequest, BCService
+
+    g = _graph()
+    ref = brandes_bc(g)
+    top = set(np.argsort(ref)[::-1][:10].tolist())
+    for fuse in (False, True):
+        svc = BCService({"web": g}, n_slots=4, fuse=fuse)
+        for rid in range(4):
+            svc.submit(BCRequest(rid=rid, graph="web", k=10,
+                                 eps=0.05 + 0.03 * rid, rule="normal",
+                                 seed=rid))
+        out = svc.run()
+        assert not svc.exhausted and svc.pending == []
+        assert sorted(r.rid for r in out) == [0, 1, 2, 3]
+        assert all(r.converged for r in out)
+        by = {r.rid: r for r in out}
+        assert len(top & set(by[0].topk)) >= 9
+        # executed per-request plans ride the response
+        assert all(r.plan is not None and r.plan.n_b > 0 for r in out)
+
+
+def test_service_lone_request_bitwise_stable():
+    """A lone request takes the classic per-request path: fused service ==
+    unfused service, bitwise (the 'service answers stay identical' leg)."""
+    from repro.serve.bc_service import BCRequest, BCService
+
+    g = _graph()
+    res = {}
+    for fuse in (False, True):
+        svc = BCService({"web": g}, n_slots=2, fuse=fuse)
+        svc.submit(BCRequest(rid=0, graph="web", k=10, rule="normal",
+                             seed=3))
+        res[fuse] = svc.run()[0]
+    np.testing.assert_array_equal(res[True].lam, res[False].lam)
+    np.testing.assert_array_equal(res[True].halfwidth, res[False].halfwidth)
+    assert res[True].topk == res[False].topk
+    assert res[True].n_samples == res[False].n_samples
+
+
+def test_service_capped_run_not_reported_converged():
+    """Regression: a cap below the Hoeffding budget must go through
+    ``honest_converged`` — the old path reported ``converged or capped``
+    unconditionally."""
+    from repro.serve.bc_service import BCRequest, BCService
+
+    g = _graph()
+    eps, delta = 0.01, 0.05
+    cap = 32
+    assert cap < hoeffding_budget(g.n, eps, delta)
+    svc = BCService({"web": g}, n_slots=1)
+    svc.submit(BCRequest(rid=0, graph="web", eps=eps, delta=delta,
+                         max_samples=cap))
+    out = svc.run()
+    assert len(out) == 1
+    assert out[0].n_samples == cap
+    assert not out[0].converged  # CIs cannot certify ε=0.01 at τ=32
+    # the same contract as the solve driver's honest_converged
+    from repro.bc import LambdaEstimator
+
+    est = LambdaEstimator(g.n, eps, delta, "normal")
+    assert not honest_converged(est)
+
+
+def test_service_run_surfaces_unfinished_work():
+    from repro.serve.bc_service import BCRequest, BCService
+
+    g = _graph()
+    svc = BCService({"web": g}, n_slots=1)
+    svc.submit(BCRequest(rid=1, graph="web", eps=0.01))
+    svc.submit(BCRequest(rid=2, graph="web", eps=0.01))
+    done = svc.run(max_ticks=1)
+    assert svc.exhausted
+    finished = {r.rid for r in done}
+    assert sorted(q.rid for q in svc.pending) == \
+        [r for r in (1, 2) if r not in finished]
+    # draining the service clears the flag
+    svc.run()
+    assert not svc.exhausted and svc.pending == []

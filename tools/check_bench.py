@@ -1,0 +1,111 @@
+"""Sanity-assert the benchmark artifacts before CI uploads them.
+
+Extends the old inline ``BENCH_approx.json`` plan assert: every record a
+downstream perf dashboard keys on must be present and well-formed, so a
+refactor that silently stops recording (planner decisions, the fused
+serving legs) fails CI instead of producing a hollow artifact.
+
+* ``BENCH_approx.json`` — headline exact-vs-approx record with executed
+  ``BCPlan``s (``plan``, ``plan_exact``) and the mesh-epochs comparison
+  with per-leg plans.
+* ``BENCH_serve.json`` — the fused-vs-unfused serving sweep: both legs
+  present per concurrency level, positive throughput, every run carrying
+  its executed per-request ``BCPlan``s (with the bucket sets), and a
+  fused leg at ≥ 4 concurrent queries.
+
+Usage: ``python tools/check_bench.py BENCH_approx.json BENCH_serve.json``
+(file kind is sniffed from the record, not the name).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def _check_plan(plan: dict, where: str) -> list:
+    errors = []
+    if not isinstance(plan, dict):
+        return [f"{where}: plan is not a record"]
+    if not plan.get("n_b", 0) > 0:
+        errors.append(f"{where}: plan.n_b missing or not positive")
+    if not plan.get("placement"):
+        errors.append(f"{where}: plan.placement missing")
+    buckets = plan.get("buckets")
+    if not buckets or buckets[-1] != plan.get("n_b"):
+        errors.append(f"{where}: plan.buckets missing or not capped at n_b")
+    return errors
+
+
+def check_approx(rec: dict) -> list:
+    errors = _check_plan(rec.get("plan"), "approx.plan")
+    errors += _check_plan(rec.get("plan_exact"), "approx.plan_exact")
+    me = rec.get("mesh_epochs")
+    if not me:
+        errors.append("approx: mesh_epochs record missing")
+    else:
+        for leg in ("single_host", "mesh"):
+            if leg not in me:
+                errors.append(f"approx.mesh_epochs: {leg} leg missing")
+            else:
+                errors += _check_plan(me[leg].get("plan"),
+                                      f"approx.mesh_epochs.{leg}.plan")
+    return errors
+
+
+def check_serve(rec: dict) -> list:
+    errors = []
+    runs = rec.get("runs", [])
+    if not runs:
+        return ["serve: no runs recorded"]
+    errors += _check_plan(rec.get("graph_plan"), "serve.graph_plan")
+    seen = set()
+    for r in runs:
+        where = f"serve.run[c={r.get('concurrency')},fused={r.get('fused')}]"
+        seen.add((r.get("concurrency"), bool(r.get("fused"))))
+        if not r.get("sources_per_sec", 0) > 0:
+            errors.append(f"{where}: sources_per_sec missing or zero")
+        if not r.get("all_converged", False):
+            errors.append(f"{where}: not all requests converged")
+        plans = r.get("plans", [])
+        if not plans:
+            errors.append(f"{where}: executed BCPlans missing")
+        for i, p in enumerate(plans):
+            errors += _check_plan(p, f"{where}.plans[{i}]")
+    levels = {c for c, _ in seen}
+    for c in levels:
+        for fused in (False, True):
+            if (c, fused) not in seen:
+                errors.append(f"serve: concurrency {c} missing the "
+                              f"{'fused' if fused else 'unfused'} leg")
+    if not any(c >= 4 and fused for c, fused in seen):
+        errors.append("serve: no fused-throughput record at >= 4 "
+                      "concurrent queries")
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_bench.py BENCH_*.json ...", file=sys.stderr)
+        return 2
+    errors = []
+    for name in argv:
+        path = Path(name)
+        if not path.is_file():
+            errors.append(f"{name}: file not found")
+            continue
+        rec = json.loads(path.read_text())
+        kind = "serve" if "runs" in rec else "approx"
+        errs = (check_serve if kind == "serve" else check_approx)(rec)
+        errors += [f"{name}: {e}" for e in errs]
+        if not errs:
+            print(f"check_bench: OK — {name} ({kind})")
+    if errors:
+        for e in errors:
+            print(f"check_bench: BAD  {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
