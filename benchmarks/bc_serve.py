@@ -16,9 +16,20 @@ the ragged multi-tenant demand fusion exists for. Each leg is jit-warmed
 by a throwaway identical run (module-level jitted steps cache by shape),
 so timings are steady-state serving, not XLA compilation.
 
+A second scenario exercises the QoS scheduler under *mixed-tier* load:
+a burst of loose-ε batch-tier requests submitted ahead of tight-ε
+interactive ones, driven twice — ``pack="fifo"`` (the legacy
+strict-arrival baseline: interactive work queues behind the batch
+burst) and ``pack="deadline"`` (EDF admission + deadline-slack
+draining + a ``tick_budget`` that preempts batch slots mid-epoch).
+The metric is per-tier p50/p95 *latency* (submit → retirement): the
+tight-ε tier's p95 must beat the FIFO baseline leg without giving up
+the fused throughput.
+
 Everything lands in ``BENCH_serve.json`` with the per-request executed
-``BCPlan``s and the graph capacity plan recorded next to the timings;
-``tools/check_bench.py`` asserts the record's shape in CI.
+``BCPlan``s (tiers included) and the graph capacity plan recorded next
+to the timings; ``tools/check_bench.py`` asserts the record's shape —
+including the tight-tier p95 win — in CI.
 
   PYTHONPATH=src python -m benchmarks.bc_serve            # scale 10
   PYTHONPATH=src python -m benchmarks.bc_serve --smoke    # scale 8, CI
@@ -124,6 +135,91 @@ def bench_bc_serve(scale: int = 10, degree: int = 8,
     }
 
 
+# -------------------------------------------------- mixed-tier QoS leg
+# (ε, tier) per QoS class: the interactive tier is the *tight*-ε work —
+# many sampling epochs, the requests whose tail latency the deadline
+# scheduler exists to protect; the batch tier is loose-ε background
+# load submitted ahead of it (the FIFO baseline's worst case).
+TIER_MIX = {"interactive": 0.05, "batch": 0.15}
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted sequence."""
+    if not sorted_vals:
+        return 0.0
+    rank = max(1, int(-(-q / 100.0 * len(sorted_vals) // 1)))
+    return float(sorted_vals[min(rank, len(sorted_vals)) - 1])
+
+
+def _mixed_requests(n_interactive: int, n_batch: int, rule: str, seed: int):
+    """Batch burst first, interactive arrivals behind it — FIFO admits
+    the burst, EDF jumps the interactive tier over it."""
+    from repro.serve.bc_service import BCRequest
+
+    reqs = []
+    for i in range(n_batch):
+        reqs.append(BCRequest(rid=i, graph="web", k=10,
+                              eps=TIER_MIX["batch"], delta=0.1, rule=rule,
+                              seed=seed, priority="batch",
+                              tenant=f"bg{i % 2}"))
+    for i in range(n_interactive):
+        reqs.append(BCRequest(rid=n_batch + i, graph="web", k=10,
+                              eps=TIER_MIX["interactive"], delta=0.1,
+                              rule=rule, seed=seed, priority="interactive",
+                              tenant="fg"))
+    return reqs
+
+
+def bench_mixed_tiers(scale: int = 10, degree: int = 8, *,
+                      n_interactive: int = 4, n_batch: int = 8,
+                      n_slots: int = 4, rule: str = "normal", seed: int = 0,
+                      tick_budget: int = 256) -> Dict:
+    """Per-tier latency under mixed load: FIFO baseline vs QoS legs."""
+    from repro.graphs.generators import from_spec
+    from repro.serve.bc_service import BCService
+
+    g = from_spec("rmat", scale=scale, degree=degree, seed=seed)
+    g, _ = g.remove_isolated()
+
+    legs: Dict[str, Dict] = {}
+    for leg, pack, budget in (("fifo", "fifo", None),
+                              ("deadline", "deadline", tick_budget)):
+        def make_service() -> BCService:
+            return BCService({"web": g}, n_slots=n_slots, pack=pack,
+                             tick_budget=budget)
+
+        # throwaway identical run: jit-warm every shape this leg touches
+        _drive(make_service(), _mixed_requests(n_interactive, n_batch,
+                                               rule, seed))
+        rec, out = _drive(make_service(),
+                          _mixed_requests(n_interactive, n_batch, rule,
+                                          seed))
+        per_tier = {}
+        for tier in TIER_MIX:
+            lats = sorted(r.latency_s for r in out if r.tier == tier)
+            per_tier[tier] = {"n": len(lats),
+                              "p50_s": _percentile(lats, 50),
+                              "p95_s": _percentile(lats, 95),
+                              "max_s": lats[-1] if lats else 0.0}
+        plans = {id(r.plan): r.plan.to_json() for r in out}
+        rec.update(pack=pack, tick_budget=budget, per_tier=per_tier,
+                   plans=list(plans.values()))
+        legs[leg] = rec
+
+    p95_fifo = legs["fifo"]["per_tier"]["interactive"]["p95_s"]
+    p95_dl = legs["deadline"]["per_tier"]["interactive"]["p95_s"]
+    return {
+        "n_slots": n_slots,
+        "n_interactive": n_interactive,
+        "n_batch": n_batch,
+        "rule": rule,
+        "eps": dict(TIER_MIX),
+        "tight_tier": "interactive",
+        "legs": legs,
+        "tight_p95_speedup": p95_fifo / max(p95_dl, 1e-9),
+    }
+
+
 def main(argv=None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=10)
@@ -137,6 +233,8 @@ def main(argv=None) -> Dict:
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (scale 8, levels 1,2,4)")
+    ap.add_argument("--no-mixed", action="store_true",
+                    help="skip the mixed-tier QoS scenario")
     args = ap.parse_args(argv)
 
     scale = 8 if args.smoke else args.scale
@@ -144,6 +242,9 @@ def main(argv=None) -> Dict:
               else tuple(int(x) for x in args.levels.split(",")))
     rec = bench_bc_serve(scale=scale, degree=args.degree, levels=levels,
                          n_slots=args.slots, rule=args.rule, seed=args.seed)
+    if not args.no_mixed:
+        rec["mixed_tier"] = bench_mixed_tiers(
+            scale=scale, degree=args.degree, rule=args.rule, seed=args.seed)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
     print(f"[bc_serve] n={rec['n']} m={rec['m']} slots={rec['n_slots']} "
@@ -156,6 +257,17 @@ def main(argv=None) -> Dict:
               f"{r['seconds']:.2f}s, converged={r['all_converged']})")
     for c, s in rec["fused_speedup"].items():
         print(f"[bc_serve] fused speedup @ {c} concurrent: {s:.2f}x")
+    mt = rec.get("mixed_tier")
+    if mt:
+        for leg, r in mt["legs"].items():
+            for tier, p in r["per_tier"].items():
+                print(f"[bc_serve] mixed {leg:>8} {tier:>11} "
+                      f"p50={p['p50_s']:.3f}s p95={p['p95_s']:.3f}s "
+                      f"(n={p['n']})")
+            print(f"[bc_serve] mixed {leg:>8} "
+                  f"{r['sources_per_sec']:8.1f} src/s over {r['ticks']} ticks")
+        print(f"[bc_serve] mixed tight-tier p95 speedup "
+              f"(fifo/deadline): {mt['tight_p95_speedup']:.2f}x")
     print(f"[bc_serve] wrote {args.out}")
     return rec
 

@@ -126,13 +126,20 @@ class LambdaEstimator:
         vertices (``sampling.allocate_delta``): empirical variance decides
         where δ is spent, so hub CIs — the ones the max over v binds on —
         shrink fastest.
+
+        Fewer than two samples carry no variance estimate: the halfwidth
+        is +inf everywhere, so a zero/one-sample run can never be
+        mistaken for a converged one (``stopping_check`` sees an
+        infinite max halfwidth, and a retired ``ApproxResult`` honestly
+        reports unbounded CIs instead of finite garbage).
         """
+        if self.tau < 2:
+            return np.full(self.n, np.inf)
         d = self.delta if delta is None else delta
         c = self._norm()
         x1, x2 = self.s1 / c, self.s2 / (c * c)
-        tau = max(self.tau, 2)
-        mean = x1 / tau
-        var = np.maximum(x2 / tau - mean * mean, 0.0)
+        mean = x1 / self.tau
+        var = np.maximum(x2 / self.tau - mean * mean, 0.0)
         delta_v = S.allocate_delta(var, d)
         fn = (S.bernstein_halfwidth if self.rule == "bernstein"
               else S.normal_halfwidth)

@@ -80,19 +80,29 @@ def bernstein_halfwidth(s1: np.ndarray, s2: np.ndarray, tau: int,
     ``s1``/``s2`` are running Σx and Σx² per vertex; ``delta_v`` the
     per-vertex failure budget — scalar (uniform δ/n union bound) or array
     (``allocate_delta``). With probability ≥ 1-δ_v:
-      |x̄ − μ| ≤ √(2·V̂·ln(3/δ_v)/τ) + 3·ln(3/δ_v)/τ.
+      |x̄ − μ| ≤ √(2·V̂·ln(3/δ_v)/τ) + 3·ln(3/δ_v)/τ,
+    where V̂ is the *unbiased* sample variance (the Maurer–Pontil bound
+    is stated for Σ(x_i − x̄)²/(τ−1), not the biased Σx²/τ − x̄²).
+    Fewer than two samples carry no variance estimate at all: the
+    halfwidth is +inf, so no stopping rule can certify from them.
     """
-    tau = max(tau, 2)
+    if tau < 2:
+        return np.full_like(np.asarray(s1, np.float64), np.inf)
     mean = s1 / tau
-    var = np.maximum(s2 / tau - mean * mean, 0.0)
+    var = np.maximum(s2 / tau - mean * mean, 0.0) * tau / (tau - 1)
     log_term = np.log(3.0 / np.asarray(delta_v, np.float64))
     return np.sqrt(2.0 * var * log_term / tau) + 3.0 * log_term / tau
 
 
 def normal_halfwidth(s1: np.ndarray, s2: np.ndarray, tau: int,
                      delta_v) -> np.ndarray:
-    """CLT halfwidth z_{1-δ_v/2}·σ̂/√τ with a 1/τ small-sample cushion."""
-    tau = max(tau, 2)
+    """CLT halfwidth z_{1-δ_v/2}·σ̂/√τ with a 1/τ small-sample cushion.
+
+    σ̂² is the unbiased sample variance; τ < 2 yields +inf (no variance
+    estimate exists), matching ``bernstein_halfwidth``.
+    """
+    if tau < 2:
+        return np.full_like(np.asarray(s1, np.float64), np.inf)
     mean = s1 / tau
     var = np.maximum(s2 / tau - mean * mean, 0.0) * tau / (tau - 1)
     z = math.sqrt(2.0) * _erfinv(1.0 - np.asarray(delta_v, np.float64))
@@ -175,6 +185,12 @@ class AdaptiveSampler:
     ``cap`` bounds the total draw at the Hoeffding budget — by then the
     a-priori guarantee holds regardless of what the empirical CIs say,
     so sampling past it is pure waste.
+
+    ``seed`` is anything ``np.random.default_rng`` accepts — an int, or
+    a sequence of ints such as ``(seed, rid)``, which is how
+    ``serve.BCService`` derives an independent stream per request
+    without giving up exact reproducibility (same (seed, rid), same
+    stream).
     """
 
     def __init__(self, n: int, *, eps: float = 0.05, delta: float = 0.1,

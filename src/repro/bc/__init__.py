@@ -43,17 +43,19 @@ from repro.approx.driver import (ApproxResult, LambdaEstimator,
 from repro.approx.sampling import AdaptiveSampler, UniformSampler
 from repro.bc.executor import (BatchExecutor, MeshExecutor,
                                SingleHostExecutor, build_executor)
-from repro.bc.fusion import BatchAssembler, FusedBatch, scatter
+from repro.bc.fusion import (PACKS, BatchAssembler, FusedBatch,
+                             order_demand, scatter)
 from repro.bc.planner import (BCPlan, BCPlanner, bucket_sizes,
                               plan_for_request)
-from repro.bc.query import BCQuery
+from repro.bc.query import TIER_DEADLINE_S, TIERS, BCQuery
 from repro.bc.solve import BCResult, honest_converged, plan, solve
 
 __all__ = [
     "BCQuery", "BCPlan", "BCPlanner", "BCResult",
     "BatchExecutor", "SingleHostExecutor", "MeshExecutor", "build_executor",
     "plan", "solve", "honest_converged",
-    "BatchAssembler", "FusedBatch", "scatter",
+    "BatchAssembler", "FusedBatch", "scatter", "order_demand", "PACKS",
+    "TIERS", "TIER_DEADLINE_S",
     "plan_for_request", "bucket_sizes",
     "ApproxResult", "LambdaEstimator", "stopping_check",
     "choose_sample_batch", "AdaptiveSampler", "UniformSampler",

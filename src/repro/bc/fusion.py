@@ -12,23 +12,79 @@ demand of many live requests on the same graph (the demand side of
 returns per-slot ``(S1, S2, n_reach)`` rows that ``scatter`` hands back
 to each request's ``LambdaEstimator``.
 
-Packing policy: slots are laid out contiguously in the order given (not
+Packing policy: ``order_demand`` decides *which slot drains first* —
+``pack="fifo"`` keeps the caller's order, ``"deadline"`` sorts by
+deadline slack (tightest first, the QoS scheduler's drain order), and
+``"fair"`` greedily balances cumulative rows across tenants. Whatever
+the policy, slots are laid out contiguously in the chosen order (never
 interleaved), so each fused batch touches as few distinct slots as
 possible and every slot's rows keep their draw order — which is what
 makes a slot's fused statistics bitwise-identical to an unfused run of
 the same rows (the segment-sum accumulates each slot's rows in batch
-order). Batches are chopped at the executor's capacity ``n_b`` and
-padded to its power-of-two bucket, so ragged multi-request demand never
-retraces and never pays always-pad-to-``n_b`` waste.
+order) under *every* packing policy. Batches are chopped at the
+executor's capacity ``n_b`` and padded to its power-of-two bucket, so
+ragged multi-request demand never retraces and never pays
+always-pad-to-``n_b`` waste.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Sequence, Tuple
+import math
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.bc.executor import BatchExecutor
+
+PACKS = ("fifo", "deadline", "fair")
+
+
+def order_demand(demand: Sequence[Tuple[int, np.ndarray]],
+                 pack: str = "fifo", *,
+                 slack: Optional[Dict[int, float]] = None,
+                 tenant: Optional[Dict[int, str]] = None,
+                 served: Optional[Dict[str, int]] = None
+                 ) -> List[Tuple[int, np.ndarray]]:
+    """Order ``(slot_key, sources)`` demand entries by packing policy.
+
+    The one ordering rule shared by ``BatchAssembler.assemble`` (within a
+    graph) and the service's global budget allocation (across graphs), so
+    "who drains first" and "who gets the tick budget" always agree.
+    Entries are reordered *whole* — a slot's rows are never split or
+    interleaved here, which preserves the per-slot row order the bitwise
+    fused-parity guarantee rests on.
+
+    * ``"fifo"`` — the caller's order (the pre-QoS behavior).
+    * ``"deadline"`` — ascending deadline slack (``slack[key]`` seconds
+      until the slot's deadline; missing keys sort last). Stable: ties
+      keep the caller's order.
+    * ``"fair"`` — greedy per-tenant fair share: repeatedly drain the
+      entry whose tenant (``tenant[key]``, default ``"default"``) has
+      the fewest cumulative rows, counting both this call and the
+      caller's history (``served``, e.g. rows drained in earlier ticks);
+      ties break toward tighter slack, then the caller's order.
+    """
+    if pack not in PACKS:
+        raise ValueError(f"pack must be one of {PACKS}, got {pack!r}")
+    entries = list(demand)
+    if pack == "fifo" or len(entries) <= 1:
+        return entries
+    sl = slack or {}
+    if pack == "deadline":
+        return sorted(entries, key=lambda e: sl.get(e[0], math.inf))
+    tn = tenant or {}
+    totals: Dict[str, int] = dict(served or {})
+    out: List[Tuple[int, np.ndarray]] = []
+    remaining = entries
+    while remaining:
+        j = min(range(len(remaining)), key=lambda i: (
+            totals.get(tn.get(remaining[i][0], "default"), 0),
+            sl.get(remaining[i][0], math.inf), i))
+        key, srcs = remaining.pop(j)
+        t = tn.get(key, "default")
+        totals[t] = totals.get(t, 0) + int(np.asarray(srcs).size)
+        out.append((key, srcs))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,29 +120,42 @@ class BatchAssembler:
     the executor it feeds. ``assemble`` is pure packing — it never draws
     sources itself, so callers control each request's RNG stream — and
     ``scatter`` is the inverse, mapping the segmented step's per-slot
-    rows back to caller keys.
+    rows back to caller keys. ``pack`` picks the drain order
+    (``order_demand``); whichever policy runs, per-slot statistics stay
+    bitwise-identical to an unfused run, because ordering moves whole
+    entries and never touches a slot's row order.
     """
 
-    def __init__(self, executor: BatchExecutor):
+    def __init__(self, executor: BatchExecutor, pack: str = "fifo"):
+        if pack not in PACKS:
+            raise ValueError(f"pack must be one of {PACKS}, got {pack!r}")
         self.executor = executor
         self.capacity = int(executor.n_b)
+        self.pack = pack
 
-    def assemble(self, demand: Sequence[Tuple[int, np.ndarray]]
+    def assemble(self, demand: Sequence[Tuple[int, np.ndarray]], *,
+                 slack: Optional[Dict[int, float]] = None,
+                 tenant: Optional[Dict[int, str]] = None,
+                 served: Optional[Dict[str, int]] = None
                  ) -> List[FusedBatch]:
         """Pack ``(slot_key, sources)`` demand into fused batches.
 
-        Concatenates each slot's sources (in the given slot order,
-        preserving every slot's row order), chops the stream at the
-        executor capacity, and tags rows with batch-local slot ids.
-        Empty demand entries are dropped; an empty demand list yields no
-        batches. Slot keys must be distinct — ``scatter`` maps per-slot
-        rows back by key, so a duplicate would silently shadow its
-        earlier statistics (concatenate a slot's sources instead).
+        Orders the entries by the assembler's ``pack`` policy (slack /
+        tenant / served feed the deadline and fair policies and are
+        ignored by FIFO), concatenates each slot's sources (preserving
+        every slot's row order), chops the stream at the executor
+        capacity, and tags rows with batch-local slot ids. Empty demand
+        entries are dropped; an empty demand list yields no batches.
+        Slot keys must be distinct — ``scatter`` maps per-slot rows back
+        by key, so a duplicate would silently shadow its earlier
+        statistics (concatenate a slot's sources instead).
         """
         keys: List[int] = []
         parts: List[np.ndarray] = []
         tags: List[np.ndarray] = []
-        for key, srcs in demand:
+        ordered = order_demand(demand, self.pack, slack=slack,
+                               tenant=tenant, served=served)
+        for key, srcs in ordered:
             srcs = np.asarray(srcs, np.int32)
             if srcs.size == 0:
                 continue
@@ -123,7 +192,10 @@ class BatchAssembler:
                           slots=tuple(keys[int(t)] for t in uniq[order]),
                           counts=tuple(int(c) for c in counts[order]))
 
-    def run(self, demand: Sequence[Tuple[int, np.ndarray]]
+    def run(self, demand: Sequence[Tuple[int, np.ndarray]], *,
+            slack: Optional[Dict[int, float]] = None,
+            tenant: Optional[Dict[int, str]] = None,
+            served: Optional[Dict[str, int]] = None
             ) -> Iterator[Tuple[FusedBatch, Dict[int, Tuple]]]:
         """Assemble, step, scatter: yields ``(batch, per-slot moments)``.
 
@@ -131,7 +203,8 @@ class BatchAssembler:
         ``scatter`` for callers (service tick, tests) that don't need to
         interleave other work between fused batches.
         """
-        for fb in self.assemble(demand):
+        for fb in self.assemble(demand, slack=slack, tenant=tenant,
+                                served=served):
             s1, s2, nr = self.executor.step_segmented(
                 fb.sources, fb.valid, fb.slot_ids, fb.n_slots)
             yield fb, scatter(fb, (s1, s2, nr))

@@ -92,6 +92,7 @@ class BCPlan:
     predicted_mem_bytes: float
     regime: Dict[str, float]  # choose_bc_regime output (dense vs COO)
     buckets: Tuple[int, ...] = ()  # padded batch shapes the executor serves
+    tier: Optional[str] = None  # latency tier of the request this plan sizes
 
     def axes_dict(self) -> Optional[Dict[str, int]]:
         return dict(self.mesh_axes) if self.mesh_axes is not None else None
@@ -164,8 +165,10 @@ class BCPlanner:
         # below it should not shrink the batch the hardware wants to run).
         hint = (n if query.mode == "exact"
                 else hoeffding_budget(n, query.eps, query.delta))
-        budget = (n if query.mode == "exact"
-                  else min(hint, query.max_samples or (1 << 62)))
+        # `max_samples=0` is a real (degenerate) cap, not "no cap" — the
+        # sampler honors it, so the plan's budget must too.
+        cap = (1 << 62) if query.max_samples is None else query.max_samples
+        budget = n if query.mode == "exact" else min(hint, cap)
 
         backend = query.backend
         if placement == "mesh":
@@ -212,7 +215,8 @@ class BCPlanner:
             est_iters=int(est_iters), predicted_step_seconds=float(step_s),
             predicted_comm_bytes=float(comm_bytes),
             predicted_seconds=float(seconds), predicted_mem_bytes=float(mem),
-            regime=regime, buckets=bucket_sizes(int(n_b)))
+            regime=regime, buckets=bucket_sizes(int(n_b)),
+            tier=query.tier)
 
     # ------------------------------------------------------------------
     def _placement(self, n: int, m: int, query, mesh,
@@ -261,6 +265,7 @@ _REQUEST_PLANNER = BCPlanner()
 def plan_for_request(g: Graph, *, eps: float, delta: float,
                      rule: str = "normal", topk: Optional[int] = None,
                      max_samples: Optional[int] = None, seed: int = 0,
+                     tier: Optional[str] = None,
                      backend: Optional[str] = None, iters: int = 0,
                      mesh=None, n_devices: Optional[int] = None,
                      planner: Optional[BCPlanner] = None) -> BCPlan:
@@ -276,11 +281,16 @@ def plan_for_request(g: Graph, *, eps: float, delta: float,
     once per distinct (graph, ε, δ, rule) and caches the result; the
     cross-request half (packing several requests' demand into one fused
     batch) is ``repro.bc.fusion.BatchAssembler``.
+
+    ``tier`` names the request's latency tier (``repro.bc.query.TIERS``);
+    it does not change the configuration search, but it is recorded in
+    the JSON ``BCPlan`` so benchmark artifacts and ``BCResponse.plan``
+    carry the QoS class each plan was sized for.
     """
     from repro.bc.query import BCQuery
 
     q = BCQuery(mode="approx", eps=eps, delta=delta, rule=rule, topk=topk,
-                max_samples=max_samples, seed=seed, backend=backend,
-                iters=iters)
+                max_samples=max_samples, seed=seed, tier=tier,
+                backend=backend, iters=iters)
     return (planner or _REQUEST_PLANNER).plan(g, q, mesh=mesh,
                                               n_devices=n_devices)

@@ -30,6 +30,13 @@ RULES = ("bernstein", "normal")
 STRATEGIES = ("adaptive", "uniform")
 BACKENDS = ("dense", "coo")
 
+# Latency tiers, the QoS vocabulary shared by the whole serving stack:
+# ``serve.BCRequest.priority`` names one, ``plan_for_request`` records it
+# in the JSON ``BCPlan``, and the scheduler turns it into a deadline
+# (``TIER_DEADLINE_S`` when the request gives no explicit ``deadline_s``).
+TIERS = ("interactive", "normal", "batch")
+TIER_DEADLINE_S = {"interactive": 0.5, "normal": 5.0, "batch": 60.0}
+
 
 @dataclasses.dataclass(frozen=True)
 class BCQuery:
@@ -53,6 +60,7 @@ class BCQuery:
     topk: Optional[int] = None
     max_samples: Optional[int] = None
     seed: int = 0
+    tier: Optional[str] = None  # latency tier (serving QoS); None = untiered
     # -- hints ----------------------------------------------------------
     weighted: Optional[bool] = None  # None = infer from the graph
     # -- planner overrides (None / 0 / False = planner decides) ---------
@@ -73,6 +81,9 @@ class BCQuery:
         if self.backend is not None and self.backend not in BACKENDS:
             raise ValueError(f"backend must be None or one of {BACKENDS}, "
                              f"got {self.backend!r}")
+        if self.tier is not None and self.tier not in TIERS:
+            raise ValueError(f"tier must be None or one of {TIERS}, "
+                             f"got {self.tier!r}")
         if self.mode == "approx" and not (0.0 < self.eps < 1.0
                                           and 0.0 < self.delta < 1.0):
             raise ValueError(f"approx mode needs eps, delta in (0, 1), got "

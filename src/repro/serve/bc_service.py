@@ -1,25 +1,24 @@
 """Top-k central-vertices serving endpoint over approximate BC.
 
 The request/response scheduling mirrors ``serve.engine.ServeEngine``: a
-fixed pool of ``n_slots`` concurrently progressing jobs, a FIFO admission
-queue, and a host-side ``step()`` tick that advances every active slot by
-one unit of work — here one *sampling epoch* of the adaptive approximate-
-BC driver instead of one decode token. Long-running queries (tight ε on a
-big graph) therefore never block short ones (loose ε / top-k early exit):
-a slot frees the moment its estimator converges, exactly the
-no-head-of-line-blocking property of the decode engine.
+fixed pool of ``n_slots`` concurrently progressing jobs, an admission
+queue, and a host-side ``step()`` tick that advances active slots by
+units of work — here *sampling epochs* of the adaptive approximate-BC
+driver instead of decode tokens. Long-running queries (tight ε on a big
+graph) therefore never block short ones (loose ε / top-k early exit): a
+slot frees the moment its estimator converges.
 
 Graphs are registered up front (like model weights); the unified
 ``repro.bc`` planner resolves each one to a capacity ``BCPlan`` and a
 shared ``BatchExecutor`` — jitted batch step plus device-resident
 adjacency — reused by every request that names the graph. On top of
-that per-graph amortization the tick loop runs the two per-query
+that per-graph amortization the tick loop runs the per-query
 optimizations of the serving stack:
 
-* **per-request planning** — each distinct (graph, ε, δ, rule) resolves
-  its own ``BCPlan`` through ``repro.bc.plan_for_request`` (cached), so
-  a loose-ε request samples small epochs instead of inheriting the
-  graph-wide batch size;
+* **per-request planning** — each distinct (graph, ε, δ, rule, tier)
+  resolves its own ``BCPlan`` through ``repro.bc.plan_for_request``
+  (cached), so a loose-ε request samples small epochs instead of
+  inheriting the graph-wide batch size;
 * **cross-request fusion** — active slots are grouped by graph each
   tick and their epoch demand is drained through one
   ``repro.bc.BatchAssembler`` into slot-tagged fused batches for the
@@ -28,10 +27,34 @@ optimizations of the serving stack:
   dispatch; on a mesh, the fused moments all-reduce) once per batch
   instead of once per request. A lone request whose batch size matches
   the executor's runs the classic per-request path, so single-query
-  service answers are bit-identical to ``repro.bc.solve``'s driver.
+  service answers are bit-identical to ``repro.bc.solve``'s driver run
+  over the same source stream;
+* **QoS scheduling** — requests carry a latency tier
+  (``priority`` ∈ ``repro.bc.TIERS``, or an explicit ``deadline_s``)
+  and both admission and demand draining are deadline-aware:
+  admission is earliest-deadline-first over *absolute* deadlines
+  (``pack="fifo"`` restores strict submit order), which is also the
+  aging rule — a queued batch-tier request's fixed deadline eventually
+  undercuts every newly arriving interactive one, so loose work is
+  never starved; draining orders each tick's ``(slot, sources)``
+  demand through ``repro.bc.order_demand`` (deadline slack or
+  per-tenant fair share) and, under a ``tick_budget``, drains
+  *partially*: a tight-ε burst preempts loose-ε slots mid-epoch, whose
+  remaining chunks are deferred to the next tick. Deferral is safe:
+  the sampler's demand/assembly split draws each epoch's sources once
+  up front (``AdaptiveSampler.draw`` is chunking-invariant), so a
+  deferred chunk is the same sources it would have been undeferred.
 
-``fuse=False`` disables both (the pre-fusion behavior, kept for the
-fused-vs-unfused benchmark ``benchmarks/bc_serve.py``).
+Each admitted request samples its own RNG stream derived from
+``(seed, rid)`` — two concurrent requests that share a seed (e.g. both
+left it at the default 0) still draw independent source streams, so
+their (ε, δ) guarantees and top-k answers stay independent. To
+reproduce a request exactly, resubmit it with the same ``seed`` *and*
+``rid``.
+
+``fuse=False`` disables per-request planning and fusion (the
+pre-fusion behavior, kept for the fused-vs-unfused benchmark
+``benchmarks/bc_serve.py``).
 
 This module deliberately imports only public ``repro.bc`` names — the
 facade re-exports the estimator surface — so the old private-API leak
@@ -41,15 +64,16 @@ check_private_imports.py`` enforces that in CI.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.bc import (AdaptiveSampler, BatchAssembler, BatchExecutor,
-                      BCPlan, BCQuery, LambdaEstimator, build_executor,
-                      honest_converged, plan_for_request, scatter)
+from repro.bc import (PACKS, TIER_DEADLINE_S, TIERS, AdaptiveSampler,
+                      BatchAssembler, BatchExecutor, BCPlan, BCQuery,
+                      LambdaEstimator, build_executor, honest_converged,
+                      order_demand, plan_for_request, scatter)
 from repro.bc import plan as bc_plan
 from repro.bc import stopping_check
 from repro.graphs.formats import Graph
@@ -57,6 +81,17 @@ from repro.graphs.formats import Graph
 
 @dataclasses.dataclass
 class BCRequest:
+    """One top-k BC query.
+
+    ``priority`` names the latency tier (``repro.bc.TIERS``); the
+    scheduler turns it into an absolute deadline of ``submit_time +
+    deadline_s`` (tier default from ``repro.bc.TIER_DEADLINE_S`` unless
+    ``deadline_s`` is given). ``tenant`` feeds the ``pack="fair"``
+    drain policy. The served source stream is derived from
+    ``(seed, rid)`` — identical requests with distinct rids draw
+    independent streams; same (seed, rid) reproduces exactly.
+    """
+
     rid: int
     graph: str  # registered graph name
     k: int = 10  # top-k query size
@@ -65,6 +100,21 @@ class BCRequest:
     rule: str = "normal"
     seed: int = 0
     max_samples: Optional[int] = None  # hard cap under the Hoeffding budget
+    priority: str = "normal"  # latency tier, one of repro.bc.TIERS
+    deadline_s: Optional[float] = None  # None = the tier's default
+    tenant: str = "default"  # fair-share accounting key
+
+    def __post_init__(self) -> None:
+        if self.priority not in TIERS:
+            raise ValueError(f"priority must be one of {TIERS}, "
+                             f"got {self.priority!r}")
+        # rid and seed feed np.random.SeedSequence entropy (the per-job
+        # stream is derived from (seed, rid)), which rejects negatives —
+        # fail at construction, not ticks later inside _admit.
+        if self.rid < 0 or self.seed < 0:
+            raise ValueError(f"rid and seed must be non-negative (they "
+                             f"seed the job's RNG stream), got rid="
+                             f"{self.rid} seed={self.seed}")
 
 
 @dataclasses.dataclass
@@ -77,8 +127,20 @@ class BCResponse:
     n_samples: int
     n_epochs: int
     converged: bool
-    seconds: float
+    seconds: float  # admission -> retirement (service time)
     plan: Optional[BCPlan] = None  # the per-request plan that sized the run
+    tier: str = "normal"  # the request's latency tier
+    latency_s: float = 0.0  # submit -> retirement (what QoS is measured on)
+
+
+@dataclasses.dataclass
+class _Queued:
+    """Admission-queue entry: absolute deadline + arrival order."""
+
+    deadline: float  # absolute, on the monotonic clock
+    seq: int  # arrival order (FIFO key / EDF tie-break)
+    t_submit: float
+    req: BCRequest
 
 
 @dataclasses.dataclass
@@ -87,12 +149,19 @@ class _Job:
     sampler: AdaptiveSampler
     est: LambdaEstimator
     plan: BCPlan  # per-request plan (plan_for_request, cached)
-    t0: float
+    t0: float  # admission time
+    t_submit: float
+    deadline: float  # absolute
+    seq: int  # arrival order (the FIFO drain key — slot indices recycle)
     n_epochs: int = 0
+    # -- partial-drain state: the epoch currently draining ----------------
+    epoch_idx: Optional[int] = None  # index of the epoch backlog belongs to
+    backlog: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
 
 
 class BCService:
-    """Slot-scheduled approximate-BC query service.
+    """Slot-scheduled approximate-BC query service with QoS tiers.
 
     ``mesh=None`` lets the ``repro.bc`` planner place each graph (one
     visible device → single host); with a jax device mesh every
@@ -103,6 +172,17 @@ class BCService:
     capacity plans are inspectable via ``plan_for(name)``, per-request
     plans via the ``plan`` field of each ``BCResponse``.
 
+    ``pack`` picks the scheduling policy (``repro.bc.PACKS``):
+    ``"deadline"`` (default) admits earliest-absolute-deadline-first and
+    drains each tick's demand tightest-slack-first; ``"fair"`` balances
+    drained rows across request tenants; ``"fifo"`` is the legacy
+    strict-arrival-order behavior. With all-default requests (one tier,
+    no explicit deadlines) every policy degenerates to FIFO, so tiering
+    is strictly opt-in. ``tick_budget`` caps the source samples executed
+    per tick: when set, low-priority slots mid-epoch are *preempted* —
+    their remaining sources are deferred to later ticks while
+    tight-deadline demand drains first.
+
     ``run`` never drops work silently: if ``max_ticks`` expires with
     requests still queued or active, ``exhausted`` is True and
     ``pending`` lists every unfinished request.
@@ -110,17 +190,27 @@ class BCService:
 
     def __init__(self, graphs: Dict[str, Graph], *, n_slots: int = 4,
                  backend: str = "dense", mesh=None, iters: int = 0,
-                 fuse: bool = True):
+                 fuse: bool = True, pack: str = "deadline",
+                 tick_budget: Optional[int] = None):
+        if pack not in PACKS:
+            raise ValueError(f"pack must be one of {PACKS}, got {pack!r}")
+        if tick_budget is not None and tick_budget <= 0:
+            raise ValueError(f"tick_budget must be positive or None, "
+                             f"got {tick_budget}")
         self.graphs = dict(graphs)
         self.backend = backend
         self.mesh = mesh
         self.iters = iters
         self.n_slots = n_slots
         self.fuse = fuse
+        self.pack = pack
+        self.tick_budget = tick_budget
         self.slots: List[Optional[_Job]] = [None] * n_slots
-        self.queue: Deque[BCRequest] = deque()
+        self.queue: List[_Queued] = []
         self.finished: List[BCResponse] = []
         self.exhausted = False  # run() hit max_ticks with work pending
+        self._seq = 0
+        self._served: Dict[str, int] = {}  # tenant -> rows drained (fair)
         self._executors: Dict[str, BatchExecutor] = {}
         self._assemblers: Dict[str, BatchAssembler] = {}
         self._request_plans: Dict[Tuple, BCPlan] = {}
@@ -129,7 +219,15 @@ class BCService:
     def submit(self, req: BCRequest) -> None:
         if req.graph not in self.graphs:
             raise KeyError(f"unknown graph {req.graph!r}")
-        self.queue.append(req)
+        # Monotonic clock throughout: deadlines, slack, and latencies are
+        # only ever compared/subtracted internally, and a wall-clock step
+        # (NTP) must not reorder EDF or produce negative latencies.
+        t = time.monotonic()
+        horizon = (req.deadline_s if req.deadline_s is not None
+                   else TIER_DEADLINE_S[req.priority])
+        self.queue.append(_Queued(deadline=t + horizon, seq=self._seq,
+                                  t_submit=t, req=req))
+        self._seq += 1
 
     def _graph_executor(self, name: str) -> BatchExecutor:
         """Capacity plan + executor per registered graph, built lazily,
@@ -145,20 +243,29 @@ class BCService:
         return self._executors[name]
 
     def _assembler(self, name: str) -> BatchAssembler:
+        # pack="fifo" on purpose: step() already fixed the tick's drain
+        # order (order_demand over ALL graphs, before the budget cut),
+        # and each graph's demand arrives here in that order — re-sorting
+        # inside the assembler would re-run the policy on a mid-tick
+        # ``_served`` snapshot and could disagree with the schedule that
+        # allocated the budget.
         if name not in self._assemblers:
             self._assemblers[name] = BatchAssembler(
                 self._graph_executor(name))
         return self._assemblers[name]
 
     def _plan_for_request(self, req: BCRequest) -> BCPlan:
-        """Per-request configuration search, cached by what sizes it:
-        requests sharing (graph, ε, δ, rule, cap) share one plan."""
-        key = (req.graph, req.eps, req.delta, req.rule, req.max_samples)
+        """Per-request configuration search, cached by what sizes (or
+        tags) it: requests sharing (graph, ε, δ, rule, cap, tier) share
+        one plan."""
+        key = (req.graph, req.eps, req.delta, req.rule, req.max_samples,
+               req.priority)
         if key not in self._request_plans:
             self._request_plans[key] = plan_for_request(
                 self.graphs[req.graph], eps=req.eps, delta=req.delta,
                 rule=req.rule, max_samples=req.max_samples,
-                backend=self.backend, iters=self.iters, mesh=self.mesh)
+                tier=req.priority, backend=self.backend, iters=self.iters,
+                mesh=self.mesh)
         return self._request_plans[key]
 
     def plan_for(self, name: str):
@@ -166,11 +273,28 @@ class BCService:
         executor)."""
         return self._graph_executor(name).plan
 
+    # ------------------------------------------------------- admission
+    def _pop_next(self) -> _Queued:
+        """Next request to admit: earliest absolute deadline (EDF) with
+        arrival-order tie-break, or strict arrival order for
+        ``pack="fifo"``. EDF over absolute deadlines is also the aging
+        rule — a queued loose-tier request's deadline is fixed while
+        newly submitted tight-tier deadlines keep moving forward, so
+        after at most its own deadline horizon the loose request sorts
+        first and cannot be starved."""
+        if self.pack == "fifo":
+            j = min(range(len(self.queue)), key=lambda k: self.queue[k].seq)
+        else:
+            j = min(range(len(self.queue)),
+                    key=lambda k: (self.queue[k].deadline, self.queue[k].seq))
+        return self.queue.pop(j)
+
     def _admit(self) -> None:
         for i in range(self.n_slots):
             if self.slots[i] is not None or not self.queue:
                 continue
-            req = self.queue.popleft()
+            q = self._pop_next()
+            req = q.req
             g = self.graphs[req.graph]
             ex = self._graph_executor(req.graph)
             # The sampler's n_b sets the request's epoch schedule (τ₀)
@@ -186,29 +310,37 @@ class BCService:
             # per-request size (the executors bucket it).
             nb = (ex.n_b if pl.n_b >= ex.plan.n_b
                   else min(pl.n_b, ex.n_b))
+            # Per-job stream from (seed, rid): concurrent requests that
+            # share the default seed must not draw identical sources —
+            # correlated streams silently defeat independent (ε, δ)
+            # guarantees. Same (seed, rid) still reproduces exactly.
             sampler = AdaptiveSampler(g.n, eps=req.eps, delta=req.delta,
                                       n_b=nb, cap=req.max_samples,
-                                      seed=req.seed)
+                                      seed=(req.seed, req.rid))
             est = LambdaEstimator(g.n, req.eps, req.delta, req.rule)
             self.slots[i] = _Job(req=req, sampler=sampler, est=est,
-                                 plan=pl, t0=time.time())
+                                 plan=pl, t0=time.monotonic(),
+                                 t_submit=q.t_submit, deadline=q.deadline,
+                                 seq=q.seq)
 
     def _retire(self, i: int, converged: bool) -> None:
         job = self.slots[i]
         res = job.est.result(n_epochs=job.n_epochs, converged=converged)
         ids = res.topk(job.req.k)
+        now = time.monotonic()
         self.finished.append(BCResponse(
             rid=job.req.rid, graph=job.req.graph, topk=ids.tolist(),
             lam=res.lam[ids], halfwidth=res.halfwidth[ids],
             n_samples=res.n_samples, n_epochs=res.n_epochs,
             converged=res.converged,
-            seconds=time.time() - job.t0, plan=job.plan))
+            seconds=now - job.t0, plan=job.plan,
+            tier=job.req.priority, latency_s=now - job.t_submit))
         self.slots[i] = None
 
     # ------------------------------------------------------------------
     def _run_unfused(self, ex: BatchExecutor, job: _Job,
                      sources: np.ndarray) -> int:
-        """The classic per-request path: chop one slot's epoch into
+        """The classic per-request path: chop one slot's sources into
         sampler-sized chunks, each padded to the executor's ``n_b``."""
         nb = job.sampler.n_b
         done = 0
@@ -221,7 +353,8 @@ class BCService:
 
     def _run_fused(self, name: str, ex: BatchExecutor,
                    demand: List[Tuple[int, np.ndarray]]) -> int:
-        """Drain several slots' epoch demand through fused batches."""
+        """Drain several slots' demand (already in the tick's scheduled
+        order) through fused batches."""
         done = 0
         for fb in self._assembler(name).assemble(demand):
             s1, s2, nr = ex.step_segmented(fb.sources, fb.valid,
@@ -232,58 +365,101 @@ class BCService:
         return done
 
     def step(self) -> int:
-        """One tick: admit, then advance every active slot by one epoch.
+        """One tick: admit, schedule, then drain demand under the budget.
 
-        Active slots are grouped by graph; each group resolves its
-        executor once and drains all slots' source demand together —
-        fused into slot-tagged batches when more than one request is
-        live on the graph. Returns the number of source samples
-        processed this tick.
+        1. **admit** queued requests into free slots (EDF with aging,
+           or FIFO);
+        2. **refill**: every active slot with no outstanding backlog
+           asks its sampler for one epoch of demand (drawn up front —
+           the RNG stream is chunking-invariant, so deferral cannot
+           change which sources a request samples); samplers that are
+           done (stopped or capped) retire their slot honestly;
+        3. **schedule**: all slots' backlogs are ordered by the ``pack``
+           policy (deadline slack / fair share / FIFO) and, if
+           ``tick_budget`` is set, truncated to the budget — the tail
+           keeps its remaining sources as backlog for the next tick
+           (mid-epoch preemption);
+        4. **execute**: the scheduled demand is grouped by graph (each
+           group resolves its executor once) and drained — fused into
+           slot-tagged batches when more than one request is live on
+           the graph — and slots whose epoch completed run the same
+           sequential ``stopping_check`` as ``repro.bc.solve``.
+
+        Returns the number of source samples processed this tick.
         """
         self._admit()
-        processed = 0
-        by_graph: Dict[str, List[int]] = {}
-        for i, job in enumerate(self.slots):
-            if job is not None:
-                by_graph.setdefault(job.req.graph, []).append(i)
-        for name, idxs in by_graph.items():
-            ex = self._graph_executor(name)  # once per graph, not per slot
-            # -- demand: each live slot asks for one epoch of sources --
-            demand: List[Tuple[int, np.ndarray]] = []
-            epoch_of: Dict[int, int] = {}
-            for i in idxs:
-                job = self.slots[i]
-                nxt = job.sampler.next_epoch()
-                if nxt is None:
-                    # Stopped or capped: certify honestly (Hoeffding
-                    # budget reached, or the empirical CIs) — a cap
-                    # below the budget is NOT convergence by itself.
-                    self._retire(i, converged=honest_converged(job.est))
-                    continue
-                ei, tau_e = nxt
-                epoch_of[i] = ei
-                demand.append((i, job.sampler.draw(tau_e)))
-            if not demand:
+        now = time.monotonic()
+        # -- refill: one epoch of demand per idle-backlog slot ----------
+        for i in range(self.n_slots):
+            job = self.slots[i]
+            if job is None or job.backlog.size or job.epoch_idx is not None:
                 continue
-            # -- execute: fused across requests, or the classic path --
-            lone = (len(demand) == 1
-                    and self.slots[demand[0][0]].sampler.n_b == ex.n_b)
+            nxt = job.sampler.next_epoch()
+            if nxt is None:
+                # Stopped or capped: certify honestly (Hoeffding budget
+                # reached, or the empirical CIs) — a cap below the
+                # budget is NOT convergence by itself.
+                self._retire(i, converged=honest_converged(job.est))
+                continue
+            ei, tau_e = nxt
+            job.epoch_idx = ei
+            job.backlog = job.sampler.draw(tau_e)
+        # -- schedule: policy order + tick budget over ALL graphs.
+        # Base order is admission order (job.seq), NOT slot index: slots
+        # recycle, so under pack="fifo" with a tick budget an old
+        # request in a high slot would otherwise be starved by fresh
+        # admissions landing in lower slots. --
+        live = sorted(((i, self.slots[i]) for i in range(self.n_slots)
+                       if self.slots[i] is not None
+                       and self.slots[i].backlog.size),
+                      key=lambda e: e[1].seq)
+        slack = {i: job.deadline - now for i, job in live}
+        tenant = {i: job.req.tenant for i, job in live}
+        ordered = order_demand([(i, job.backlog) for i, job in live],
+                               self.pack, slack=slack, tenant=tenant,
+                               served=self._served)
+        remaining = (math.inf if self.tick_budget is None
+                     else int(self.tick_budget))
+        sched: List[Tuple[int, np.ndarray]] = []
+        for i, rows in ordered:
+            if remaining <= 0:
+                break  # preempted: rows stay in the slot's backlog
+            k = int(min(rows.size, remaining))
+            sched.append((i, rows[:k]))
+            self.slots[i].backlog = rows[k:]
+            remaining -= k
+        # -- execute per graph (order preserved within each group) ------
+        processed = 0
+        by_graph: Dict[str, List[Tuple[int, np.ndarray]]] = {}
+        for i, rows in sched:
+            by_graph.setdefault(self.slots[i].req.graph, []).append((i, rows))
+        for name, dem in by_graph.items():
+            ex = self._graph_executor(name)  # once per graph, not per slot
+            lone = (len(dem) == 1
+                    and self.slots[dem[0][0]].sampler.n_b == ex.n_b)
             if self.fuse and not lone:
-                processed += self._run_fused(name, ex, demand)
+                processed += self._run_fused(name, ex, dem)
             else:
-                for i, srcs in demand:
+                for i, srcs in dem:
                     processed += self._run_unfused(ex, self.slots[i], srcs)
-            # -- epoch boundary: same sequential test as repro.bc.solve
-            # (one hw pass per epoch, δ split across checks) so CLI and
-            # service answers agree --
-            for i, _ in demand:
-                job = self.slots[i]
-                ei = epoch_of[i]
-                job.n_epochs = ei + 1
-                done, _ = stopping_check(job.est, job.req.eps, job.req.k, ei)
-                if done:
-                    job.sampler.stop()
-                    self._retire(i, converged=True)
+            for i, rows in dem:
+                t = self.slots[i].req.tenant
+                self._served[t] = self._served.get(t, 0) + int(rows.size)
+        # -- epoch boundary: same sequential test as repro.bc.solve
+        # (one hw pass per epoch, δ split across checks) so CLI and
+        # service answers agree. Only fully drained epochs are tested —
+        # a preempted slot's epoch waits for its deferred chunks. --
+        for i, _ in sched:
+            job = self.slots[i]
+            if job is None or job.backlog.size or job.epoch_idx is None:
+                continue
+            ei = job.epoch_idx
+            job.n_epochs = ei + 1
+            job.epoch_idx = None
+            done, _ = stopping_check(job.est, job.req.eps, job.req.k, ei)
+            if done:
+                job.sampler.stop()
+                self._retire(i, converged=True)
         return processed
 
     @property
@@ -292,9 +468,12 @@ class BCService:
 
     @property
     def pending(self) -> List[BCRequest]:
-        """Requests admitted or queued but not yet finished."""
+        """Requests admitted or queued but not yet finished (queued part
+        in admission order)."""
+        key = ((lambda q: q.seq) if self.pack == "fifo"
+               else (lambda q: (q.deadline, q.seq)))
         return ([job.req for job in self.slots if job is not None]
-                + list(self.queue))
+                + [q.req for q in sorted(self.queue, key=key)])
 
     def run(self, max_ticks: int = 10_000) -> List[BCResponse]:
         ticks = 0

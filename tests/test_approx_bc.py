@@ -12,6 +12,11 @@ import sys
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare local run: deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, strategies as st
+
 from repro.approx import (bernstein_halfwidth, epoch_schedule,
                           hoeffding_budget, normal_halfwidth)
 from repro.approx.driver import LambdaEstimator, choose_sample_batch
@@ -80,6 +85,41 @@ def test_halfwidths_shrink_with_tau():
         hw100 = fn(s1, s2, 100, 1e-3)
         hw400 = fn(s1 * 4, s2 * 4, 400, 1e-3)
         assert np.all(hw400 < hw100)
+
+
+def test_halfwidths_infinite_below_two_samples():
+    """τ < 2 carries no variance estimate: the CI must be +inf, never a
+    finite value a stopping rule could mistake for convergence."""
+    s1 = np.array([0.5])
+    s2 = np.array([0.3])
+    for fn in (bernstein_halfwidth, normal_halfwidth):
+        for tau in (0, 1):
+            assert np.isinf(fn(s1 * tau, s2 * tau, tau, 0.01)).all()
+        assert np.isfinite(fn(s1 * 2, s2 * 2, 2, 0.01)).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(min_value=0.0, max_value=1.0),
+       st.floats(min_value=0.0, max_value=0.25),
+       st.integers(min_value=2, max_value=5000),
+       st.floats(min_value=1e-6, max_value=0.5))
+def test_bernstein_monotone_nonincreasing_in_tau(mean, var, tau, delta_v):
+    """Maurer–Pontil with the unbiased sample variance: for a *fixed*
+    empirical distribution (mean, variance held constant while τ grows)
+    the halfwidth is monotone non-increasing in τ — more samples of the
+    same data can never loosen the certificate. (The biased-variance
+    variant this regression replaces satisfied it too, but silently
+    understated V̂ by τ/(τ−1); the property pins the corrected form.)"""
+    mean = float(np.clip(mean, 0.0, 1.0))
+    var = float(min(var, mean * (1.0 - mean)))  # realizable on [0, 1]
+    s2_rate = var + mean * mean
+
+    def hw(t):
+        return float(bernstein_halfwidth(
+            np.array([mean * t]), np.array([s2_rate * t]), t, delta_v)[0])
+
+    assert hw(tau + 1) <= hw(tau) + 1e-12
+    assert hw(4 * tau) <= hw(tau) + 1e-12
 
 
 def test_choose_sample_batch_respects_memory():

@@ -4,12 +4,15 @@ bucketing, per-request planning, and the serving-stack regressions
 bit-stability).
 
 The headline property: for ANY mix of concurrent requests — random slot
-interleavings, ragged demand, several buckets — the per-slot
-``(S1, S2, n_reach)`` a fused ``step_segmented`` batch returns is
+interleavings, ragged demand, several buckets, and EVERY packing policy
+(``pack="fifo"|"deadline"|"fair"``) — the per-slot ``(S1, S2,
+n_reach)`` a fused ``step_segmented`` batch returns is
 bitwise-identical to running each request's rows sequentially (unfused)
 on the same executor, on both the single-host and the 1×1-mesh
-executor. The multi-device (8 fake CPU devices) fused tick rides the
-``md_bc_planner_check.py`` subprocess (slow lane).
+executor; and a mid-epoch preemption (a slot's demand deferred across
+two drains) leaves every slot's accumulated statistics bitwise-equal to
+the undeferred drain. The multi-device (8 fake CPU devices) fused tick
+rides the ``md_bc_planner_check.py`` subprocess (slow lane).
 """
 import numpy as np
 import pytest
@@ -20,9 +23,9 @@ except ImportError:  # bare local run: deterministic fallback sweep
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.approx.sampling import AdaptiveSampler, hoeffding_budget
-from repro.bc import (BatchAssembler, BCQuery, FusedBatch, build_executor,
-                      bucket_sizes, honest_converged, plan,
-                      plan_for_request, scatter)
+from repro.bc import (PACKS, BatchAssembler, BCQuery, FusedBatch,
+                      build_executor, bucket_sizes, honest_converged,
+                      order_demand, plan, plan_for_request, scatter)
 from repro.core import brandes_bc
 from repro.graphs.generators import rmat
 
@@ -95,27 +98,31 @@ def test_bucket_sizes_and_bucket_for():
 
 
 # -------------------------------------------------- fused parity property
-def _fused_vs_sequential(ex, n, slot_lens, order_seed):
+def _fused_vs_sequential(ex, n, slot_lens, order_seed, pack="fifo"):
     """Fused step_segmented == each request's batches run sequentially.
 
     Bitwise leg: for every fused batch, every slot's segmented rows must
     equal running exactly those rows alone (unfused) — fusing requests
     into one padded batch must not perturb any request's statistics by
-    even an ulp. Numeric leg: the fused per-slot *totals* match the
-    plain (unsegmented) ``step`` over the whole demand to f32 tolerance
-    (the grouping of f32 partial sums may differ, the mathematics may
-    not).
+    even an ulp, whatever ``pack`` policy ordered the demand (policies
+    reorder whole entries, never a slot's rows). Numeric leg: the fused
+    per-slot *totals* match the plain (unsegmented) ``step`` over the
+    whole demand to f32 tolerance (the grouping of f32 partial sums may
+    differ, the mathematics may not).
     """
     rng = np.random.default_rng(order_seed)
     demand = [(j, rng.integers(0, n, ln).astype(np.int32))
               for j, ln in enumerate(slot_lens) if ln > 0]
     if not demand:
         return
-    # random interleaving of slot order into the assembler
+    # random interleaving of slot order into the assembler, plus random
+    # slack/tenant metadata for the deadline / fair policies
     rng.shuffle(demand)
-    asm = BatchAssembler(ex)
+    slack = {j: float(rng.uniform(-1.0, 5.0)) for j, _ in demand}
+    tenant = {j: f"t{int(rng.integers(0, 2))}" for j, _ in demand}
+    asm = BatchAssembler(ex, pack=pack)
     fused = {}
-    for fb in asm.assemble(demand):
+    for fb in asm.assemble(demand, slack=slack, tenant=tenant):
         s1, s2, nr = ex.step_segmented(fb.sources, fb.valid, fb.slot_ids,
                                        fb.n_slots)
         for j, key in enumerate(fb.slots):
@@ -152,21 +159,107 @@ def _fused_vs_sequential(ex, n, slot_lens, order_seed):
 @settings(max_examples=12, deadline=None)
 @given(st.lists(st.integers(min_value=0, max_value=50), min_size=1,
                 max_size=5),
-       st.integers(min_value=0, max_value=2 ** 16))
-def test_fused_parity_single_host(lens, order_seed):
-    """Random slot interleavings + ragged demand across several buckets:
-    fused == sequential, bitwise, on the single-host executor."""
-    _fused_vs_sequential(_host_executor(), _graph().n, lens, order_seed)
+       st.integers(min_value=0, max_value=2 ** 16),
+       st.integers(min_value=0, max_value=len(PACKS) - 1))
+def test_fused_parity_single_host(lens, order_seed, pack_idx):
+    """Random slot interleavings + ragged demand across several buckets
+    and every packing policy: fused == sequential, bitwise, on the
+    single-host executor."""
+    _fused_vs_sequential(_host_executor(), _graph().n, lens, order_seed,
+                         pack=PACKS[pack_idx])
 
 
-@settings(max_examples=4, deadline=None)
+@settings(max_examples=6, deadline=None)
 @given(st.lists(st.integers(min_value=0, max_value=40), min_size=1,
                 max_size=4),
-       st.integers(min_value=0, max_value=2 ** 16))
-def test_fused_parity_mesh_1x1(lens, order_seed):
+       st.integers(min_value=0, max_value=2 ** 16),
+       st.integers(min_value=0, max_value=len(PACKS) - 1))
+def test_fused_parity_mesh_1x1(lens, order_seed, pack_idx):
     """Same property through the distributed (1×1 mesh) executor — the
-    segmented stacked psum must not perturb per-slot statistics."""
-    _fused_vs_sequential(_mesh_executor(), _graph().n, lens, order_seed)
+    segmented stacked psum must not perturb per-slot statistics under
+    any packing policy."""
+    _fused_vs_sequential(_mesh_executor(), _graph().n, lens, order_seed,
+                         pack=PACKS[pack_idx])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=50), min_size=2,
+                max_size=4),
+       st.integers(min_value=0, max_value=2 ** 16),
+       st.integers(min_value=0, max_value=len(PACKS) - 1))
+def test_fused_parity_survives_preemption_defer(lens, cut_seed, pack_idx):
+    """Mid-epoch preemption: each slot's epoch demand is split at a
+    random preemption point and drained over two assembler calls (the
+    deferred chunks of a later tick). Two invariants: (1) across the
+    whole defer cycle every slot executes exactly its original rows in
+    its original order — deferral loses nothing, duplicates nothing,
+    reorders nothing within a slot; (2) per fused batch, every slot's
+    segmented statistics stay bitwise-identical to running those rows
+    alone, so a deferred request's accumulated estimator state is
+    bitwise what the same sequence of unfused chunk runs would give,
+    under any packing policy."""
+    ex = _host_executor()
+    n = _graph().n
+    rng = np.random.default_rng(cut_seed)
+    demand = [(j, rng.integers(0, n, ln).astype(np.int32))
+              for j, ln in enumerate(lens)]
+    cuts = {j: int(rng.integers(0, srcs.size + 1)) for j, srcs in demand}
+    slack = {j: float(rng.uniform(-1.0, 5.0)) for j, _ in demand}
+    tenant = {j: f"t{int(rng.integers(0, 2))}" for j, _ in demand}
+    asm = BatchAssembler(ex, pack=PACKS[pack_idx])
+    fused = {j: [np.zeros(n), np.zeros(n)] for j, _ in demand}
+    seq = {j: [np.zeros(n), np.zeros(n)] for j, _ in demand}
+    ran_rows = {j: [] for j, _ in demand}
+    drains = ([(j, srcs[:cuts[j]]) for j, srcs in demand],
+              [(j, srcs[cuts[j]:]) for j, srcs in demand])
+    for drain in drains:
+        for fb in asm.assemble(drain, slack=slack, tenant=tenant):
+            s1, s2, nr = ex.step_segmented(fb.sources, fb.valid,
+                                           fb.slot_ids, fb.n_slots)
+            for key, (r1, r2, _, _cnt) in scatter(fb, (s1, s2, nr)).items():
+                fused[key][0] += r1
+                fused[key][1] += r2
+            for j, key in enumerate(fb.slots):
+                rows = fb.sources[(fb.slot_ids == j) & fb.valid]
+                ran_rows[key].append(rows)
+                # sequential baseline at the same chunk grouping: the
+                # same rows, alone, accumulated the same way
+                b1, b2, _ = ex.step_segmented(
+                    rows, np.ones(rows.size, bool),
+                    np.zeros(rows.size, np.int32), 1)
+                seq[key][0] += b1[0]
+                seq[key][1] += b2[0]
+    for j, srcs in demand:
+        np.testing.assert_array_equal(
+            np.concatenate(ran_rows[j]) if ran_rows[j] else
+            np.zeros(0, np.int32), srcs)
+        np.testing.assert_array_equal(fused[j][0], seq[j][0])
+        np.testing.assert_array_equal(fused[j][1], seq[j][1])
+
+
+# ---------------------------------------------------- packing policies
+def test_order_demand_policies():
+    a = np.arange(10, dtype=np.int32)
+    b = np.arange(20, dtype=np.int32)
+    c = np.arange(5, dtype=np.int32)
+    demand = [(0, a), (1, b), (2, c)]
+    # fifo: caller's order, untouched
+    assert [k for k, _ in order_demand(demand, "fifo")] == [0, 1, 2]
+    # deadline: ascending slack, missing slack sorts last, ties stable
+    out = order_demand(demand, "deadline", slack={0: 5.0, 2: -1.0})
+    assert [k for k, _ in out] == [2, 0, 1]
+    # fair: tenant with least cumulative rows drains first; the caller's
+    # served history counts
+    out = order_demand(demand, "fair",
+                       tenant={0: "x", 1: "x", 2: "y"},
+                       served={"x": 100})
+    assert [k for k, _ in out][0] == 2  # tenant y owes nothing yet
+    # entries are moved whole: same arrays, just reordered
+    assert {id(s) for _, s in out} == {id(a), id(b), id(c)}
+    with pytest.raises(ValueError, match="pack"):
+        order_demand(demand, "lifo")
+    with pytest.raises(ValueError, match="pack"):
+        BatchAssembler(_host_executor(), pack="nope")
 
 
 def test_mesh_and_host_fused_agree():

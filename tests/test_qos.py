@@ -1,0 +1,250 @@
+"""QoS scheduling in ``serve.BCService``: latency tiers, EDF admission
+with aging, tick-budget preemption (partial epoch drains), per-request
+RNG streams, and the zero-budget retirement guards — the serving-side
+regressions of the priority-aware scheduler.
+
+The bitwise legs run on a star graph: its dependency values are small
+integers, so f32 batch sums are exact and responses are reproducible
+across any chunk grouping — which is what lets the preemption test
+demand bitwise-equal answers from budgeted and unbudgeted runs.
+"""
+import numpy as np
+import pytest
+
+from repro.approx.sampling import hoeffding_budget
+from repro.graphs.generators import rmat, star_graph
+from repro.serve.bc_service import BCRequest, BCService
+
+_CACHE = {}
+
+
+def _graph():
+    if "g" not in _CACHE:
+        g = rmat(6, 8, seed=5)
+        g, _ = g.remove_isolated()
+        _CACHE["g"] = g
+    return _CACHE["g"]
+
+
+# ------------------------------------------------------------- admission
+def test_request_validates_tier():
+    with pytest.raises(ValueError, match="priority"):
+        BCRequest(rid=0, graph="web", priority="urgent")
+
+
+def test_request_validates_rid_and_seed():
+    """(seed, rid) feed SeedSequence entropy, which rejects negatives —
+    the request must fail at construction, not ticks later in _admit."""
+    with pytest.raises(ValueError, match="non-negative"):
+        BCRequest(rid=-1, graph="web")
+    with pytest.raises(ValueError, match="non-negative"):
+        BCRequest(rid=0, graph="web", seed=-3)
+
+
+def test_edf_admission_prioritizes_tight_deadlines():
+    """A batch burst ahead of an interactive request: FIFO serves the
+    burst first, the deadline scheduler jumps the interactive tier over
+    it (n_slots=1 makes completion order = admission order)."""
+    g = _graph()
+    for pack, first in (("fifo", 0), ("deadline", 2)):
+        svc = BCService({"web": g}, n_slots=1, pack=pack)
+        svc.submit(BCRequest(rid=0, graph="web", eps=0.2, priority="batch"))
+        svc.submit(BCRequest(rid=1, graph="web", eps=0.2, priority="batch"))
+        svc.submit(BCRequest(rid=2, graph="web", eps=0.2,
+                             priority="interactive"))
+        out = svc.run()
+        assert [r.rid for r in out][0] == first, pack
+        assert sorted(r.rid for r in out) == [0, 1, 2]
+
+
+def test_edf_aging_overdue_batch_wins():
+    """Aging via absolute deadlines: an already-overdue loose-tier
+    request (explicit deadline_s=0) beats a fresh interactive one, so
+    queued loose work cannot be starved by a tight-tier stream."""
+    g = _graph()
+    svc = BCService({"web": g}, n_slots=1, pack="deadline")
+    svc.submit(BCRequest(rid=0, graph="web", eps=0.2, priority="batch",
+                         deadline_s=0.0))
+    svc.submit(BCRequest(rid=1, graph="web", eps=0.2,
+                         priority="interactive"))
+    out = svc.run()
+    assert [r.rid for r in out][0] == 0
+
+
+def test_untiered_requests_keep_fifo_order():
+    """With all-default requests the deadline policy degenerates to
+    FIFO: tiering is strictly opt-in."""
+    g = _graph()
+    svc = BCService({"web": g}, n_slots=1, pack="deadline")
+    for rid in range(3):
+        svc.submit(BCRequest(rid=rid, graph="web", eps=0.2))
+    assert [q.rid for q in svc.pending] == [0, 1, 2]
+    out = svc.run()
+    assert [r.rid for r in out] == [0, 1, 2]
+
+
+# ------------------------------------------------- per-request RNG streams
+def test_concurrent_identical_requests_draw_distinct_streams():
+    """Regression (seed collision): two live requests sharing the
+    default seed used to draw *identical* source streams, silently
+    correlating their answers. Streams now derive from (seed, rid)."""
+    g = _graph()
+
+    def run_pair():
+        svc = BCService({"web": g}, n_slots=2)
+        svc.submit(BCRequest(rid=0, graph="web", eps=0.1))
+        svc.submit(BCRequest(rid=1, graph="web", eps=0.1))
+        return {r.rid: r for r in svc.run()}
+
+    a, b = run_pair(), run_pair()
+    # distinct rids, same seed: disjoint-in-distribution draws — the
+    # estimates must differ (they were bitwise-identical before the fix)
+    assert not np.array_equal(a[0].lam, a[1].lam)
+    # ... while staying estimates of the same λ (same graph, same ε)
+    np.testing.assert_allclose(a[0].lam, a[1].lam, rtol=0.9)
+    # same (seed, rid) in an identical run: exact reproducibility kept
+    for rid in (0, 1):
+        np.testing.assert_array_equal(a[rid].lam, b[rid].lam)
+        assert a[rid].topk == b[rid].topk
+
+
+def test_first_epoch_draws_differ_across_rids():
+    """The mechanism itself: admitted samplers with equal seeds but
+    different rids produce different first epochs."""
+    g = _graph()
+    svc = BCService({"web": g}, n_slots=2)
+    svc.submit(BCRequest(rid=7, graph="web", eps=0.1, seed=3))
+    svc.submit(BCRequest(rid=8, graph="web", eps=0.1, seed=3))
+    svc._admit()
+    s0 = svc.slots[0].sampler.draw(64)
+    s1 = svc.slots[1].sampler.draw(64)
+    assert not np.array_equal(s0, s1)
+
+
+# ------------------------------------------------ preemption / tick budget
+def test_tick_budget_preempts_and_preserves_answers():
+    """Partial epoch drains: with a small tick budget the loose slot is
+    preempted mid-epoch (backlog deferred across ticks), yet every
+    response stays bitwise-identical to the unbudgeted run — deferral
+    changes *when* sources run, never *which* sources or their order."""
+    s = star_graph(64)
+
+    def run(budget):
+        svc = BCService({"s": s}, n_slots=2, pack="deadline",
+                        tick_budget=budget)
+        svc.submit(BCRequest(rid=0, graph="s", eps=0.02, priority="batch"))
+        svc.submit(BCRequest(rid=1, graph="s", eps=0.05,
+                             priority="interactive"))
+        if budget is not None:
+            # drive one tick by hand and observe the preemption: some
+            # slot must carry deferred backlog into the next tick
+            svc.step()
+            assert any(job is not None and job.backlog.size
+                       for job in svc.slots)
+        out = svc.run()
+        assert not svc.exhausted
+        return {r.rid: r for r in out}
+
+    base, budgeted = run(None), run(16)
+    for rid in (0, 1):
+        np.testing.assert_array_equal(base[rid].lam, budgeted[rid].lam)
+        np.testing.assert_array_equal(base[rid].halfwidth,
+                                      budgeted[rid].halfwidth)
+        assert base[rid].n_samples == budgeted[rid].n_samples
+        assert base[rid].topk == budgeted[rid].topk
+
+
+def test_fifo_drain_follows_admission_order_not_slot_index():
+    """Regression: slots recycle, so FIFO draining must key on admission
+    order — an older request in a high slot must get the tick budget
+    before a newer request admitted into a lower slot."""
+    g = _graph()
+    svc = BCService({"web": g}, n_slots=2, pack="fifo", tick_budget=4)
+    for rid in range(3):
+        svc.submit(BCRequest(rid=rid, graph="web", eps=0.3))
+    svc._admit()  # rid 0 -> slot 0, rid 1 -> slot 1
+    assert [j.req.rid for j in svc.slots] == [0, 1]
+    svc.slots[0] = None  # rid 0 retires; rid 2 recycles slot 0
+    svc._admit()
+    assert [j.req.rid for j in svc.slots] == [2, 1]
+    svc.step()
+    # the 4-row budget went to the older rid 1 (slot 1), not slot 0
+    assert svc.slots[1].est.tau == 4
+    assert svc.slots[0].est.tau == 0
+
+
+def test_tick_budget_validation():
+    with pytest.raises(ValueError, match="tick_budget"):
+        BCService({}, tick_budget=0)
+    with pytest.raises(ValueError, match="pack"):
+        BCService({}, pack="lifo")
+
+
+# --------------------------------------------------------- tier plumbing
+def test_response_and_plan_carry_tier():
+    g = _graph()
+    svc = BCService({"web": g}, n_slots=1)
+    svc.submit(BCRequest(rid=0, graph="web", eps=0.2,
+                         priority="interactive"))
+    r = svc.run()[0]
+    assert r.tier == "interactive"
+    assert r.plan.tier == "interactive"
+    assert r.plan.to_json()["tier"] == "interactive"
+    assert r.latency_s >= r.seconds - 1e-9  # queue wait included
+    # requests that differ only in tier do not share a cached plan
+    svc2 = BCService({"web": g}, n_slots=2)
+    svc2.submit(BCRequest(rid=0, graph="web", eps=0.2, priority="batch"))
+    svc2.submit(BCRequest(rid=1, graph="web", eps=0.2,
+                          priority="interactive"))
+    by = {r.rid: r for r in svc2.run()}
+    assert by[0].plan.tier == "batch" and by[1].plan.tier == "interactive"
+
+
+def test_fair_pack_serves_all_tenants():
+    g = _graph()
+    svc = BCService({"web": g}, n_slots=4, pack="fair", tick_budget=64)
+    for i in range(4):
+        svc.submit(BCRequest(rid=i, graph="web", eps=0.15,
+                             tenant=f"t{i % 2}"))
+    out = svc.run()
+    assert sorted(r.rid for r in out) == [0, 1, 2, 3]
+    assert all(r.converged for r in out)
+    assert set(svc._served) == {"t0", "t1"}
+
+
+# ------------------------------------------------- zero/tiny-budget guard
+@pytest.mark.parametrize("cap", [0, 1])
+def test_zero_and_one_sample_caps_retire_honestly(cap):
+    """Regression: a τ < 2 retirement used to report finite-garbage
+    halfwidths (τ clamped to 2 inside the CI math) and could even stop
+    "converged" on a loose ε with a single sample. Now: never converged,
+    halfwidths +inf, no NaNs, and the service neither crashes nor
+    hangs."""
+    g = _graph()
+    eps, delta = 0.3, 0.1
+    assert cap < hoeffding_budget(g.n, eps, delta)
+    svc = BCService({"web": g}, n_slots=1)
+    svc.submit(BCRequest(rid=0, graph="web", eps=eps, delta=delta,
+                         max_samples=cap))
+    out = svc.run(max_ticks=50)
+    assert not svc.exhausted and len(out) == 1
+    r = out[0]
+    assert r.n_samples == cap
+    assert not r.converged
+    assert np.isinf(r.halfwidth).all()
+    assert not np.isnan(r.lam).any()
+    # the per-request plan saw the degenerate cap too
+    assert r.plan.sample_budget == cap
+
+
+@pytest.mark.parametrize("cap", [0, 1])
+def test_zero_and_one_sample_caps_through_solve(cap):
+    from repro.bc import BCQuery, solve
+
+    g = _graph()
+    res = solve(g, BCQuery(mode="approx", eps=0.3, delta=0.1,
+                           max_samples=cap))
+    assert res.approx.n_samples == cap
+    assert not res.converged
+    assert np.isinf(res.approx.halfwidth).all()
+    assert not np.isnan(res.lam).any()
