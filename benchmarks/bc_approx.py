@@ -11,6 +11,12 @@ seconds. Reports
 * ``spearman``       — rank correlation of λ̂ vs λ over all vertices,
 * ``max_norm_err``   — max_v |λ̂ − λ| / (n·(n−2)), comparable to ε,
 * ``plan`` / ``mesh_epochs.*.plan`` — the executed ``BCPlan`` records,
+* ``backends``      — the self-calibrated dense-vs-COO race: the run
+  refits ``results/cost_calibration.json`` on its own graph, then times
+  pinned dense, pinned COO and planner-routed (``auto``) legs over a
+  fixed uniform sample budget, recording each executed plan next to its
+  ``measured_seconds`` (``tools/check_bench.py`` gates prediction drift
+  at 2× and that ``auto`` lands on COO),
 
 plus a mesh-vs-single-host *epoch* comparison (``mesh_epochs`` record):
 both paths run the same adaptive estimator — the mesh step returns fused
@@ -51,7 +57,7 @@ def bench_bc_approx(scale: int = 10, degree: int = 8, eps: float = 0.05,
                     delta: float = 0.1, k: int = 10, nb: int = 64,
                     rule: str = "normal", seed: int = 0) -> Dict:
     """One exact-vs-approx comparison; returns the BENCH record."""
-    from repro.bc import BCQuery, solve
+    from repro.bc import BCQuery, ExecutionConfig, solve
     from repro.bc import plan as bc_plan
     from repro.graphs.generators import from_spec
 
@@ -61,10 +67,12 @@ def bench_bc_approx(scale: int = 10, degree: int = 8, eps: float = 0.05,
     # backend/n_b/placement pinned (comparability with earlier BENCH
     # records, and fake mesh devices must not reroute the headline legs);
     # the plan's ``regime`` field still records the planner's unpinned
-    # dense-vs-COO opinion.
-    exact_q = BCQuery(mode="exact", n_b=nb, backend="dense")
+    # dense-vs-COO opinion. The dense-vs-COO wall-clock race itself is
+    # ``bench_backends`` below.
+    dense = ExecutionConfig(backend="dense")
+    exact_q = BCQuery(mode="exact", n_b=nb, execution=dense)
     approx_q = BCQuery(mode="approx", eps=eps, delta=delta, rule=rule,
-                       n_b=nb, backend="dense", topk=k, seed=seed)
+                       n_b=nb, execution=dense, topk=k, seed=seed)
     exact_pl = bc_plan(g, exact_q, n_devices=1)
     approx_pl = bc_plan(g, approx_q, n_devices=1)
 
@@ -110,6 +118,73 @@ def bench_bc_approx(scale: int = 10, degree: int = 8, eps: float = 0.05,
     return record
 
 
+def bench_backends(scale: int = 10, degree: int = 8, eps: float = 0.05,
+                   delta: float = 0.1, nb: int = 64, seed: int = 0) -> Dict:
+    """Dense-vs-COO executor race, planned with a fresh calibration.
+
+    The ISSUE-6 measurement loop, end to end: (1) refit the α-β step
+    constants on this benchmark's own graph (``repro.launch.calibrate``)
+    and persist them to ``results/cost_calibration.json`` — the planner's
+    ``"auto"`` calibration reloads the file mid-process via its
+    mtime-keyed cache, so every leg below plans with the rates just
+    measured (and future CLI runs inherit them); (2) run the same
+    fixed-budget uniform-sampling query once per pinned backend and once
+    unpinned (``auto`` — the calibrated regime routing), recording the
+    executed ``BCPlan`` *with* its measured wall-clock next to
+    ``predicted_seconds``. The budget is a fixed ``4·n_b`` samples
+    (uniform strategy → exactly 4 batches, no adaptive early stop), so
+    ``measured_seconds`` times exactly the work the plan priced —
+    ``tools/check_bench.py`` gates the prediction drift at 2× and
+    asserts the auto leg actually lights up the COO fast path.
+    """
+    from repro.bc import BCQuery, ExecutionConfig, solve
+    from repro.bc import plan as bc_plan
+    from repro.graphs.generators import from_spec
+    from repro.launch.calibrate import calibrate
+    from repro.spgemm.cost_model import save_calibration
+
+    g = from_spec("rmat", scale=scale, degree=degree, seed=seed)
+    g, _ = g.remove_isolated()
+
+    cal = calibrate(g, nb_pair=(max(nb // 4, 8), nb), reps=2,
+                    variants=(("dense", False), ("coo", False)))
+    cal_path = save_calibration(cal)
+
+    budget = 4 * nb
+    legs: Dict[str, Dict] = {}
+    for leg in ("dense", "coo", "auto"):
+        execution = ExecutionConfig(backend=None if leg == "auto" else leg)
+        q = BCQuery(mode="approx", eps=eps, delta=delta, rule="normal",
+                    n_b=nb, strategy="uniform", max_samples=budget,
+                    seed=seed, execution=execution)
+        pl = bc_plan(g, q, n_devices=1)
+        # jit warm-up (one batch) so the timed run is steady-state
+        solve(g, dataclasses.replace(q, max_samples=nb, seed=seed + 1),
+              plan=pl)
+        t0 = time.time()
+        out = solve(g, q, plan=pl)
+        dt = time.time() - t0
+        legs[leg] = {
+            "backend": out.plan.backend,
+            "calibrated": bool(out.plan.regime.get("calibrated")),
+            "n_samples": out.approx.n_samples,
+            "measured_seconds": dt,
+            "predicted_seconds": out.plan.predicted_seconds,
+            "prediction_ratio": out.plan.predicted_seconds / max(dt, 1e-9),
+            "plan": out.plan.to_json(),
+        }
+    return {
+        "n": g.n,
+        "m": g.m,
+        "sample_budget": budget,
+        "calibration_path": cal_path,
+        "calibration": cal.to_json(),
+        "coo_speedup": (legs["dense"]["measured_seconds"]
+                        / max(legs["coo"]["measured_seconds"], 1e-9)),
+        **legs,
+    }
+
+
 def _parse_mesh_dims(spec: str) -> Tuple[int, ...]:
     """Axis sizes of a ``DxM`` / ``PxDxM`` spec, jax-free.
 
@@ -148,7 +223,7 @@ def bench_mesh_epochs(scale: int = 10, degree: int = 8, eps: float = 0.05,
     import jax
 
     from repro.approx import hoeffding_budget
-    from repro.bc import BCQuery, solve
+    from repro.bc import BCQuery, ExecutionConfig, solve
     from repro.graphs.generators import from_spec
 
     g = from_spec("rmat", scale=scale, degree=degree, seed=seed)
@@ -165,7 +240,8 @@ def bench_mesh_epochs(scale: int = 10, degree: int = 8, eps: float = 0.05,
     mesh = jax.make_mesh(mesh_shape, names)
     budget = hoeffding_budget(g.n, eps, delta)
     base_q = BCQuery(mode="approx", eps=eps, delta=delta, rule=rule,
-                     n_b=nb, backend="dense", seed=seed)
+                     n_b=nb, execution=ExecutionConfig(backend="dense"),
+                     seed=seed)
 
     from repro.bc import plan as bc_plan
 
@@ -241,9 +317,14 @@ def main(argv=None) -> Dict:
             + os.environ.get("XLA_FLAGS", ""))
 
     scale = 8 if args.smoke else args.scale
+    # Calibrate first: the headline legs' regime records (and any
+    # unpinned routing) then price with the constants just measured.
+    backends = bench_backends(scale=scale, degree=args.degree, eps=args.eps,
+                              delta=args.delta, nb=args.nb, seed=args.seed)
     rec = bench_bc_approx(scale=scale, degree=args.degree, eps=args.eps,
                           delta=args.delta, k=args.k, nb=args.nb,
                           rule=args.rule, seed=args.seed)
+    rec["backends"] = backends
     rec["mesh_epochs"] = bench_mesh_epochs(
         scale=scale, degree=args.degree, eps=args.eps, delta=args.delta,
         nb=args.nb, rule=args.rule, seed=args.seed, mesh_shape=mesh_shape,
@@ -258,6 +339,18 @@ def main(argv=None) -> Dict:
           f"n_b={pl['n_b']} predicted {pl['predicted_seconds']:.3g}s")
     print(f"[bc_approx] exact {rec['seconds_exact']:.2f}s vs approx "
           f"{rec['seconds_approx']:.2f}s — speedup {rec['speedup']:.2f}x")
+    bk = rec["backends"]
+    print(f"[bc_approx] backends ({bk['sample_budget']} uniform samples): "
+          f"dense {bk['dense']['measured_seconds']:.2f}s vs coo "
+          f"{bk['coo']['measured_seconds']:.2f}s — coo speedup "
+          f"{bk['coo_speedup']:.2f}x; auto routed to "
+          f"backend={bk['auto']['backend']}"
+          + (" [calibrated]" if bk["auto"]["calibrated"] else ""))
+    for leg in ("dense", "coo", "auto"):
+        print(f"[bc_approx]   {leg}: predicted "
+              f"{bk[leg]['predicted_seconds']:.3g}s / measured "
+              f"{bk[leg]['measured_seconds']:.3g}s "
+              f"(ratio {bk[leg]['prediction_ratio']:.2f})")
     print(f"[bc_approx] top-{rec['k']} precision {rec['topk_precision']:.2f} "
           f"spearman {rec['spearman']:.3f} "
           f"max_norm_err {rec['max_norm_err']:.4f} (eps {rec['eps']})")

@@ -204,7 +204,8 @@ def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
                         mem_bytes: float = 4 * 2 ** 30,
                         budget_hint: Optional[int] = None,
                         candidates: Tuple[int, ...] = (16, 32, 64, 128, 256),
-                        dispatch_overhead_s: float = 5e-4) -> int:
+                        dispatch_overhead_s: float = 5e-4,
+                        calibration=None) -> int:
     """Pick the sample-batch size n_b from the SpGEMM cost model.
 
     Scores each candidate with per-iteration relax seconds from
@@ -222,6 +223,11 @@ def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
     distributed moments step (whose P(model, data)-sharded adjacency
     divides the per-device footprint by p; ``prepare_mesh_batch_step``
     then rounds the chosen n_b up to a mesh-divisible count).
+
+    With a measured ``calibration`` (``spgemm.cost_model.Calibration``)
+    both the per-iteration seconds and the per-batch dispatch overhead
+    come from the fitted α-β constants instead of the analytic TPU
+    model, so n_b tracks the host the run actually executes on.
     """
     from repro.spgemm.autotune import choose_bc_regime
 
@@ -234,9 +240,13 @@ def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
         # that keeps n_b picks stable whatever the batch-axis layout
         if adj_b + state_bytes(n, nb) > mem_bytes:
             continue
-        reg = choose_bc_regime(n, m_edges, nb, fill=0.5, p=p)
+        reg = choose_bc_regime(n, m_edges, nb, fill=0.5, p=p,
+                               calibration=calibration)
         step_s = min(reg["dense_s"], reg["coo_s"])
-        per_source = step_s + dispatch_overhead_s / nb
+        overhead = dispatch_overhead_s
+        if calibration is not None and calibration.has(backend):
+            overhead = calibration.overhead_seconds(backend)
+        per_source = step_s + overhead / nb
         if per_source < best_cost:
             best_nb, best_cost = nb, per_source
     return best_nb
@@ -279,15 +289,19 @@ def approx_bc(g: Graph, *, eps: float = 0.05, delta: float = 0.1,
     warnings.warn(
         "approx.driver.approx_bc is deprecated; use repro.bc.solve with "
         "BCQuery(mode='approx', ...)", DeprecationWarning, stacklevel=2)
-    from repro.bc import BCPlanner, BCQuery, solve
+    from repro.bc import BCPlanner, BCQuery, ExecutionConfig, solve
 
     # The old driver ignored ``backend`` on the mesh path (the
     # distributed step is dense-only); keep that lenience here rather
-    # than let the planner reject mesh + backend="coo".
+    # than let the planner reject mesh + backend="coo". The old default
+    # use_kernel=False is pinned explicitly — the shim must keep the
+    # historical behavior, not inherit the calibrated kernel verdict.
     query = BCQuery(mode="approx", eps=eps, delta=delta, strategy=strategy,
                     rule=rule, topk=topk, max_samples=max_samples, seed=seed,
-                    n_b=n_b, backend=None if mesh is not None else backend,
-                    use_kernel=use_kernel, block=block, iters=iters)
+                    n_b=n_b, iters=iters,
+                    execution=ExecutionConfig(
+                        backend=None if mesh is not None else backend,
+                        use_kernel=use_kernel, block=block))
     if mesh is None:
         # Historical contract: approx_bc without a mesh always ran single
         # host. Pin the plan so results stay identical on multi-device

@@ -41,8 +41,11 @@ thin ``DeprecationWarning`` shims delegating to ``solve``.
 from repro.approx.driver import (ApproxResult, LambdaEstimator,
                                  choose_sample_batch, stopping_check)
 from repro.approx.sampling import AdaptiveSampler, UniformSampler
-from repro.bc.executor import (BatchExecutor, MeshExecutor,
-                               SingleHostExecutor, build_executor)
+from repro.bc.config import Backend, ExecutionConfig, as_backend
+from repro.bc.executor import (BackendSpec, BatchExecutor, MeshExecutor,
+                               SingleHostExecutor, backend_spec,
+                               build_executor, register_backend,
+                               registered_backends)
 from repro.bc.fusion import (PACKS, BatchAssembler, FusedBatch,
                              order_demand, scatter)
 from repro.bc.planner import (BCPlan, BCPlanner, bucket_sizes,
@@ -52,6 +55,8 @@ from repro.bc.solve import BCResult, honest_converged, plan, solve
 
 __all__ = [
     "BCQuery", "BCPlan", "BCPlanner", "BCResult",
+    "Backend", "ExecutionConfig", "as_backend",
+    "BackendSpec", "register_backend", "backend_spec", "registered_backends",
     "BatchExecutor", "SingleHostExecutor", "MeshExecutor", "build_executor",
     "plan", "solve", "honest_converged",
     "BatchAssembler", "FusedBatch", "scatter", "order_demand", "PACKS",

@@ -32,11 +32,14 @@ which callers must use when sizing sample batches.
 """
 from __future__ import annotations
 
-from typing import Protocol, Tuple, runtime_checkable
+import dataclasses
+from typing import Any, Callable, Dict, Protocol, Tuple, Union, \
+    runtime_checkable
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.bc.config import Backend, as_backend
 from repro.bc.planner import BCPlan, bucket_sizes
 from repro.core.adjacency import coo_adj_from_graph, dense_adj_from_graph
 from repro.core.mfbc import (mfbc_batch, mfbc_batch_moments,
@@ -44,6 +47,63 @@ from repro.core.mfbc import (mfbc_batch, mfbc_batch_moments,
 from repro.graphs.formats import Graph
 
 Moments = Tuple[np.ndarray, np.ndarray, np.ndarray]  # (S1, S2, n_reach)
+
+
+# --- backend registry ------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """How one ``Backend`` plugs into the executor layer.
+
+    ``make_adjacency(g, plan)`` builds the device-resident adjacency the
+    single-host relax steps dispatch on (``core.adjacency.DenseAdj`` /
+    ``CooAdj`` — the jitted ``core.mfbc`` batch functions branch on its
+    type, so one factory is the whole backend-specific surface here);
+    ``placements`` lists where the backend can run (only DENSE has a
+    distributed Theorem 5.1 step); ``supports_kernel`` gates the Pallas
+    kernel route (COO's segment ops have no kernel variant).
+    """
+
+    backend: Backend
+    make_adjacency: Callable[[Graph, BCPlan], Any]
+    placements: Tuple[str, ...] = ("single_host",)
+    supports_kernel: bool = False
+
+
+_BACKEND_REGISTRY: Dict[Backend, BackendSpec] = {}
+
+
+def register_backend(spec: BackendSpec) -> BackendSpec:
+    """Register (or replace) the executor-layer spec for a backend."""
+    _BACKEND_REGISTRY[spec.backend] = spec
+    return spec
+
+
+def backend_spec(backend: Union[Backend, str]) -> BackendSpec:
+    """Resolve a backend (enum or legacy string) to its registered spec."""
+    be = as_backend(backend)
+    try:
+        return _BACKEND_REGISTRY[be]
+    except KeyError:
+        raise ValueError(f"no executor registered for backend "
+                         f"{be.value!r}") from None
+
+
+def registered_backends() -> Tuple[Backend, ...]:
+    return tuple(_BACKEND_REGISTRY)
+
+
+register_backend(BackendSpec(
+    backend=Backend.DENSE,
+    make_adjacency=lambda g, plan: dense_adj_from_graph(
+        g, block=plan.block, use_kernel=plan.use_kernel),
+    placements=("single_host", "mesh"),
+    supports_kernel=True))
+
+register_backend(BackendSpec(
+    backend=Backend.COO,
+    make_adjacency=lambda g, plan: coo_adj_from_graph(g),
+    placements=("single_host",)))
 
 
 @runtime_checkable
@@ -140,36 +200,31 @@ def _slot_bucket(n_slots: int) -> int:
     return b
 
 
-class SingleHostExecutor:
-    """One-device moments step (dense blocked or COO segment-op relax)."""
+class _ExecutorBase:
+    """Shared padding/bucketing half of every ``BatchExecutor``.
 
-    def __init__(self, g: Graph, plan: BCPlan):
-        self.plan = plan
-        self.n_b = plan.n_b
-        self.buckets = plan.buckets or bucket_sizes(plan.n_b)
-        if plan.backend == "dense":
-            self._adj = dense_adj_from_graph(g, block=plan.block,
-                                             use_kernel=plan.use_kernel)
-        elif plan.backend == "coo":
-            self._adj = coo_adj_from_graph(g)
-        else:
-            raise ValueError(f"unknown backend {plan.backend!r}")
+    Subclasses set ``plan`` / ``n_b`` / ``buckets`` in ``__init__`` and
+    implement the three raw compute hooks; the base owns the shape
+    contract (exact-``n_b`` padding for ``step``/``step_sum``, bucket +
+    slot-dim padding for ``step_segmented``) so both placements — and
+    any future backend — pad identically and the fused-vs-unfused
+    bitwise-parity property cannot drift between implementations.
+    """
+
+    plan: BCPlan
+    n_b: int
+    buckets: Tuple[int, ...]
 
     def bucket_for(self, k: int) -> int:
         return _bucket_for(k, self.buckets, self.n_b)
 
     def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
         src, val = _pad_batch(sources, valid, self.n_b)
-        s1, s2, nr = mfbc_batch_moments(self._adj, jnp.asarray(src),
-                                        jnp.asarray(val))
-        return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
-                np.asarray(nr))
+        return self._moments(src, val)
 
     def step_sum(self, sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
         src, val = _pad_batch(sources, valid, self.n_b)
-        lam_b, _, _ = mfbc_batch(self._adj, jnp.asarray(src),
-                                 jnp.asarray(val))
-        return np.asarray(lam_b, np.float64)
+        return self._sum(src, val)
 
     def step_segmented(self, sources: np.ndarray, valid: np.ndarray,
                        slot_ids: np.ndarray, n_slots: int) -> Moments:
@@ -177,15 +232,55 @@ class SingleHostExecutor:
         n_seg = _slot_bucket(n_slots)  # pad the slot dim too (jit-static)
         src, val, sid = _pad_segmented(sources, valid, slot_ids, bucket,
                                        n_seg)
+        s1, s2, nr = self._segmented(src, val, sid, n_seg, bucket)
+        return s1[:n_slots], s2[:n_slots], nr[:n_slots]
+
+    # -- compute hooks (padded inputs, full padded outputs) -------------
+    def _moments(self, src, val) -> Moments:
+        raise NotImplementedError
+
+    def _sum(self, src, val) -> np.ndarray:
+        raise NotImplementedError
+
+    def _segmented(self, src, val, sid, n_seg: int, bucket: int) -> Moments:
+        raise NotImplementedError
+
+
+class SingleHostExecutor(_ExecutorBase):
+    """One-device moments step (dense blocked or COO segment-op relax).
+
+    The adjacency comes from the plan's backend via the registry
+    (``backend_spec``); the jitted ``core.mfbc`` batch functions
+    dispatch on its type, so dense and COO share every line above the
+    relax.
+    """
+
+    def __init__(self, g: Graph, plan: BCPlan):
+        self.plan = plan
+        self.n_b = plan.n_b
+        self.buckets = plan.buckets or bucket_sizes(plan.n_b)
+        self._adj = backend_spec(plan.backend).make_adjacency(g, plan)
+
+    def _moments(self, src, val) -> Moments:
+        s1, s2, nr = mfbc_batch_moments(self._adj, jnp.asarray(src),
+                                        jnp.asarray(val))
+        return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
+                np.asarray(nr))
+
+    def _sum(self, src, val) -> np.ndarray:
+        lam_b, _, _ = mfbc_batch(self._adj, jnp.asarray(src),
+                                 jnp.asarray(val))
+        return np.asarray(lam_b, np.float64)
+
+    def _segmented(self, src, val, sid, n_seg: int, bucket: int) -> Moments:
         s1, s2, nr = mfbc_batch_moments_segmented(
             self._adj, jnp.asarray(src), jnp.asarray(val), jnp.asarray(sid),
             n_slots=n_seg)
-        return (np.asarray(s1, np.float64)[:n_slots],
-                np.asarray(s2, np.float64)[:n_slots],
-                np.asarray(nr)[:n_slots])
+        return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
+                np.asarray(nr))
 
 
-class MeshExecutor:
+class MeshExecutor(_ExecutorBase):
     """Distributed Theorem 5.1 moments step on a (pod, data, model) mesh.
 
     ``mesh=None`` builds the mesh the plan chose (``plan.mesh_axes``) from
@@ -237,30 +332,27 @@ class MeshExecutor:
                 (self._ctx.round_nb(pl.n_b), self.n_b)
         return self._ctx
 
-    def bucket_for(self, k: int) -> int:
-        return _bucket_for(k, self.buckets, self.n_b)
-
-    def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
-        src, val = _pad_batch(sources, valid, self.n_b)
+    def _moments(self, src, val) -> Moments:
         return self._context().run_moments(src, val, nb=self.n_b)
 
-    def step_sum(self, sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
-        src, val = _pad_batch(sources, valid, self.n_b)
+    def _sum(self, src, val) -> np.ndarray:
         return self._context().run_sum(src, val, nb=self.n_b)
 
-    def step_segmented(self, sources: np.ndarray, valid: np.ndarray,
-                       slot_ids: np.ndarray, n_slots: int) -> Moments:
-        bucket = self.bucket_for(np.asarray(sources).shape[0])
-        n_seg = _slot_bucket(n_slots)  # pad the slot dim too (jit-static)
-        src, val, sid = _pad_segmented(sources, valid, slot_ids, bucket,
-                                       n_seg)
-        s1, s2, nr = self._context().run_segmented(src, val, sid, n_seg,
-                                                   nb=bucket)
-        return s1[:n_slots], s2[:n_slots], nr[:n_slots]
+    def _segmented(self, src, val, sid, n_seg: int, bucket: int) -> Moments:
+        return self._context().run_segmented(src, val, sid, n_seg, nb=bucket)
 
 
 def build_executor(g: Graph, plan: BCPlan, *, mesh=None) -> BatchExecutor:
-    """Instantiate the executor a ``BCPlan`` calls for."""
+    """Instantiate the executor a ``BCPlan`` calls for.
+
+    The plan's backend must be registered (``register_backend``) and
+    must support the plan's placement — a mesh plan on a single-host-only
+    backend is a planner bug surfaced here, not a silent fallback.
+    """
+    spec = backend_spec(plan.backend)
     if plan.placement == "mesh" or mesh is not None:
+        if "mesh" not in spec.placements:
+            raise ValueError(f"backend {spec.backend.value!r} has no mesh "
+                             f"step (placements: {spec.placements})")
         return MeshExecutor(g, plan, mesh=mesh)
     return SingleHostExecutor(g, plan)

@@ -24,14 +24,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.approx.driver import (adjacency_bytes, choose_sample_batch,
                                  state_bytes)
 from repro.approx.sampling import hoeffding_budget
+from repro.bc.config import Backend, ExecutionConfig
 from repro.graphs.formats import Graph
 from repro.spgemm.autotune import choose_bc_regime
-from repro.spgemm.cost_model import DEFAULT, CostParams, best_replication
+from repro.spgemm.cost_model import (DEFAULT, Calibration, CostParams,
+                                     best_replication, load_calibration)
 
 import numpy as np
 
@@ -76,7 +79,7 @@ class BCPlan:
 
     mode: str  # "exact" | "approx"
     placement: str  # "single_host" | "mesh"
-    backend: str  # "dense" | "coo"
+    backend: str  # "dense" | "coo" (flat mirror of execution.backend)
     use_kernel: bool
     n_b: int
     block: int
@@ -93,6 +96,10 @@ class BCPlan:
     regime: Dict[str, float]  # choose_bc_regime output (dense vs COO)
     buckets: Tuple[int, ...] = ()  # padded batch shapes the executor serves
     tier: Optional[str] = None  # latency tier of the request this plan sizes
+    # fully resolved typed execution choice (backend/use_kernel/placement
+    # above are its flat mirrors, kept for JSON and legacy readers)
+    execution: Optional[ExecutionConfig] = None
+    notes: Tuple[str, ...] = ()  # planner diagnostics (e.g. forced fallbacks)
 
     def axes_dict(self) -> Optional[Dict[str, int]]:
         return dict(self.mesh_axes) if self.mesh_axes is not None else None
@@ -102,6 +109,10 @@ class BCPlan:
         d = dataclasses.asdict(self)
         d["mesh_axes"] = self.axes_dict()
         d["buckets"] = list(self.buckets)
+        d["backend"] = str(getattr(self.backend, "value", self.backend))
+        d["execution"] = (self.execution.to_json()
+                          if self.execution is not None else None)
+        d["notes"] = list(self.notes)
         return d
 
     def summary(self) -> str:
@@ -136,12 +147,29 @@ def _clamped_replication(n: int, m: int, p: int, mem_bytes: float) -> int:
 
 
 class BCPlanner:
-    """Chooses backend, batch size and placement for a ``BCQuery``."""
+    """Chooses backend, batch size and placement for a ``BCQuery``.
+
+    ``calibration`` controls the measured step-time constants the regime
+    choice and the ``predicted_*`` fields price with: the default
+    ``"auto"`` loads ``results/cost_calibration.json`` (or
+    ``$REPRO_BC_CALIBRATION``) fresh per plan — a benchmark that
+    recalibrates mid-process is picked up via the mtime-keyed cache —
+    while an explicit ``Calibration`` (tests, what-if planning) or
+    ``None`` (force the analytic model) pins it.
+    """
 
     def __init__(self, *, mem_bytes: float = 4 * 2 ** 30,
-                 params: CostParams = DEFAULT):
+                 params: CostParams = DEFAULT,
+                 calibration: Union[str, Calibration, None] = "auto"):
         self.mem_bytes = float(mem_bytes)
         self.params = params
+        self._calibration = calibration
+
+    @property
+    def calibration(self) -> Optional[Calibration]:
+        if isinstance(self._calibration, str):  # "auto"
+            return load_calibration()
+        return self._calibration
 
     # ------------------------------------------------------------------
     def plan(self, g: Graph, query, *, mesh=None,
@@ -153,7 +181,8 @@ class BCPlanner:
         jax device state (tests, dry runs). Default: ``len(jax.devices())``.
         """
         n, m = g.n, g.m
-        placement, axes = self._placement(n, m, query, mesh, n_devices)
+        pins = query.execution or ExecutionConfig()
+        placement, axes, notes = self._placement(n, m, query, mesh, n_devices)
         p = 1
         if axes is not None:
             for _, s in axes:
@@ -170,28 +199,45 @@ class BCPlanner:
         cap = (1 << 62) if query.max_samples is None else query.max_samples
         budget = n if query.mode == "exact" else min(hint, cap)
 
-        backend = query.backend
+        cal = self.calibration
+        backend = pins.backend
         if placement == "mesh":
             # the distributed step is dense-adjacency only
-            backend = "dense" if backend is None else backend
-            if backend != "dense":
+            backend = Backend.DENSE if backend is None else backend
+            if backend != Backend.DENSE:
                 raise ValueError(f"mesh placement supports only the dense "
-                                 f"backend, got {backend!r}")
+                                 f"backend, got {backend.value!r}")
         elif backend is None:
             # Resolve the regime *before* sizing n_b: on graphs whose
             # dense adjacency busts the memory budget, sizing against the
             # dense model would reject every candidate and collapse n_b
             # to the minimum even though the COO executor has room.
-            backend = choose_bc_regime(n, m, query.n_b or 64, fill=0.5,
-                                       p=p)["regime"]
+            backend = Backend(choose_bc_regime(n, m, query.n_b or 64,
+                                               fill=0.5, p=p,
+                                               calibration=cal)["regime"])
         n_b = query.n_b or min(n, choose_sample_batch(
-            n, m, p=p, backend=backend,
-            mem_bytes=self.mem_bytes, budget_hint=hint))
-        regime = choose_bc_regime(n, m, n_b, fill=0.5, p=p)
+            n, m, p=p, backend=backend.value,
+            mem_bytes=self.mem_bytes, budget_hint=hint,
+            calibration=cal))
+        regime = choose_bc_regime(n, m, n_b, fill=0.5, p=p, calibration=cal)
+
+        # Kernel flag: an explicit pin wins; otherwise light up the Pallas
+        # dense kernels only where the calibration *measured* them faster
+        # than the jnp fallback (True on the TPU target, False on CPU,
+        # where the kernel runs in interpret mode).
+        use_kernel = pins.use_kernel
+        if use_kernel is None:
+            use_kernel = bool(backend == Backend.DENSE and cal is not None
+                              and cal.kernel_pays())
 
         # -- predictions (α-β cost layer, per device) -------------------
         est_iters = self._est_iters(n, weighted, query.iters)
-        step_s = regime["dense_s"] if backend == "dense" else regime["coo_s"]
+        if backend == Backend.DENSE:
+            step_s = (regime["dense_kernel_s"]
+                      if use_kernel and "dense_kernel_s" in regime
+                      else regime["dense_s"])
+        else:
+            step_s = regime["coo_s"]
         n_batches = -(-budget // n_b)
         state_nnz = _WORD * n_b * n  # one (n_b, n) f32 state matrix
         if placement == "mesh":
@@ -203,39 +249,67 @@ class BCPlanner:
         # MFBF + MFBr ≈ 2 sweeps of est_iters relaxations per batch
         iters_total = 2 * est_iters * n_batches
         comm_bytes = comm_per_iter * iters_total
-        seconds = (step_s * iters_total
+        # Calibrated fixed per-batch overhead (one device call per batch):
+        # dispatch + host sync, the α of the measured α-β fit.
+        overhead_s = (cal.overhead_seconds(backend, use_kernel=use_kernel)
+                      if cal is not None
+                      and cal.has(backend, use_kernel=use_kernel) else 0.0)
+        seconds = (step_s * iters_total + overhead_s * n_batches
                    + self.params.cost(msgs=3.0 * iters_total, bytes_=comm_bytes))
         mem = self._mem_bytes(n, m, n_b, backend, placement, axes, p)
 
+        execution = ExecutionConfig(backend=backend,
+                                    use_kernel=bool(use_kernel),
+                                    placement=placement, block=pins.block)
         return BCPlan(
-            mode=query.mode, placement=placement, backend=backend,
-            use_kernel=query.use_kernel, n_b=int(n_b), block=query.block,
+            mode=query.mode, placement=placement, backend=backend.value,
+            use_kernel=bool(use_kernel), n_b=int(n_b), block=pins.block,
             iters=query.iters, n_devices=p, mesh_axes=axes,
             sample_budget=int(budget), n_batches=int(n_batches),
             est_iters=int(est_iters), predicted_step_seconds=float(step_s),
             predicted_comm_bytes=float(comm_bytes),
             predicted_seconds=float(seconds), predicted_mem_bytes=float(mem),
             regime=regime, buckets=bucket_sizes(int(n_b)),
-            tier=query.tier)
+            tier=query.tier, execution=execution, notes=tuple(notes))
 
     # ------------------------------------------------------------------
     def _placement(self, n: int, m: int, query, mesh,
                    n_devices: Optional[int]):
+        notes: List[str] = []
+        pins = query.execution or ExecutionConfig()
         if mesh is not None:
             axes = tuple(zip(mesh.axis_names, (int(s) for s in
                                                mesh.devices.shape)))
-            return "mesh", axes
+            return "mesh", axes, notes
         if n_devices is None:
             import jax
 
             n_devices = len(jax.devices())
-        # A pinned COO backend has no distributed step — stay on one host.
-        if n_devices <= 1 or query.backend == "coo":
-            return "single_host", None
+        if pins.placement == "single_host":
+            return "single_host", None, notes
+        # A pinned COO backend has no distributed step — stay on one host,
+        # but never silently: the caller asked for a topology the backend
+        # cannot use, so the fallback is warned and carried on plan.notes.
+        if pins.backend == Backend.COO:
+            if pins.placement == "mesh":
+                raise ValueError("mesh placement supports only the dense "
+                                 "backend; the COO step is single-host only")
+            if n_devices > 1:
+                note = (f"pinned backend 'coo' has no distributed step: "
+                        f"falling back to single_host placement despite "
+                        f"{n_devices} visible devices")
+                notes.append(note)
+                warnings.warn(note, UserWarning, stacklevel=3)
+            return "single_host", None, notes
+        if n_devices <= 1:
+            if pins.placement == "mesh":
+                raise ValueError("mesh placement pinned but only one "
+                                 "device is visible")
+            return "single_host", None, notes
         c = _clamped_replication(n, m, n_devices, self.mem_bytes)
         data, model = _near_square(n_devices // c)
         axes = (("pod", c),) if c > 1 else ()
-        return "mesh", axes + (("data", data), ("model", model))
+        return "mesh", axes + (("data", data), ("model", model)), notes
 
     @staticmethod
     def _est_iters(n: int, weighted: bool, iters: int) -> int:
@@ -266,6 +340,7 @@ def plan_for_request(g: Graph, *, eps: float, delta: float,
                      rule: str = "normal", topk: Optional[int] = None,
                      max_samples: Optional[int] = None, seed: int = 0,
                      tier: Optional[str] = None,
+                     execution: Optional[ExecutionConfig] = None,
                      backend: Optional[str] = None, iters: int = 0,
                      mesh=None, n_devices: Optional[int] = None,
                      planner: Optional[BCPlanner] = None) -> BCPlan:
@@ -286,11 +361,23 @@ def plan_for_request(g: Graph, *, eps: float, delta: float,
     it does not change the configuration search, but it is recorded in
     the JSON ``BCPlan`` so benchmark artifacts and ``BCResponse.plan``
     carry the QoS class each plan was sized for.
+
+    ``execution`` pins part of the typed execution choice
+    (``repro.bc.ExecutionConfig``); ``backend=`` is the legacy string
+    shim for its ``backend`` field (DeprecationWarning, same result).
     """
     from repro.bc.query import BCQuery
 
+    if backend is not None:
+        warnings.warn("plan_for_request(backend=...) is deprecated; pass "
+                      "execution=ExecutionConfig(backend=...) instead",
+                      DeprecationWarning, stacklevel=2)
+        if execution is not None and execution.backend not in (None, backend):
+            raise ValueError("plan_for_request got both execution= and a "
+                             "conflicting legacy backend=")
+        execution = (execution or ExecutionConfig()).resolve(backend=backend)
     q = BCQuery(mode="approx", eps=eps, delta=delta, rule=rule, topk=topk,
                 max_samples=max_samples, seed=seed, tier=tier,
-                backend=backend, iters=iters)
+                execution=execution, iters=iters)
     return (planner or _REQUEST_PLANNER).plan(g, q, mesh=mesh,
                                               n_devices=n_devices)

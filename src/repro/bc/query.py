@@ -13,22 +13,30 @@ layers (the §6.2 "automatic configuration search" made first-class):
   slot-tagged ``step_segmented`` fused variant the serving stack packs
   many queries into).
 
-A ``BCQuery`` carries *optional overrides* (``n_b``, ``backend``,
-``use_kernel``) for callers that want to pin part of the configuration —
-``None``/default means "let the planner decide". Serving requests reach
-this layer through ``repro.bc.plan_for_request``, which builds the
-equivalent approx query from one request's (ε, δ) so per-query batch
-sizing flows through the same planner as every other entry point.
+A ``BCQuery`` carries *optional overrides* (``n_b`` and a typed
+``execution: ExecutionConfig``) for callers that want to pin part of the
+configuration — ``None``/default means "let the planner decide" (backend
+from the calibrated dense-vs-COO regime model, kernel flag from the
+measured kernel-vs-fallback verdict, placement from the topology). The
+pre-``ExecutionConfig`` stringly-typed kwargs (``backend=``,
+``use_kernel=``, ``block=``) still work as thin deprecation shims with
+identical results. Serving requests reach this layer through
+``repro.bc.plan_for_request``, which builds the equivalent approx query
+from one request's (ε, δ) so per-query batch sizing flows through the
+same planner as every other entry point.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
+
+from repro.bc.config import Backend, ExecutionConfig
 
 MODES = ("exact", "approx")
 RULES = ("bernstein", "normal")
 STRATEGIES = ("adaptive", "uniform")
-BACKENDS = ("dense", "coo")
+BACKENDS = tuple(b.value for b in Backend)
 
 # Latency tiers, the QoS vocabulary shared by the whole serving stack:
 # ``serve.BCRequest.priority`` names one, ``plan_for_request`` records it
@@ -65,9 +73,13 @@ class BCQuery:
     weighted: Optional[bool] = None  # None = infer from the graph
     # -- planner overrides (None / 0 / False = planner decides) ---------
     n_b: Optional[int] = None
+    execution: Optional[ExecutionConfig] = None  # typed execution pins
+    # legacy execution kwargs — deprecation shims for the pre-
+    # ExecutionConfig API; after __post_init__ they mirror `execution`
+    # so old readers (`query.backend`, `query.block`) keep working.
     backend: Optional[str] = None  # "dense" | "coo"
-    use_kernel: bool = False
-    block: int = 512
+    use_kernel: Optional[bool] = None
+    block: Optional[int] = None
     iters: int = 0  # static sweep bound for mesh executors (0 = graph size)
 
     def __post_init__(self) -> None:
@@ -78,9 +90,7 @@ class BCQuery:
         if self.strategy not in STRATEGIES:
             raise ValueError(f"strategy must be one of {STRATEGIES}, "
                              f"got {self.strategy!r}")
-        if self.backend is not None and self.backend not in BACKENDS:
-            raise ValueError(f"backend must be None or one of {BACKENDS}, "
-                             f"got {self.backend!r}")
+        self._resolve_execution()
         if self.tier is not None and self.tier not in TIERS:
             raise ValueError(f"tier must be None or one of {TIERS}, "
                              f"got {self.tier!r}")
@@ -88,3 +98,39 @@ class BCQuery:
                                           and 0.0 < self.delta < 1.0):
             raise ValueError(f"approx mode needs eps, delta in (0, 1), got "
                              f"eps={self.eps} delta={self.delta}")
+
+    def _resolve_execution(self) -> None:
+        """Normalize the legacy (backend, use_kernel, block) kwargs and the
+        typed ``execution`` into one ``ExecutionConfig``, then mirror it
+        back onto the legacy fields.
+
+        ``dataclasses.replace`` re-passes the mirrored legacy fields next
+        to ``execution``; that round trip is silent — only a *conflicting*
+        combination errors, and only a legacy kwarg used *instead of*
+        ``execution`` warns.
+        """
+        exec_ = self.execution
+        legacy_used = (self.backend is not None or self.use_kernel is not None
+                       or self.block is not None)
+        if exec_ is None:
+            if legacy_used:
+                warnings.warn(
+                    "BCQuery(backend=, use_kernel=, block=) is deprecated; "
+                    "pass execution=ExecutionConfig(...) instead "
+                    "(repro.bc.ExecutionConfig)",
+                    DeprecationWarning, stacklevel=4)
+            exec_ = ExecutionConfig(
+                backend=self.backend, use_kernel=self.use_kernel,
+                block=self.block if self.block is not None else 512)
+        elif legacy_used:
+            mirrors = ((self.backend, exec_.backend),
+                       (self.use_kernel, exec_.use_kernel),
+                       (self.block, exec_.block))
+            if any(v is not None and v != e for v, e in mirrors):
+                raise ValueError(
+                    "BCQuery got both execution= and conflicting legacy "
+                    "backend/use_kernel/block kwargs; pass execution= only")
+        object.__setattr__(self, "execution", exec_)
+        object.__setattr__(self, "backend", exec_.backend)
+        object.__setattr__(self, "use_kernel", exec_.use_kernel)
+        object.__setattr__(self, "block", exec_.block)

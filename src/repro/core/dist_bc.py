@@ -425,10 +425,24 @@ class MeshBCContext:
     """
 
     def __init__(self, g, mesh: Mesh, *, iters: int = 0,
-                 use_kernel: bool = False, block: int = 512):
+                 use_kernel: bool = False, block: int = 512,
+                 execution=None):
         import numpy as np
 
         from repro.graphs.formats import coo_to_dense
+
+        # Duck-typed backend-dispatch config (repro.bc.ExecutionConfig):
+        # the core layer never imports the solver facade, it just reads
+        # the three relax-step fields. The mesh step is dense-only.
+        if execution is not None:
+            backend = getattr(execution, "backend", None)
+            if backend is not None and str(getattr(backend, "value",
+                                                   backend)) != "dense":
+                raise ValueError("MeshBCContext supports only the dense "
+                                 "backend")
+            if execution.use_kernel is not None:
+                use_kernel = bool(execution.use_kernel)
+            block = int(execution.block)
 
         axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         self.mesh = mesh
@@ -583,8 +597,9 @@ def dist_mfbc(g, mesh: Mesh, *, nb: int, iters: int = 0,
         "core.dist_bc.dist_mfbc is deprecated; use repro.bc.solve with "
         "BCQuery(mode='exact', ...) and a mesh", DeprecationWarning,
         stacklevel=2)
-    from repro.bc import BCQuery, solve
+    from repro.bc import BCQuery, ExecutionConfig, solve
 
     query = BCQuery(mode="exact", n_b=nb, iters=iters,
-                    use_kernel=use_kernel, block=block)
+                    execution=ExecutionConfig(use_kernel=use_kernel,
+                                              block=block))
     return solve(g, query, mesh=mesh).lam

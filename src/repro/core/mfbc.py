@@ -112,7 +112,7 @@ def mfbc_batch_moments_segmented(adj, sources: jax.Array, valid: jax.Array,
 def mfbc(g: Graph, *, n_b: Optional[int] = None, backend: str = "dense",
          iterate: str = "while", max_iters: int = 0, block: int = 512,
          use_kernel: bool = False, sources: Optional[np.ndarray] = None,
-         progress_cb=None) -> np.ndarray:
+         progress_cb=None, execution=None) -> np.ndarray:
     """Full betweenness centrality of a host graph.
 
     Args:
@@ -125,6 +125,11 @@ def mfbc(g: Graph, *, n_b: Optional[int] = None, backend: str = "dense",
       sources: optionally restrict to these sources (approximate BC).
       progress_cb: optional callback(batch_idx, n_batches, lam_partial)
         — the checkpoint hook.
+      execution: optional backend-dispatch config overriding ``backend``/
+        ``block``/``use_kernel``. Duck-typed (anything with those three
+        attributes, e.g. ``repro.bc.ExecutionConfig``) so the core layer
+        never imports the solver facade — ``repro.bc`` imports core, not
+        the reverse.
 
     Returns:
       λ: (n,) float64 centrality scores (ordered-pair convention, endpoints
@@ -133,6 +138,13 @@ def mfbc(g: Graph, *, n_b: Optional[int] = None, backend: str = "dense",
     n = g.n
     if n_b is None:
         n_b = min(n, 64)
+    if execution is not None:
+        if execution.backend is not None:
+            backend = str(getattr(execution.backend, "value",
+                                  execution.backend))
+        if execution.use_kernel is not None:
+            use_kernel = bool(execution.use_kernel)
+        block = int(execution.block)
     if backend == "dense":
         adj = dense_adj_from_graph(g, block=block, use_kernel=use_kernel)
     elif backend == "coo":

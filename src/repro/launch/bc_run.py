@@ -38,7 +38,7 @@ import time
 
 import numpy as np
 
-from repro.bc import BCQuery
+from repro.bc import BCQuery, ExecutionConfig
 from repro.bc import plan as bc_plan
 from repro.bc import solve as bc_solve
 from repro.core import brandes_bc
@@ -48,10 +48,14 @@ from repro.train import checkpoint as ckpt_lib
 
 
 def _query_from_args(args, mode: str, **kw) -> BCQuery:
-    backend = None if args.backend == "auto" else args.backend
-    return BCQuery(mode=mode, n_b=args.nb or None, backend=backend,
-                   use_kernel=args.use_kernel, seed=args.seed,
-                   iters=args.iters, **kw)
+    # CLI flags map onto the typed ExecutionConfig: "auto" / an absent
+    # --use-kernel leave the field None, so the planner resolves it from
+    # the calibrated regime model (and the measured kernel verdict).
+    execution = ExecutionConfig(
+        backend=None if args.backend == "auto" else args.backend,
+        use_kernel=True if args.use_kernel else None)
+    return BCQuery(mode=mode, n_b=args.nb or None, execution=execution,
+                   seed=args.seed, iters=args.iters, **kw)
 
 
 def run_approx(args, g):
@@ -81,7 +85,10 @@ def run_approx(args, g):
         pl = bc_plan(g, query, mesh=mesh)
     except ValueError as e:  # e.g. --mesh with --backend coo
         raise SystemExit(f"[bc] cannot plan this query: {e}")
-    print(f"[bc] {pl.summary()}")
+    print(f"[bc] {pl.summary()} execution={pl.execution.describe()}"
+          + (" [calibrated]" if pl.regime.get("calibrated") else ""))
+    for note in pl.notes:
+        print(f"[bc] note: {note}")
 
     def progress(epoch, tau, max_hw):
         print(f"[bc] epoch {epoch}: tau={tau} max_halfwidth={max_hw:.4f}")
@@ -184,7 +191,8 @@ def main(argv=None):
             print(f"[bc] resuming at batch {start_batch} (nb={ckpt_nb})")
 
     pl = bc_plan(g, query, n_devices=1)  # exact CLI sweep is single-host
-    print(f"[bc] {pl.summary()}")
+    print(f"[bc] {pl.summary()} execution={pl.execution.describe()}"
+          + (" [calibrated]" if pl.regime.get("calibrated") else ""))
     nb = pl.n_b
     total_batches = -(-g.n // nb)
 

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Perf hillclimbing driver (EXPERIMENTS.md §Perf).
 
 Three cells, chosen per the methodology (worst roofline fraction, most
@@ -16,9 +13,15 @@ collective-bound, most paper-representative):
 Each writes results/perf_iters/<name>.json with before/after terms.
 
 Usage: PYTHONPATH=src python -m repro.launch.perf_hillclimb --which all
+
+The 512-device fake topology is forced in ``main()`` (it must run
+before jax initializes); importing this module for its measurement
+scaffolding (``_compile_stats``, the sweeps) does NOT touch the device
+count — ``repro.launch.calibrate`` reuses the helpers in-process.
 """
 import argparse
 import json
+import os
 import time
 
 
@@ -209,6 +212,9 @@ def hillclimb_bc_blocks():
 
 
 def main():
+    # Must precede jax initialization; kept out of module scope so
+    # importing the scaffolding never mutates the process's devices.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all",
                     choices=["all", "gcn2d", "qwen3ep", "bcblock"])

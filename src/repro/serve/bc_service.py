@@ -66,14 +66,16 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.bc import (PACKS, TIER_DEADLINE_S, TIERS, AdaptiveSampler,
                       BatchAssembler, BatchExecutor, BCPlan, BCQuery,
-                      LambdaEstimator, build_executor, honest_converged,
-                      order_demand, plan_for_request, scatter)
+                      ExecutionConfig, LambdaEstimator, build_executor,
+                      honest_converged, order_demand, plan_for_request,
+                      scatter)
 from repro.bc import plan as bc_plan
 from repro.bc import stopping_check
 from repro.graphs.formats import Graph
@@ -189,7 +191,8 @@ class BCService:
     """
 
     def __init__(self, graphs: Dict[str, Graph], *, n_slots: int = 4,
-                 backend: str = "dense", mesh=None, iters: int = 0,
+                 execution: Optional[ExecutionConfig] = None,
+                 backend: Optional[str] = None, mesh=None, iters: int = 0,
                  fuse: bool = True, pack: str = "deadline",
                  tick_budget: Optional[int] = None):
         if pack not in PACKS:
@@ -197,8 +200,23 @@ class BCService:
         if tick_budget is not None and tick_budget <= 0:
             raise ValueError(f"tick_budget must be positive or None, "
                              f"got {tick_budget}")
+        if backend is not None:
+            # Legacy string shim (pre-ExecutionConfig API). The new
+            # default is execution=None — the planner picks the backend
+            # per graph from the calibrated regime model, so serving
+            # rides the COO fast path where it measures faster.
+            warnings.warn("BCService(backend=...) is deprecated; pass "
+                          "execution=ExecutionConfig(backend=...) instead",
+                          DeprecationWarning, stacklevel=2)
+            if execution is not None and execution.backend not in (None,
+                                                                   backend):
+                raise ValueError("BCService got both execution= and a "
+                                 "conflicting legacy backend=")
+            execution = (execution or ExecutionConfig()).resolve(
+                backend=backend)
         self.graphs = dict(graphs)
-        self.backend = backend
+        self.execution = execution
+        self.backend = execution.backend if execution is not None else None
         self.mesh = mesh
         self.iters = iters
         self.n_slots = n_slots
@@ -236,7 +254,7 @@ class BCService:
         happens in ``_plan_for_request`` on top."""
         if name not in self._executors:
             g = self.graphs[name]
-            pl = bc_plan(g, BCQuery(mode="approx", backend=self.backend,
+            pl = bc_plan(g, BCQuery(mode="approx", execution=self.execution,
                                     iters=self.iters),
                          mesh=self.mesh)
             self._executors[name] = build_executor(g, pl, mesh=self.mesh)
@@ -264,8 +282,8 @@ class BCService:
             self._request_plans[key] = plan_for_request(
                 self.graphs[req.graph], eps=req.eps, delta=req.delta,
                 rule=req.rule, max_samples=req.max_samples,
-                tier=req.priority, backend=self.backend, iters=self.iters,
-                mesh=self.mesh)
+                tier=req.priority, execution=self.execution,
+                iters=self.iters, mesh=self.mesh)
         return self._request_plans[key]
 
     def plan_for(self, name: str):

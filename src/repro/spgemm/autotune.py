@@ -179,7 +179,8 @@ def autotune(sizes: ProblemSizes, axes: Dict[str, int],
 
 def choose_bc_regime(n: int, m_edges: int, nb: int, fill: float,
                      *, vpu_ops: float = 3.9e12,
-                     hbm_bw: float = 819e9, p: int = 256) -> Dict[str, float]:
+                     hbm_bw: float = 819e9, p: int = 256,
+                     calibration=None) -> Dict[str, float]:
     """Dense-vs-COO relax regime choice (the paper's §7 observation that
     MFBC shines on dense frontiers, made quantitative for TPU).
 
@@ -187,15 +188,35 @@ def choose_bc_regime(n: int, m_edges: int, nb: int, fill: float,
     coo:   work = 4·nb·m·fill/p ops but gather/segment traffic
            ≈ 24 bytes per (frontier-entry × edge) touch, memory-bound.
 
+    With a measured ``calibration`` (``cost_model.Calibration``), the
+    analytic estimates are replaced by fitted per-relax seconds for
+    every measured variant — including the Pallas-kernel dense route
+    (``dense_kernel_s``) — and the result carries ``calibrated: True``.
+    Note the calibrated COO estimate is fill-independent: the real COO
+    relax processes the full padded edge list every iteration (no
+    frontier compaction), so ``fill`` only shapes the analytic fallback.
+
     Returns per-iteration second estimates and the winner; the driver
     switches per iteration as the frontier fills (fill = fraction of
     active frontier entries).
     """
-    dense_s = 4.0 * nb * n * n / (p * vpu_ops)
-    coo_touch = nb * fill * m_edges / p
-    coo_s = max(4.0 * coo_touch / vpu_ops, 24.0 * coo_touch / hbm_bw)
-    return {"dense_s": dense_s, "coo_s": coo_s,
-            "regime": "dense" if dense_s <= coo_s else "coo",
-            "crossover_fill": min(1.0, (n * n) / max(m_edges, 1)
-                                  * (4.0 / vpu_ops)
-                                  / max(4.0 / vpu_ops, 24.0 / hbm_bw))}
+    out: Dict[str, float] = {}
+    if calibration is not None and calibration.has("dense") \
+            and calibration.has("coo"):
+        dense_s = calibration.step_seconds("dense", n, m_edges, nb, p=p)
+        coo_s = calibration.step_seconds("coo", n, m_edges, nb, p=p)
+        if calibration.has("dense", use_kernel=True):
+            out["dense_kernel_s"] = calibration.step_seconds(
+                "dense", n, m_edges, nb, p=p, use_kernel=True)
+        out["calibrated"] = True
+    else:
+        dense_s = 4.0 * nb * n * n / (p * vpu_ops)
+        coo_touch = nb * fill * m_edges / p
+        coo_s = max(4.0 * coo_touch / vpu_ops, 24.0 * coo_touch / hbm_bw)
+        out["calibrated"] = False
+    out.update({"dense_s": dense_s, "coo_s": coo_s,
+                "regime": "dense" if dense_s <= coo_s else "coo",
+                "crossover_fill": min(1.0, (n * n) / max(m_edges, 1)
+                                      * (4.0 / vpu_ops)
+                                      / max(4.0 / vpu_ops, 24.0 / hbm_bw))})
+    return out

@@ -23,8 +23,10 @@ The same formulas drive the runtime autotuner (``repro.spgemm.autotune``)
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
-from typing import Dict, Iterable, List, Tuple
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
 
 # --- hardware constants (TPU v5e, per chip) -------------------------------
 V5E_PEAK_BF16_FLOPS = 197e12  # FLOP/s
@@ -186,6 +188,174 @@ def w_mfbc(n: int, m_edges: int, p: int, c: int, d: int, word: int = 8,
         "n_batches": n_batches,
         "memory_per_p": word * c * m_edges / p,
     }
+
+
+# --- measured step-time calibration ---------------------------------------
+#
+# The analytic per-relax estimates above price the TPU target from
+# first-principles hardware constants; on any real host (CPU CI, an
+# actual TPU slice, an emulator) they are off by orders of magnitude —
+# predicted 0.059s vs measured ~4.1s per run made every plan-based
+# admission and packing decision fiction. ``Calibration`` closes the
+# loop: ``repro.launch.calibrate`` measures warm batch-step times per
+# execution variant, fits the α-β pair (fixed per-device-call overhead
+# α, effective relax throughput 1/β) from two batch sizes, and persists
+# it to ``results/cost_calibration.json``; ``load_calibration`` is how
+# the planner and ``choose_bc_regime`` pick it up.
+
+#: Default on-disk location (override with $REPRO_BC_CALIBRATION).
+DEFAULT_CALIBRATION_PATH = "results/cost_calibration.json"
+CALIBRATION_VERSION = 1
+
+#: Execution variants the calibration prices (see ``variant_key``).
+STEP_VARIANTS = ("dense", "dense_kernel", "coo")
+
+
+def variant_key(backend: str, use_kernel: bool = False) -> str:
+    """Calibration table key for a (backend, kernel flag) pair."""
+    backend = str(getattr(backend, "value", backend))
+    if backend == "dense":
+        return "dense_kernel" if use_kernel else "dense"
+    return backend
+
+
+def relax_ops(backend: str, n: int, m_edges: int, nb: int,
+              *, p: int = 1, use_kernel: bool = False) -> float:
+    """Work units of ONE relax iteration of one batch, per device.
+
+    The unit the calibrated throughput is expressed in: dense relax
+    touches every (source, vertex²) candidate (``4·nb·n²/p`` min-plus +
+    tie updates, kernel or jnp fallback alike); the COO relax is
+    segment ops over the *full* padded edge list every iteration
+    (``4·nb·m/p`` — the implementation does not compact frontiers, so
+    work is fill-independent; the analytic model's ``fill`` knob only
+    applies to the uncalibrated estimate).
+    """
+    backend = str(getattr(backend, "value", backend))
+    if backend == "dense":
+        return 4.0 * nb * n * n / max(p, 1)
+    return 4.0 * nb * m_edges / max(p, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepRates:
+    """Fitted α-β constants for one execution variant.
+
+    ``seconds(batch) = overhead_s + relaxes · ops_per_relax / ops_per_s``
+    — ``overhead_s`` is the fixed per-device-call cost (dispatch, host
+    sync), ``ops_per_s`` the measured effective relax throughput.
+    """
+
+    ops_per_s: float
+    overhead_s: float = 0.0
+
+    def relax_seconds(self, ops: float) -> float:
+        return ops / max(self.ops_per_s, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured step-time constants, keyed by execution variant.
+
+    ``rates`` maps ``variant_key(backend, use_kernel)`` →
+    ``StepRates``; ``meta`` records where the numbers came from (jax
+    backend, graph shape, batch sizes, iteration model) so a stale
+    calibration is auditable. Missing variants fall back to the
+    analytic model at the call site.
+    """
+
+    rates: Dict[str, StepRates]
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def has(self, backend: str, use_kernel: bool = False) -> bool:
+        return variant_key(backend, use_kernel) in self.rates
+
+    def step_seconds(self, backend: str, n: int, m_edges: int, nb: int,
+                     *, p: int = 1, use_kernel: bool = False) -> float:
+        """Calibrated seconds of ONE relax iteration of one batch."""
+        r = self.rates[variant_key(backend, use_kernel)]
+        return r.relax_seconds(relax_ops(backend, n, m_edges, nb, p=p,
+                                         use_kernel=use_kernel))
+
+    def overhead_seconds(self, backend: str, use_kernel: bool = False
+                         ) -> float:
+        """Fixed per-batch (per device call) overhead of a variant."""
+        return self.rates[variant_key(backend, use_kernel)].overhead_s
+
+    def kernel_pays(self) -> bool:
+        """Measured verdict: does the Pallas dense kernel beat the jnp
+        fallback on this host? (False on CPU, where the kernel runs in
+        interpret mode; True on the TPU target.) Conservative when the
+        kernel variant was not measured."""
+        if "dense" not in self.rates or "dense_kernel" not in self.rates:
+            return False
+        return (self.rates["dense_kernel"].ops_per_s
+                > self.rates["dense"].ops_per_s)
+
+    def to_json(self) -> Dict:
+        return {
+            "version": CALIBRATION_VERSION,
+            "meta": dict(self.meta),
+            "rates": {k: {"ops_per_s": r.ops_per_s,
+                          "overhead_s": r.overhead_s}
+                      for k, r in self.rates.items()},
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "Calibration":
+        if d.get("version") != CALIBRATION_VERSION:
+            raise ValueError(f"unsupported calibration version "
+                             f"{d.get('version')!r}")
+        rates = {k: StepRates(ops_per_s=float(r["ops_per_s"]),
+                              overhead_s=float(r.get("overhead_s", 0.0)))
+                 for k, r in d.get("rates", {}).items()}
+        if not rates:
+            raise ValueError("calibration has no rates")
+        return cls(rates=rates, meta=dict(d.get("meta", {})))
+
+
+_CAL_CACHE: Dict[Tuple[str, float], Optional[Calibration]] = {}
+
+
+def calibration_path(path: Optional[str] = None) -> str:
+    return path or os.environ.get("REPRO_BC_CALIBRATION",
+                                  DEFAULT_CALIBRATION_PATH)
+
+
+def load_calibration(path: Optional[str] = None) -> Optional[Calibration]:
+    """Load the persisted calibration, or None when there is none.
+
+    Cached per (absolute path, mtime): a benchmark that recalibrates
+    and replans in one process sees the fresh numbers, while the
+    planner's per-plan lookups stay free. An unreadable or malformed
+    file is treated as "not calibrated" (the analytic model is always
+    a safe fallback), not an error.
+    """
+    p = os.path.abspath(calibration_path(path))
+    try:
+        mtime = os.path.getmtime(p)
+    except OSError:
+        return None
+    key = (p, mtime)
+    if key not in _CAL_CACHE:
+        _CAL_CACHE.clear()  # one live entry: old mtimes never return
+        try:
+            with open(p) as f:
+                _CAL_CACHE[key] = Calibration.from_json(json.load(f))
+        except (OSError, ValueError, KeyError, TypeError):
+            _CAL_CACHE[key] = None
+    return _CAL_CACHE[key]
+
+
+def save_calibration(cal: Calibration, path: Optional[str] = None) -> str:
+    """Persist a calibration (the measurement loop's last step)."""
+    p = calibration_path(path)
+    d = os.path.dirname(p)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(cal.to_json(), f, indent=1)
+    return p
 
 
 def best_replication(n: int, m_edges: int, p: int, mem_bytes: float,

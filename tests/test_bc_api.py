@@ -13,10 +13,17 @@ import sys
 import numpy as np
 import pytest
 
-from repro.bc import (BCPlanner, BCQuery, MeshExecutor, SingleHostExecutor,
-                      build_executor, plan, solve)
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic sweep, see tests/_hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.bc import (Backend, BCPlanner, BCQuery, ExecutionConfig,
+                      MeshExecutor, SingleHostExecutor, backend_spec,
+                      build_executor, plan, registered_backends, solve)
 from repro.core import brandes_bc
 from repro.graphs.generators import from_spec, ring_of_cliques
+from repro.spgemm.cost_model import Calibration, StepRates
 
 
 @pytest.fixture(scope="module")
@@ -59,14 +66,30 @@ def test_planner_mesh_on_eight_devices(small_graph):
 
 def test_planner_respects_overrides_and_budget(small_graph):
     g, _ = small_graph
-    pl = BCPlanner().plan(g, BCQuery(mode="approx", n_b=16, backend="coo"),
-                          n_devices=1)
+    pl = BCPlanner().plan(
+        g, BCQuery(mode="approx", n_b=16,
+                   execution=ExecutionConfig(backend="coo")),
+        n_devices=1)
     assert pl.n_b == 16 and pl.backend == "coo"
+    assert pl.execution.resolved and pl.execution.backend is Backend.COO
     # a pinned COO backend has no distributed step: auto-placement must
-    # stay on one host even with devices available
-    pl8 = BCPlanner().plan(g, BCQuery(mode="approx", backend="coo"),
-                           n_devices=8)
+    # stay on one host even with devices available — and never silently:
+    # the fallback is warned and carried on plan.notes
+    with pytest.warns(UserWarning, match="no distributed step"):
+        pl8 = BCPlanner().plan(
+            g, BCQuery(mode="approx",
+                       execution=ExecutionConfig(backend=Backend.COO)),
+            n_devices=8)
     assert pl8.placement == "single_host"
+    assert any("falling back to single_host" in n for n in pl8.notes)
+    assert pl8.to_json()["notes"] == list(pl8.notes)
+    # ... but an explicit mesh pin with COO is a hard error, not a fallback
+    with pytest.raises(ValueError, match="single-host only"):
+        BCPlanner().plan(
+            g, BCQuery(mode="approx",
+                       execution=ExecutionConfig(backend="coo",
+                                                 placement="mesh")),
+            n_devices=8)
     # exact budget is the full sweep; approx budget is the Hoeffding cap
     e = BCPlanner().plan(g, BCQuery(mode="exact"), n_devices=1)
     a = BCPlanner().plan(g, BCQuery(mode="approx", eps=0.1, delta=0.1,
@@ -93,8 +116,51 @@ def test_query_validation():
         BCQuery(mode="approx", eps=0.0)
     with pytest.raises(ValueError):
         BCQuery(rule="gaussian")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            BCQuery(backend="csr")
     with pytest.raises(ValueError):
-        BCQuery(backend="csr")
+        ExecutionConfig(backend="csr")
+    with pytest.raises(ValueError):
+        ExecutionConfig(placement="cluster")
+    with pytest.raises(ValueError, match="conflicting"):
+        BCQuery(execution=ExecutionConfig(backend="coo"), backend="dense")
+
+
+def test_legacy_kwargs_shim_matches_execution_config(small_graph):
+    """The stringly-typed (backend, use_kernel, block) kwargs warn and
+    resolve to the exact plan the typed ExecutionConfig produces."""
+    g, _ = small_graph
+    with pytest.warns(DeprecationWarning, match="ExecutionConfig"):
+        q_old = BCQuery(mode="approx", backend="coo", use_kernel=False,
+                        block=256)
+    q_new = BCQuery(mode="approx",
+                    execution=ExecutionConfig(backend="coo",
+                                              use_kernel=False, block=256))
+    assert q_old.execution == q_new.execution
+    assert q_old.backend is Backend.COO and q_old.block == 256
+    pl_old = BCPlanner().plan(g, q_old, n_devices=1)
+    pl_new = BCPlanner().plan(g, q_new, n_devices=1)
+    assert pl_old == pl_new
+    # round-trips (dataclasses.replace re-passes the mirrored fields
+    # next to execution=) stay silent
+    import dataclasses as _dc
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        q2 = _dc.replace(q_new, n_b=32)
+    assert q2.execution == q_new.execution and q2.n_b == 32
+
+
+def test_backend_registry():
+    assert set(registered_backends()) == {Backend.DENSE, Backend.COO}
+    assert backend_spec("dense").placements == ("single_host", "mesh")
+    assert backend_spec(Backend.COO).placements == ("single_host",)
+    assert backend_spec("dense").supports_kernel
+    assert not backend_spec("coo").supports_kernel
+    with pytest.raises(ValueError):
+        backend_spec("csr")
 
 
 # ------------------------------------------------------------- executors
@@ -228,8 +294,14 @@ def test_approx_bc_shim_warns_and_matches(small_graph):
     g, _ = small_graph
     from repro.approx import approx_bc
 
+    # the shim's historical defaults pin (dense, no kernel) — the ref
+    # must pin the same config, since an unpinned query is now free to
+    # route to the calibrated COO fast path
     ref = solve(g, BCQuery(mode="approx", eps=0.1, delta=0.1,
-                           rule="normal", seed=4)).approx
+                           rule="normal", seed=4,
+                           execution=ExecutionConfig(backend="dense",
+                                                     use_kernel=False))
+                ).approx
     with pytest.warns(DeprecationWarning, match="repro.bc.solve"):
         old = approx_bc(g, eps=0.1, delta=0.1, rule="normal", seed=4)
     np.testing.assert_array_equal(old.lam, ref.lam)
@@ -243,7 +315,9 @@ def test_dist_mfbc_shim_warns_and_matches(small_graph):
     from repro.core.dist_bc import dist_mfbc
 
     mesh = _mesh_1x1()
-    ref = solve(g, BCQuery(mode="exact", n_b=16, iters=32), mesh=mesh)
+    ref = solve(g, BCQuery(mode="exact", n_b=16, iters=32,
+                           execution=ExecutionConfig(use_kernel=False)),
+                mesh=mesh)
     with pytest.warns(DeprecationWarning, match="repro.bc.solve"):
         old = dist_mfbc(g, mesh, nb=16, iters=32)
     np.testing.assert_array_equal(old, ref.lam)
@@ -262,6 +336,132 @@ def test_service_exposes_plan(small_graph):
     assert len(out) == 1 and out[0].converged
     top_ref = set(np.argsort(ref)[::-1][:5].tolist())
     assert len(top_ref & set(out[0].topk)) >= 4
+
+
+# -------------------------------------------- calibrated backend routing
+def _coo_wins_calibration():
+    """Synthetic measured rates where COO is ~20× faster per relax and
+    the Pallas kernel loses to the jnp fallback (the CPU CI verdict)."""
+    return Calibration(rates={
+        "dense": StepRates(ops_per_s=4e9, overhead_s=0.0),
+        "dense_kernel": StepRates(ops_per_s=3e9, overhead_s=0.1),
+        "coo": StepRates(ops_per_s=3e9, overhead_s=0.05),
+    }, meta={"jax_backend": "test"})
+
+
+def test_calibrated_plan_routes_to_coo_backend():
+    """Regression for the hard-pinned dense path: a scale-10 R-MAT plan
+    whose calibrated regime record says COO must actually select the COO
+    backend (and record why)."""
+    g = from_spec("rmat", scale=10, degree=16, seed=7)
+    g, _ = g.remove_isolated()
+    planner = BCPlanner(calibration=_coo_wins_calibration())
+    pl = planner.plan(g, BCQuery(mode="approx"), n_devices=1)
+    assert pl.regime["calibrated"] is True
+    assert pl.regime["regime"] == "coo"
+    assert pl.backend == "coo"
+    assert pl.execution.backend is Backend.COO
+    assert pl.use_kernel is False  # kernel measured slower: stays off
+    assert pl.predicted_step_seconds == pytest.approx(pl.regime["coo_s"])
+
+
+def test_calibrated_kernel_verdict_lights_up_pallas():
+    """Where the calibration measured the Pallas dense kernel faster,
+    an unpinned dense plan resolves use_kernel=True; a pin still wins."""
+    cal = Calibration(rates={
+        # dense dominates COO; kernel beats the jnp fallback
+        "dense": StepRates(ops_per_s=4e9),
+        "dense_kernel": StepRates(ops_per_s=9e9),
+        "coo": StepRates(ops_per_s=1e6),
+    })
+    assert cal.kernel_pays()
+    g = from_spec("rmat", scale=6, degree=8, seed=5)
+    g, _ = g.remove_isolated()
+    planner = BCPlanner(calibration=cal)
+    pl = planner.plan(g, BCQuery(mode="approx"), n_devices=1)
+    assert pl.backend == "dense" and pl.use_kernel is True
+    assert pl.predicted_step_seconds == pytest.approx(
+        pl.regime["dense_kernel_s"])
+    pinned = planner.plan(
+        g, BCQuery(mode="approx",
+                   execution=ExecutionConfig(use_kernel=False)),
+        n_devices=1)
+    assert pinned.backend == "dense" and pinned.use_kernel is False
+
+
+# ------------------------------------------- COO vs dense executor parity
+@st.composite
+def rmat_graphs(draw):
+    scale = draw(st.integers(min_value=5, max_value=7))
+    degree = draw(st.integers(min_value=4, max_value=10))
+    seed = draw(st.integers(min_value=0, max_value=2 ** 31 - 1))
+    g = from_spec("rmat", scale=scale, degree=degree, seed=seed)
+    g, _ = g.remove_isolated()
+    return g
+
+
+@settings(max_examples=10, deadline=None)
+@given(rmat_graphs(), st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_coo_dense_executor_parity_on_random_rmat(g, batch_seed):
+    """The parity oracle at executor level: COO-backend step and
+    step_segmented moments must match the dense backend on random R-MAT
+    graphs to the documented tolerance (both reduce exact per-source
+    dependencies in float32; op order differs, so bitwise equality is
+    not guaranteed — rtol=1e-4/atol=1e-6, same as kernels/ref.py)."""
+    nb = 8
+    execs = {}
+    for be in ("dense", "coo"):
+        pl = BCPlanner(calibration=None).plan(
+            g, BCQuery(mode="approx", n_b=nb,
+                       execution=ExecutionConfig(backend=be)),
+            n_devices=1)
+        assert pl.backend == be
+        execs[be] = build_executor(g, pl)
+    rng = np.random.default_rng(batch_seed)
+    src = rng.integers(0, g.n, nb).astype(np.int32)
+    val = np.ones(nb, bool)
+    d1, d2, dn = execs["dense"].step(src, val)
+    c1, c2, cn = execs["coo"].step(src, val)
+    np.testing.assert_allclose(c1, d1, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(c2, d2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cn), np.asarray(dn))
+    # fused slotted variant: same tolerance, per slot
+    sid = np.sort(rng.integers(0, 2, nb)).astype(np.int32)
+    ds = execs["dense"].step_segmented(src, val, sid, 2)
+    cs = execs["coo"].step_segmented(src, val, sid, 2)
+    np.testing.assert_allclose(cs[0], ds[0], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(cs[1], ds[1], rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cs[2]), np.asarray(ds[2]))
+
+
+def test_fused_equals_unfused_per_backend(small_graph):
+    """The PR 4 bitwise fused-vs-unfused property, per backend: slot j of
+    a fused step_segmented equals an unfused one-slot step_segmented over
+    exactly slot j's rows (same segment-sum accumulation path → bitwise),
+    on BOTH executors' backends."""
+    g, _ = small_graph
+    rng = np.random.default_rng(3)
+    for be in ("dense", "coo"):
+        pl = BCPlanner(calibration=None).plan(
+            g, BCQuery(mode="approx", n_b=16,
+                       execution=ExecutionConfig(backend=be)),
+            n_devices=1)
+        ex = build_executor(g, pl)
+        src = rng.integers(0, g.n, 16).astype(np.int32)
+        val = np.ones(16, bool)
+        sid = np.repeat(np.arange(2, dtype=np.int32), 8)
+        s1, s2, nr = ex.step_segmented(src, val, sid, 2)
+        for slot in range(2):
+            rows = src[sid == slot]
+            u1, u2, un = ex.step_segmented(
+                rows, np.ones(rows.shape[0], bool),
+                np.zeros(rows.shape[0], np.int32), 1)
+            np.testing.assert_array_equal(np.asarray(s1)[slot],
+                                          np.asarray(u1)[0])
+            np.testing.assert_array_equal(np.asarray(s2)[slot],
+                                          np.asarray(u2)[0])
+            np.testing.assert_array_equal(np.asarray(nr)[slot],
+                                          np.asarray(un)[0])
 
 
 # ------------------------------------------------------------ multi-device

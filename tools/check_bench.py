@@ -7,7 +7,12 @@ serving legs) fails CI instead of producing a hollow artifact.
 
 * ``BENCH_approx.json`` — headline exact-vs-approx record with executed
   ``BCPlan``s (``plan``, ``plan_exact``) and the mesh-epochs comparison
-  with per-leg plans.
+  with per-leg plans. Plus the self-calibrated ``backends`` race: at
+  least one recorded plan must have *executed* on the COO backend, the
+  planner-routed ``auto`` leg must be calibrated and must not lose to
+  both pinned legs, COO must beat dense wall-clock, and every leg that
+  records a ``measured_seconds`` next to its plan must satisfy the
+  ISSUE-6 drift gate ``|predicted_seconds − measured| / measured ≤ 2``.
 * ``BENCH_serve.json`` — the fused-vs-unfused serving sweep: both legs
   present per concurrency level, positive throughput, every run carrying
   its executed per-request ``BCPlan``s (with the bucket sets), a fused
@@ -42,9 +47,58 @@ def _check_plan(plan: dict, where: str) -> list:
     return errors
 
 
+def _check_backends(bk) -> list:
+    """The calibrated COO fast-path gates (ISSUE 6 acceptance)."""
+    if not bk:
+        return ["approx: backends record missing (self-calibrated "
+                "dense-vs-COO race)"]
+    errors = []
+    legs = [l for l in ("dense", "coo", "auto") if l in bk]
+    for leg in ("dense", "coo", "auto"):
+        if leg not in bk:
+            errors.append(f"approx.backends: {leg} leg missing")
+    # (a) the COO fast path actually executed: >= 1 recorded plan ran
+    # with backend="coo" (the pinned COO leg and, on a calibrated CPU/TPU
+    # host, the auto-routed leg).
+    if not any(bk[l].get("plan", {}).get("backend") == "coo" for l in legs):
+        errors.append("approx.backends: no recorded plan executed with "
+                      "backend='coo'")
+    # (b) prediction drift: every executed plan recorded next to a
+    # measured wall-clock must be within 2x of it.
+    for leg in legs:
+        pred = bk[leg].get("predicted_seconds")
+        meas = bk[leg].get("measured_seconds")
+        where = f"approx.backends.{leg}"
+        errors += _check_plan(bk[leg].get("plan"), f"{where}.plan")
+        if not (pred and meas and meas > 0):
+            errors.append(f"{where}: predicted/measured seconds missing")
+        elif abs(pred - meas) / meas > 2.0:
+            errors.append(f"{where}: cost-model drift |{pred:.3g} - "
+                          f"{meas:.3g}| / {meas:.3g} > 2")
+    if errors:
+        return errors
+    # The routed leg must plan from measured constants and not lose to
+    # both pinned legs (a router that picks the slower backend is priced
+    # wrong); COO must beat dense wall-clock (the fast path pays).
+    if not bk["auto"].get("calibrated"):
+        errors.append("approx.backends.auto: plan not calibrated — "
+                      "results/cost_calibration.json was not picked up")
+    best_pinned = min(bk["dense"]["measured_seconds"],
+                      bk["coo"]["measured_seconds"])
+    if bk["auto"]["measured_seconds"] > 1.5 * best_pinned:
+        errors.append(f"approx.backends: auto leg "
+                      f"({bk['auto']['measured_seconds']:.3g}s) lost to the "
+                      f"best pinned backend ({best_pinned:.3g}s) by > 1.5x")
+    if bk.get("coo_speedup", 0) < 1.0:
+        errors.append(f"approx.backends: COO did not beat dense wall-clock "
+                      f"(speedup {bk.get('coo_speedup', 0):.2f}x < 1)")
+    return errors
+
+
 def check_approx(rec: dict) -> list:
     errors = _check_plan(rec.get("plan"), "approx.plan")
     errors += _check_plan(rec.get("plan_exact"), "approx.plan_exact")
+    errors += _check_backends(rec.get("backends"))
     me = rec.get("mesh_epochs")
     if not me:
         errors.append("approx: mesh_epochs record missing")
