@@ -4,6 +4,7 @@
 """
 import numpy as np
 
+from repro.bc import ExecutionConfig
 from repro.core import brandes_bc, mfbc
 from repro.graphs.generators import rmat
 
@@ -15,7 +16,9 @@ def main():
     g, _ = g.remove_isolated()
     print(f"graph: n={g.n} m={g.m} (weighted R-MAT)")
 
-    lam = mfbc(g, n_b=64, backend="dense")  # MFBC (paper Algorithm 3)
+    # MFBC (paper Algorithm 3); the typed ExecutionConfig is the blessed
+    # way to pick a backend (stringly backend= kwargs are deprecated).
+    lam = mfbc(g, n_b=64, execution=ExecutionConfig(backend="dense"))
 
     top = np.argsort(lam)[::-1][:5]
     print("top-5 central vertices:", [(int(v), round(float(lam[v]), 1))

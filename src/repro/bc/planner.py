@@ -188,8 +188,15 @@ class BCPlanner:
             for _, s in axes:
                 p *= s
 
-        weighted = (query.weighted if query.weighted is not None
-                    else bool(np.any(g.w != 1.0)))
+        # `g` may be a stats-only record (graphs.formats.GraphStats) with
+        # no edge arrays — the out-of-core path plans before (or without
+        # ever) materializing the COO arrays on this host.
+        if query.weighted is not None:
+            weighted = query.weighted
+        elif hasattr(g, "w"):
+            weighted = bool(np.any(g.w != 1.0))
+        else:
+            weighted = bool(getattr(g, "weighted", False))
         # n_b sizing hint: the *uncapped* a-priori budget (a max_samples cap
         # below it should not shrink the batch the hardware wants to run).
         hint = (n if query.mode == "exact"

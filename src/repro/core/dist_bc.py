@@ -422,15 +422,20 @@ class MeshBCContext:
     re-uploading the adjacency or retracing already-compiled shapes.
     ``prepare_mesh_batch_step`` remains as the single-``nb`` convenience
     wrapper over this class.
+
+    ``g`` is a ``Graph`` (adjacency uploaded eagerly) or anything
+    stats-like with an ``n`` attribute but no edge arrays (e.g.
+    ``repro.graphs.formats.GraphStats``): the context then comes up with
+    *no* adjacency resident, and the caller streams it in through
+    ``upload_coo_chunks`` / ``graphs.formats.build_sharded_adjacency``.
+    That path densifies the adjacency one device shard at a time — the
+    host never holds the full (n_pad, n_pad) matrix, which is what makes
+    scale-18+ graphs loadable at all.
     """
 
     def __init__(self, g, mesh: Mesh, *, iters: int = 0,
                  use_kernel: bool = False, block: int = 512,
                  execution=None):
-        import numpy as np
-
-        from repro.graphs.formats import coo_to_dense
-
         # Duck-typed backend-dispatch config (repro.bc.ExecutionConfig):
         # the core layer never imports the solver facade, it just reads
         # the three relax-step fields. The mesh step is dense-only.
@@ -458,15 +463,93 @@ class MeshBCContext:
 
         lcm = self._d_sz * self._m_sz
         self.n_pad = -(-g.n // lcm) * lcm
-        a = np.full((self.n_pad, self.n_pad), np.inf, dtype=np.float32)
-        a[:g.n, :g.n] = coo_to_dense(g)
         self.perm = vertex_row_permutation(self.n_pad, self._d_sz, self._m_sz)
         # Shardings depend only on axis names, not on nb: one probe cfg.
-        sh_a, sh_at, self._sh_src, self._sh_val = input_shardings(
-            mesh, self._cfg(self.chunk))
-        self._a_dev = jax.device_put(jnp.asarray(a[self.perm, :]), sh_a)
-        self._at_dev = jax.device_put(jnp.asarray(a.T[self.perm, :]), sh_at)
+        self._sh_a, self._sh_at, self._sh_src, self._sh_val = \
+            input_shardings(mesh, self._cfg(self.chunk))
+        self._a_dev = None
+        self._at_dev = None
         self._steps = {}  # (nb_pad, variant, n_slots) -> jitted step
+        if hasattr(g, "src"):
+            self.upload_graph(g)
+
+    # -- adjacency upload ----------------------------------------------------
+    def upload_graph(self, g) -> "MeshBCContext":
+        """Upload a host-resident ``Graph``'s adjacency (one chunk)."""
+        return self.upload_coo_chunks([(g.src, g.dst, g.w)])
+
+    def upload_coo_chunks(self, chunks) -> "MeshBCContext":
+        """Build the device-sharded A / Aᵀ from streamed COO chunks.
+
+        Each ``(src, dst, w)`` chunk is routed to the per-device shard
+        blocks it intersects; blocks densify lazily inside
+        ``jax.make_array_from_callback``, so peak host memory is
+        O(nnz + one shard block), never O(n²). Duplicate arcs fold by
+        ``min`` and self loops are dropped — bitwise the semantics of
+        ``coo_to_dense`` (+ inf diagonal) on the concatenated stream,
+        for any chunking.
+        """
+        import numpy as np
+
+        rb = self.n_pad // self._m_sz  # shard rows  (model axis)
+        cb = self.n_pad // self._d_sz  # shard cols  (data axis)
+        inv_perm = np.empty(self.n_pad, dtype=np.int64)
+        inv_perm[self.perm] = np.arange(self.n_pad)
+        buckets_a: dict = {}
+        buckets_at: dict = {}
+        for src, dst, w in chunks:
+            src = np.asarray(src, dtype=np.int64)
+            dst = np.asarray(dst, dtype=np.int64)
+            w = np.asarray(w, dtype=np.float32)
+            keep = src != dst  # A(i, i) = inf structurally
+            src, dst, w = src[keep], dst[keep], w[keep]
+            if src.shape[0] and int(max(src.max(), dst.max())) >= self.n:
+                raise ValueError("vertex id out of range for this context")
+            # A[perm, :]: arc (s, d) lands at row inv_perm[s], col d.
+            self._bucket(buckets_a, inv_perm[src], dst, w, rb, cb)
+            # Aᵀ[perm, :]: arc (s, d) lands at row inv_perm[d], col s.
+            self._bucket(buckets_at, inv_perm[dst], src, w, rb, cb)
+        self._a_dev = self._densify(buckets_a, rb, cb, self._sh_a)
+        self._at_dev = self._densify(buckets_at, rb, cb, self._sh_at)
+        return self
+
+    @staticmethod
+    def _bucket(buckets, rows, cols, w, rb, cb) -> None:
+        """Split one chunk's entries by the (row, col) shard block."""
+        import numpy as np
+
+        if rows.shape[0] == 0:
+            return
+        bid = (rows // rb) * (1 << 20) + cols // cb
+        order = np.argsort(bid, kind="stable")
+        bid, rows, cols, w = bid[order], rows[order], cols[order], w[order]
+        cuts = np.nonzero(bid[1:] != bid[:-1])[0] + 1
+        for lo, hi in zip(np.r_[0, cuts], np.r_[cuts, bid.shape[0]]):
+            key = (int(rows[lo]) // rb, int(cols[lo]) // cb)
+            buckets.setdefault(key, []).append(
+                (rows[lo:hi] % rb, cols[lo:hi] % cb, w[lo:hi]))
+
+    def _densify(self, buckets, rb, cb, sharding):
+        import numpy as np
+
+        def shard(index):
+            r0 = index[0].start or 0
+            c0 = index[1].start or 0
+            blk = np.full((rb, cb), np.inf, dtype=np.float32)
+            for rows, cols, w in buckets.get((r0 // rb, c0 // cb), ()):
+                np.minimum.at(blk, (rows, cols), w)
+            return blk
+
+        return jax.make_array_from_callback(
+            (self.n_pad, self.n_pad), sharding, shard)
+
+    def _adjacency(self):
+        if self._a_dev is None:
+            raise RuntimeError(
+                "MeshBCContext has no adjacency resident: built from stats "
+                "only — stream the graph in with upload_coo_chunks() / "
+                "graphs.formats.build_sharded_adjacency() first")
+        return self._a_dev, self._at_dev
 
     def round_nb(self, nb: int) -> int:
         """Smallest pod·data multiple ≥ nb (the mesh batch divisibility)."""
@@ -511,8 +594,9 @@ class MeshBCContext:
         import numpy as np
 
         nb_pad = self.round_nb(nb)
+        a_dev, at_dev = self._adjacency()
         src, val = self._pad_inputs(nb_pad, sources, valid)
-        lam_b = self._step(nb_pad, "sum")(self._a_dev, self._at_dev, src, val)
+        lam_b = self._step(nb_pad, "sum")(a_dev, at_dev, src, val)
         lam = np.zeros(self.n_pad, dtype=np.float64)
         lam[self.perm] = np.asarray(lam_b, np.float64)  # undo permutation
         return lam[:self.n]
@@ -522,9 +606,9 @@ class MeshBCContext:
         import numpy as np
 
         nb_pad = self.round_nb(nb)
+        a_dev, at_dev = self._adjacency()
         src, val = self._pad_inputs(nb_pad, sources, valid)
-        stats_b = self._step(nb_pad, "moments")(self._a_dev, self._at_dev,
-                                                src, val)
+        stats_b = self._step(nb_pad, "moments")(a_dev, at_dev, src, val)
         stats = np.zeros((3, self.n_pad), dtype=np.float64)
         stats[:, self.perm] = np.asarray(stats_b, np.float64)
         return (stats[0, :self.n], stats[1, :self.n],
@@ -536,10 +620,11 @@ class MeshBCContext:
         import numpy as np
 
         nb_pad = self.round_nb(nb)
+        a_dev, at_dev = self._adjacency()
         src, val, sid = self._pad_inputs(nb_pad, sources, valid,
                                          slot_ids, n_slots)
         stats_b = self._step(nb_pad, "segmented", n_slots)(
-            self._a_dev, self._at_dev, src, val, sid)
+            a_dev, at_dev, src, val, sid)
         stats = np.zeros((3, n_slots, self.n_pad), dtype=np.float64)
         stats[:, :, self.perm] = np.asarray(stats_b, np.float64)
         return (stats[0, :, :self.n], stats[1, :, :self.n],

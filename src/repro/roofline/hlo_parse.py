@@ -42,8 +42,13 @@ _INSTR_RE = re.compile(
 _ANY_INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s*([\w\-]+)",
     re.M)
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->", re.M)
-_WHILE_RE = re.compile(r"while\([^)]*\).*?body=%?([\w.\-]+)")
+# Computation headers may carry tuple-typed params with nested parens
+# (while bodies: ``%wide.region_… (p: (s32[], f32[8,512], …)) -> (…) {``),
+# so the param list must match greedily up to the ``->``.
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->", re.M)
+_WHILE_RE = re.compile(r"while\(.*\).*?body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 
 COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
                     "all-to-all", "collective-permute")
@@ -90,24 +95,38 @@ class CollectiveOp:
 class CollectiveStats:
     ops: List[CollectiveOp]
     while_bodies: List[str]
+    # callee -> [(caller, scaled_by_trip)]: one entry per call site; a
+    # while's body/condition edges carry scaled_by_trip=True. Lets trip
+    # counts propagate to collectives that XLA hoisted into fusion
+    # computations *called from* a loop body — name-prefix matching alone
+    # silently under-counts those.
+    call_edges: Dict[str, List[Tuple[str, bool]]] = \
+        dataclasses.field(default_factory=dict)
 
     def totals(self, loop_trip_counts: Optional[Dict[str, int]] = None
                ) -> Dict[str, float]:
-        """Aggregate bytes; ops inside while bodies scale by trip count.
+        """Aggregate bytes; ops executed inside loops scale by trip count.
 
-        loop_trip_counts: map from computation-name substring to trip
-        count. Any while-body computation not matched scales by 1.
+        loop_trip_counts: map from while-body-name substring to trip
+        count (``{"*": k}`` matches every loop). The multiplier of a
+        computation is summed over its call sites and compounds across
+        nested loops; computations never called (the entry) count once.
         """
         loop_trip_counts = loop_trip_counts or {}
+        mults = self._multipliers(loop_trip_counts)
         operand = wire = 0.0
         msgs = 0.0
         per_kind: Dict[str, float] = defaultdict(float)
         for op in self.ops:
-            mult = 1.0
-            for body in self.while_bodies:
-                if op.computation == body or op.computation.startswith(body):
-                    mult = float(self._match_trip(body, loop_trip_counts))
-                    break
+            mult = mults.get(op.computation)
+            if mult is None:  # no call-graph info: legacy prefix match
+                mult = 1.0
+                for body in self.while_bodies:
+                    if (op.computation == body
+                            or op.computation.startswith(body)):
+                        mult = float(self._match_trip(body,
+                                                      loop_trip_counts))
+                        break
             operand += mult * op.operand_bytes
             wire += mult * op.wire_bytes
             msgs += mult
@@ -115,10 +134,31 @@ class CollectiveStats:
         return {"operand_bytes": operand, "wire_bytes": wire,
                 "messages": msgs, **{f"wire_{k}": v for k, v in per_kind.items()}}
 
+    def _multipliers(self, trips: Dict[str, int]) -> Dict[str, float]:
+        """Executions per computation, from the call graph (memoized)."""
+        memo: Dict[str, float] = {}
+
+        def mult(comp: str, stack: Tuple[str, ...] = ()) -> float:
+            if comp in memo:
+                return memo[comp]
+            edges = self.call_edges.get(comp)
+            if not edges or comp in stack:  # root (entry) / cycle guard
+                return 1.0
+            total = 0.0
+            for caller, scaled in edges:
+                m = mult(caller, stack + (comp,))
+                if scaled:
+                    m *= float(self._match_trip(comp, trips))
+                total += m
+            memo[comp] = total
+            return total
+
+        return {c: mult(c) for c in self.call_edges}
+
     @staticmethod
     def _match_trip(body: str, trips: Dict[str, int]) -> int:
         for key, v in trips.items():
-            if key in body:
+            if key != "*" and key in body:
                 return v
         return trips.get("*", 1)
 
@@ -143,10 +183,19 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
 
     ops: List[CollectiveOp] = []
     while_bodies: List[str] = []
+    call_edges: Dict[str, List[Tuple[str, bool]]] = {}
     for comp_name, name, tstr, line in comp_of_line:
         mw = _WHILE_RE.search(line)
         if mw:
             while_bodies.append(mw.group(1))
+            call_edges.setdefault(mw.group(1), []).append((comp_name, True))
+            mc = _COND_RE.search(line)
+            if mc:
+                call_edges.setdefault(mc.group(1), []).append(
+                    (comp_name, True))
+        else:
+            for callee in _CALLS_RE.findall(line):
+                call_edges.setdefault(callee, []).append((comp_name, False))
         m = _INSTR_RE.match(line)
         if not m:
             continue
@@ -168,7 +217,7 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
         if in_b == 0 and base_kind == "all-gather":
             in_b = 0  # unknown operand; wire estimate falls back to out
         ops.append(CollectiveOp(base_kind, comp_name, out_b, in_b))
-    return CollectiveStats(ops, while_bodies)
+    return CollectiveStats(ops, while_bodies, call_edges)
 
 
 def collective_bytes(hlo_text: str,

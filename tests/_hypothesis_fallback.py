@@ -41,6 +41,12 @@ def just(value):
     return _Strategy(lambda rng: value)
 
 
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
 def one_of(*strats):
     return _Strategy(
         lambda rng: strats[int(rng.integers(0, len(strats)))]._draw(rng))
@@ -100,6 +106,7 @@ class _StrategiesNamespace:
     floats = staticmethod(floats)
     booleans = staticmethod(booleans)
     just = staticmethod(just)
+    sampled_from = staticmethod(sampled_from)
     one_of = staticmethod(one_of)
     tuples = staticmethod(tuples)
     lists = staticmethod(lists)

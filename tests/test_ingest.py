@@ -1,0 +1,309 @@
+"""Chunked out-of-core ingest parity wall (``repro.graphs.formats``).
+
+The contract under test: every streaming path — arbitrary chunk sizes,
+arbitrary arc order, any on-disk format — produces a ``Graph`` whose
+arrays are **bitwise identical** to the in-memory pipeline
+(``Graph(...).dedup()`` [+ ``symmetrize`` / ``remove_isolated``]), and
+the content digest computed during the streaming pass equals
+``graph_digest`` of the result. The multi-device shard-streaming side
+(``build_sharded_adjacency`` into a stats-only ``MeshBCContext``) is
+pinned here on one device and on 8 devices in the slow-lane subprocess
+check ``md_ingest_check.py``.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.bc import BCQuery
+from repro.bc import plan as bc_plan
+from repro.graphs.formats import (ChunkedCSRBuilder, EdgeListReader, Graph,
+                                  GraphStats, as_coo_chunks,
+                                  build_sharded_adjacency, coo_to_dense,
+                                  graph_digest, load_graph, write_binary_coo,
+                                  write_edge_list)
+from repro.graphs.generators import erdos_renyi, rmat
+
+
+def make_raw(n=60, nnz=400, seed=3, weighted=True):
+    """A raw arc stream with duplicates and self loops (pre-canonical)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, nnz).astype(np.int32)
+    dst = rng.integers(0, n, nnz).astype(np.int32)
+    w = (rng.random(nnz).astype(np.float32) + 0.25 if weighted
+         else np.ones(nnz, np.float32))
+    return n, src, dst, w
+
+
+def reference(n, src, dst, w, *, symmetrize, remove_isolated):
+    g = Graph(n, src, dst, w)
+    g = g.symmetrize() if symmetrize else g.dedup()
+    kept = None
+    if remove_isolated:
+        g, kept = g.remove_isolated()
+    return g, kept
+
+
+def assert_graphs_bitwise(a: Graph, b: Graph):
+    assert a.n == b.n
+    assert a.directed == b.directed
+    np.testing.assert_array_equal(a.src, b.src)
+    np.testing.assert_array_equal(a.dst, b.dst)
+    np.testing.assert_array_equal(a.w, b.w)
+
+
+def chunked(src, dst, w, size):
+    for lo in range(0, src.shape[0], size):
+        yield src[lo:lo + size], dst[lo:lo + size], w[lo:lo + size]
+
+
+# ------------------------------------------------------------- builder parity
+@pytest.mark.parametrize("chunk", [1, 7, 64, 10_000])
+@pytest.mark.parametrize("symmetrize", [False, True])
+@pytest.mark.parametrize("remove_isolated", [False, True])
+def test_builder_bitwise_parity(chunk, symmetrize, remove_isolated):
+    n, src, dst, w = make_raw()
+    ref, kept_ref = reference(n, src, dst, w, symmetrize=symmetrize,
+                              remove_isolated=remove_isolated)
+    b = ChunkedCSRBuilder(n, symmetrize=symmetrize,
+                          remove_isolated=remove_isolated)
+    res = b.add_chunks(chunked(src, dst, w, chunk)).finalize()
+    assert_graphs_bitwise(res.graph, ref)
+    if remove_isolated:
+        np.testing.assert_array_equal(res.kept, kept_ref)
+    assert res.digest == graph_digest(res.graph)
+    assert res.edges_read == src.shape[0]
+
+
+def test_builder_order_independence():
+    """Streaming dedup must not depend on arrival order or chunking."""
+    n, src, dst, w = make_raw(seed=11)
+    results = []
+    for seed, chunk in ((0, 1), (1, 5), (2, 50), (3, 10_000)):
+        order = np.random.default_rng(seed).permutation(src.shape[0])
+        b = ChunkedCSRBuilder(n)
+        res = b.add_chunks(chunked(src[order], dst[order], w[order],
+                                   chunk)).finalize()
+        results.append(res)
+    for res in results[1:]:
+        assert_graphs_bitwise(res.graph, results[0].graph)
+        assert res.digest == results[0].digest
+
+
+def test_builder_small_buffer_compaction():
+    """Run compaction kicks in mid-stream without changing the result."""
+    n, src, dst, w = make_raw()
+    ref, _ = reference(n, src, dst, w, symmetrize=False,
+                       remove_isolated=False)
+    b = ChunkedCSRBuilder(n, buffer_edges=16)  # forces repeated compaction
+    res = b.add_chunks(chunked(src, dst, w, 9)).finalize()
+    assert_graphs_bitwise(res.graph, ref)
+
+
+def test_builder_min_weight_dedup():
+    """Duplicate (src, dst) pairs keep the minimum weight, bitwise."""
+    src = np.array([0, 0, 0, 1], np.int32)
+    dst = np.array([1, 1, 1, 2], np.int32)
+    w = np.array([3.0, 1.5, 2.0, 1.0], np.float32)
+    res = ChunkedCSRBuilder(3).add_chunks(chunked(src, dst, w, 1)).finalize()
+    assert_graphs_bitwise(res.graph, Graph(3, src, dst, w).dedup())
+    assert res.graph.w[0] == np.float32(1.5)
+
+
+def test_builder_errors():
+    b = ChunkedCSRBuilder(4)
+    with pytest.raises(ValueError, match="negative"):
+        b.add(np.array([-1], np.int32), np.array([0], np.int32))
+    with pytest.raises(ValueError, match="out of range"):
+        b.add(np.array([0], np.int32), np.array([7], np.int32))
+    with pytest.raises(ValueError, match="shape"):
+        b.add(np.array([0], np.int32), np.array([1, 2], np.int32))
+    b.finalize()
+    with pytest.raises(RuntimeError, match="finalized"):
+        b.add(np.array([0], np.int32), np.array([1], np.int32))
+
+
+def test_builder_empty():
+    res = ChunkedCSRBuilder(5).finalize()
+    assert res.graph.n == 5 and res.graph.nnz == 0
+    assert res.digest == graph_digest(res.graph)
+
+
+# -------------------------------------------------------- file round-trips
+@pytest.mark.parametrize("suffix", ["txt", "txt.gz", "rcoo", "rcoo.gz"])
+@pytest.mark.parametrize("chunk_edges", [1, 37, 1_000_000])
+def test_file_round_trip_bitwise(tmp_path, suffix, chunk_edges):
+    g = erdos_renyi(48, 0.12, seed=5, weighted=True, max_weight=9).dedup()
+    path = str(tmp_path / f"g.{suffix}")
+    if suffix.startswith("txt"):
+        write_edge_list(path, g)
+    else:
+        write_binary_coo(path, g)
+    res = load_graph(path, chunk_edges=chunk_edges, remove_isolated=False)
+    # both formats declare n and directedness (RCOO header / text comment),
+    # so the round trip is the identity — including trailing isolated ids
+    assert_graphs_bitwise(res.graph, g)
+    assert res.digest == graph_digest(g)
+
+
+def test_text_unweighted_round_trip(tmp_path):
+    g = erdos_renyi(30, 0.15, seed=9, weighted=False).dedup()
+    path = write_edge_list(str(tmp_path / "g.txt"), g)
+    # unweighted graphs serialize as two columns
+    body = [ln for ln in open(path).read().splitlines()
+            if not ln.startswith("#")]
+    assert all(len(ln.split()) == 2 for ln in body)
+    res = load_graph(path, n=g.n, remove_isolated=False)
+    assert_graphs_bitwise(res.graph, g)
+
+
+def test_float32_weights_survive_text_exactly(tmp_path):
+    """%.9g: arbitrary float32 weights round-trip through text bitwise."""
+    rng = np.random.default_rng(0)
+    w = rng.random(200).astype(np.float32) * np.float32(1e-3)
+    src = np.arange(200, dtype=np.int32) % 20
+    dst = (np.arange(200, dtype=np.int32) + 1) % 20
+    g = Graph(20, src, dst, w).dedup()
+    path = write_edge_list(str(tmp_path / "w.txt"), g)
+    res = load_graph(path, n=20, remove_isolated=False)
+    np.testing.assert_array_equal(res.graph.w, g.w)
+
+
+def test_rcoo_header_and_truncation(tmp_path):
+    g = erdos_renyi(25, 0.2, seed=2, weighted=True).dedup()
+    path = write_binary_coo(str(tmp_path / "g.rcoo"), g)
+    reader = EdgeListReader(path)
+    list(reader.chunks())
+    assert reader.header_n == g.n  # n travels in the header, ids don't fix it
+    assert reader.header_directed == g.directed
+
+    data = open(path, "rb").read()
+    bad = tmp_path / "trunc.rcoo"
+    bad.write_bytes(data[:-5])
+    with pytest.raises(ValueError, match="truncated"):
+        list(EdgeListReader(str(bad)).chunks())
+    notmagic = tmp_path / "bad.rcoo"
+    notmagic.write_bytes(b"XXXX" + data[4:])
+    with pytest.raises(ValueError, match="magic"):
+        list(EdgeListReader(str(notmagic)).chunks())
+
+
+def test_reader_restartable(tmp_path):
+    g = erdos_renyi(20, 0.2, seed=4).dedup()
+    reader = EdgeListReader(write_edge_list(str(tmp_path / "g.txt"), g),
+                            chunk_edges=5)
+    first = [tuple(map(np.copy, c)) for c in reader.chunks()]
+    second = list(reader.chunks())  # a fresh pass, not a spent iterator
+    assert len(first) == len(second) > 1
+    for (s1, d1, w1), (s2, d2, w2) in zip(first, second):
+        np.testing.assert_array_equal(s1, s2)
+        np.testing.assert_array_equal(d1, d2)
+        np.testing.assert_array_equal(w1, w2)
+
+
+def test_load_graph_pinned_n_and_isolated(tmp_path):
+    # vertex 6 of 10 is referenced; pinned n keeps the rest, the
+    # remove_isolated pass compacts them away and reports the kept ids
+    src = np.array([0, 2, 4], np.int32)
+    dst = np.array([2, 4, 6], np.int32)
+    g = Graph(10, src, dst, np.ones(3, np.float32))
+    path = write_edge_list(str(tmp_path / "g.txt"), g)
+    res = load_graph(path, n=10, remove_isolated=False)
+    assert res.graph.n == 10
+    res = load_graph(path, n=10, remove_isolated=True)
+    assert res.graph.n == 4
+    np.testing.assert_array_equal(res.kept, [0, 2, 4, 6])
+    with pytest.raises(ValueError, match="out of range"):
+        load_graph(path, n=5)
+
+
+# ------------------------------------------------- stats / planner / digest
+def test_graph_digest_canonical():
+    n, src, dst, w = make_raw(seed=21)
+    g = Graph(n, src, dst, w)
+    # digest is over the canonical (deduped) form: raw == deduped
+    assert graph_digest(g) == graph_digest(g.dedup())
+    g2 = Graph(n, src, dst, w + np.float32(0.5))
+    assert graph_digest(g) != graph_digest(g2)
+
+
+def test_graph_stats_plans_without_arrays():
+    """The planner consumes GraphStats — no edge arrays needed to plan."""
+    g = rmat(10, 8, seed=7).dedup()
+    stats = GraphStats.from_graph(g)
+    assert (stats.n, stats.m) == (g.n, g.m)
+    q = BCQuery(mode="approx", strategy="uniform", max_samples=64)
+    p_stats = bc_plan(stats, q, n_devices=1)
+    p_graph = bc_plan(g, q, n_devices=1)
+    js, jg = p_stats.to_json(), p_graph.to_json()
+    for key in ("placement", "n_b", "backend", "regime"):
+        assert js[key] == jg[key], key
+
+
+def test_as_coo_chunks_normalizes(tmp_path):
+    g = erdos_renyi(16, 0.25, seed=1).dedup()
+    res = ChunkedCSRBuilder(g.n).add_chunks([(g.src, g.dst, g.w)]).finalize()
+    reader = EdgeListReader(write_edge_list(str(tmp_path / "g.txt"), g))
+    for source in (g, res, reader, [(g.src, g.dst, g.w)]):
+        chunks = list(as_coo_chunks(source))
+        src = np.concatenate([c[0] for c in chunks])
+        dst = np.concatenate([c[1] for c in chunks])
+        w = np.concatenate([c[2] for c in chunks])
+        assert_graphs_bitwise(Graph(g.n, src, dst, w,
+                                    directed=g.directed).dedup(), g)
+
+
+# ------------------------------------- sharded streaming (single device)
+def test_build_sharded_adjacency_single_device(tmp_path):
+    """Streamed shard upload == eager upload, bitwise, on a 1x1 mesh."""
+    import jax
+
+    from repro.core.dist_bc import MeshBCContext
+
+    g = erdos_renyi(24, 0.2, seed=13, weighted=True, max_weight=5).dedup()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eager = MeshBCContext(g, mesh, iters=g.n)
+    sources = np.arange(g.n, dtype=np.int32)
+    valid = np.ones(g.n, dtype=bool)
+    lam_ref = eager.run_sum(sources, valid, nb=g.n)
+
+    ctx = MeshBCContext(GraphStats.from_graph(g), mesh, iters=g.n)
+    with pytest.raises(RuntimeError, match="no adjacency resident"):
+        ctx.run_sum(sources, valid, nb=g.n)
+    reader = EdgeListReader(write_edge_list(str(tmp_path / "g.txt"), g),
+                            chunk_edges=3)
+    build_sharded_adjacency(reader, ctx)
+    lam = ctx.run_sum(sources, valid, nb=g.n)
+    np.testing.assert_array_equal(lam, lam_ref)
+    # the streamed dense adjacency is bitwise coo_to_dense (+ inf diag)
+    a_perm = np.asarray(ctx._a_dev)[:g.n]  # n_pad == n here, perm applies
+    a = np.empty_like(a_perm)
+    a[ctx.perm] = a_perm
+    np.testing.assert_array_equal(a[:g.n, :g.n], coo_to_dense(g))
+
+
+def test_upload_rejects_out_of_range(tmp_path):
+    import jax
+
+    from repro.core.dist_bc import MeshBCContext
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ctx = MeshBCContext(GraphStats(n=4, m=1), mesh, iters=4)
+    with pytest.raises(ValueError, match="out of range"):
+        ctx.upload_coo_chunks([(np.array([0]), np.array([9]),
+                                np.array([1.0], np.float32))])
+
+
+# ------------------------------------------------------------ multi-device
+@pytest.mark.slow
+def test_multidevice_ingest_subprocess():
+    """8 visible devices: streamed shard upload parity (subprocess)."""
+    script = os.path.join(os.path.dirname(__file__), "md_ingest_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL-OK" in out.stdout

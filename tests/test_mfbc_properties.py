@@ -8,8 +8,10 @@ except ImportError:  # deterministic sweep, see tests/_hypothesis_fallback.py
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import brandes_bc, mfbc, multpath_combine, centpath_combine
-from repro.core.monoids import Centpath, Multpath
-from repro.graphs.formats import Graph
+from repro.core.monoids import (Centpath, Multpath, centpath_relax_coo,
+                                multpath_relax_coo)
+from repro.graphs.formats import (ChunkedCSRBuilder, Graph, graph_digest,
+                                  pad_edges)
 
 import jax.numpy as jnp
 
@@ -120,6 +122,147 @@ def test_centpath_monoid_laws(a, b, c):
               centpath_combine(A, centpath_combine(B, C)))
     ident = Centpath(jnp.float32(-np.inf), jnp.float32(0.0), jnp.float32(0.0))
     assert eq(centpath_combine(A, ident), A)
+
+
+# ---------------------------------------------------------------------------
+# graphs/formats invariants: the canonicalization the ingest subsystem
+# promises to preserve bitwise regardless of chunking or arrival order.
+# ---------------------------------------------------------------------------
+
+@st.composite
+def raw_arc_streams(draw, max_n=20, max_nnz=120):
+    """A raw (pre-canonical) arc stream: duplicates and self loops allowed."""
+    n = draw(st.integers(min_value=3, max_value=max_n))
+    nnz = draw(st.integers(min_value=0, max_value=max_nnz))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    weighted = draw(st.booleans())
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, nnz).astype(np.int32)
+    dst = rng.integers(0, n, nnz).astype(np.int32)
+    w = (rng.random(nnz).astype(np.float32) + np.float32(0.25) if weighted
+         else np.ones(nnz, np.float32))
+    return n, src, dst, w
+
+
+def _graphs_bitwise(a, b):
+    return (a.n == b.n and a.directed == b.directed
+            and np.array_equal(a.src, b.src) and np.array_equal(a.dst, b.dst)
+            and np.array_equal(a.w, b.w))
+
+
+@settings(max_examples=40, deadline=None)
+@given(raw_arc_streams())
+def test_dedup_idempotent(stream):
+    """dedup is a projection: dedup ∘ dedup = dedup (bitwise)."""
+    n, src, dst, w = stream
+    g1 = Graph(n, src, dst, w).dedup()
+    assert _graphs_bitwise(g1.dedup(), g1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(raw_arc_streams())
+def test_symmetrize_idempotent(stream):
+    n, src, dst, w = stream
+    s1 = Graph(n, src, dst, w).symmetrize()
+    assert _graphs_bitwise(s1.symmetrize(), s1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(raw_arc_streams())
+def test_remove_isolated_idempotent(stream):
+    """After one compaction every vertex is touched: the second is identity."""
+    n, src, dst, w = stream
+    g1, _ = Graph(n, src, dst, w).dedup().remove_isolated()
+    g2, kept = g1.remove_isolated()
+    assert _graphs_bitwise(g2, g1)
+    assert np.array_equal(kept, np.arange(g1.n))
+
+
+@settings(max_examples=30, deadline=None)
+@given(raw_arc_streams(), st.sampled_from([1, 3, 17, 1_000_000]),
+       st.integers(min_value=0, max_value=2**31 - 1),
+       st.booleans(), st.booleans())
+def test_streaming_build_order_independent(stream, chunk, perm_seed,
+                                           symmetrize, remove_isolated):
+    """Chunked, shuffled streaming == the in-memory pipeline, bitwise.
+
+    The ChunkedCSRBuilder contract: any chunking × any arrival order of
+    the same raw arcs produces identical arrays and an identical content
+    digest to ``Graph(...).dedup()`` (+ symmetrize / remove_isolated).
+    """
+    n, src, dst, w = stream
+    ref = Graph(n, src, dst, w)
+    ref = ref.symmetrize() if symmetrize else ref.dedup()
+    if remove_isolated:
+        ref, _ = ref.remove_isolated()
+    order = np.random.default_rng(perm_seed).permutation(src.shape[0])
+    src, dst, w = src[order], dst[order], w[order]
+    b = ChunkedCSRBuilder(n, symmetrize=symmetrize,
+                          remove_isolated=remove_isolated)
+    for lo in range(0, src.shape[0], chunk):
+        b.add(src[lo:lo + chunk], dst[lo:lo + chunk], w[lo:lo + chunk])
+    res = b.finalize()
+    assert _graphs_bitwise(res.graph, ref)
+    assert res.digest == graph_digest(ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs(max_n=12), st.integers(min_value=0,
+                                            max_value=2**31 - 1))
+def test_pad_edges_inert_under_monoids(g, seed):
+    """Padding arcs (sink self loop, w = inf) change no monoid relax.
+
+    This is the algebraic fact the static-shape device path rests on:
+    one COO relax step over the padded arrays equals the step over the
+    raw arrays, bitwise, for both the forward (multpath) and backward
+    (centpath) monoids — on arbitrary frontier states.
+    """
+    rng = np.random.default_rng(seed)
+    nb = 4
+    wf = np.where(rng.random((nb, g.n)) < 0.3, np.inf,
+                  rng.integers(0, 8, (nb, g.n))).astype(np.float32)
+    mf = np.where(np.isfinite(wf),
+                  rng.integers(1, 4, (nb, g.n)), 0).astype(np.float32)
+    src_p, dst_p, w_p = pad_edges(g, nnz_padded=g.nnz + 32, multiple=32)
+    assert src_p.shape[0] > g.nnz  # the property must actually see padding
+
+    F = Multpath(jnp.asarray(wf), jnp.asarray(mf))
+    ref = multpath_relax_coo(F, jnp.asarray(g.src), jnp.asarray(g.dst),
+                             jnp.asarray(g.w), g.n)
+    pad = multpath_relax_coo(F, jnp.asarray(src_p), jnp.asarray(dst_p),
+                             jnp.asarray(w_p), g.n)
+    np.testing.assert_array_equal(np.asarray(ref.w), np.asarray(pad.w))
+    np.testing.assert_array_equal(np.asarray(ref.m), np.asarray(pad.m))
+
+    wb = np.where(rng.random((nb, g.n)) < 0.3, -np.inf,
+                  rng.integers(0, 8, (nb, g.n))).astype(np.float32)
+    pb = np.where(np.isfinite(wb),
+                  rng.random((nb, g.n)), 0).astype(np.float32)
+    cb = np.where(np.isfinite(wb),
+                  rng.integers(0, 3, (nb, g.n)), 0).astype(np.float32)
+    C = Centpath(jnp.asarray(wb), jnp.asarray(pb), jnp.asarray(cb))
+    ref = centpath_relax_coo(C, jnp.asarray(g.src), jnp.asarray(g.dst),
+                             jnp.asarray(g.w), g.n)
+    pad = centpath_relax_coo(C, jnp.asarray(src_p), jnp.asarray(dst_p),
+                             jnp.asarray(w_p), g.n)
+    np.testing.assert_array_equal(np.asarray(ref.w), np.asarray(pad.w))
+    np.testing.assert_array_equal(np.asarray(ref.p), np.asarray(pad.p))
+    np.testing.assert_array_equal(np.asarray(ref.c), np.asarray(pad.c))
+
+
+@settings(max_examples=30, deadline=None)
+@given(raw_arc_streams(max_n=16, max_nnz=60))
+def test_pad_edges_idempotent(stream):
+    """Re-padding already-padded arrays to the same size is the identity."""
+    n, src, dst, w = stream
+    g = Graph(n, src, dst, w).dedup()
+    src_p, dst_p, w_p = pad_edges(g, multiple=32)
+    g_p = Graph(n, src_p, dst_p, w_p)
+    src_q, dst_q, w_q = pad_edges(g_p, nnz_padded=src_p.shape[0],
+                                  multiple=32)
+    assert np.array_equal(src_p, src_q)
+    assert np.array_equal(dst_p, dst_q)
+    assert np.array_equal(w_p, w_q)
 
 
 @settings(max_examples=10, deadline=None)

@@ -13,6 +13,12 @@ serving legs) fails CI instead of producing a hollow artifact.
   both pinned legs, COO must beat dense wall-clock, and every leg that
   records a ``measured_seconds`` next to its plan must satisfy the
   ISSUE-6 drift gate ``|predicted_seconds − measured| / measured ≤ 2``.
+  Plus the ``scaling`` record merged in by ``benchmarks/bc_scaling.py``:
+  chunked-ingest records with content digests, measured sources/sec legs
+  (gated against ``benchmarks/baselines/scaling.json`` when a baseline
+  is recorded) at R-MAT scale ≥ 18, and the HLO-measured bytes-on-wire
+  per mesh shape against the §5.2 model — a loose absolute band per
+  shape and a tight band on the 2D→3D reduction.
 * ``BENCH_serve.json`` — the fused-vs-unfused serving sweep: both legs
   present per concurrency level, positive throughput, every run carrying
   its executed per-request ``BCPlan``s (with the bucket sets), a fused
@@ -109,7 +115,101 @@ def check_approx(rec: dict) -> list:
             else:
                 errors += _check_plan(me[leg].get("plan"),
                                       f"approx.mesh_epochs.{leg}.plan")
+    errors += _check_scaling(rec.get("scaling"))
     return errors
+
+
+# Gates for the bc_scaling record (ISSUE 7 acceptance): the HLO-measured
+# collective bytes must track the §5.2 model — a loose absolute band
+# (monoid leaf counts and tie-mask doubling are deliberately unmodeled
+# constants) and a tight band on the 2D→3D shape-to-shape reduction (the
+# p^{1/3}-style scaling the paper claims, which constants cancel out of).
+SCALING_ABS_RATIO = 8.0        # per-shape measured/model, either side
+SCALING_REL_RATIO = 1.6        # measured vs model bytes *reduction*
+SCALING_REGRESSION = 0.5       # sources/sec floor vs recorded baseline
+
+
+def _check_scaling(sc) -> list:
+    """The out-of-core ingest + communication-scaling record."""
+    if not sc:
+        return ["approx: scaling record missing (run benchmarks/"
+                "bc_scaling.py --merge)"]
+    errors = []
+    ingest = {r.get("graph"): r for r in sc.get("ingest", [])}
+    if len(ingest) < 2:
+        errors.append("approx.scaling: need >= 2 ingest records "
+                      f"(real graph + R-MAT), got {sorted(ingest)}")
+    for name, r in ingest.items():
+        where = f"approx.scaling.ingest[{name}]"
+        if not (len(r.get("digest", "")) == 64 and r.get("n_chunks", 0) > 0):
+            errors.append(f"{where}: content digest / chunk count missing")
+        if not r.get("edges_per_sec", 0) > 0:
+            errors.append(f"{where}: edges_per_sec missing or zero")
+
+    legs = sc.get("legs", [])
+    if not any(_rmat_scale(leg.get("graph", "")) >= 18 for leg in legs):
+        errors.append("approx.scaling: no measured leg at R-MAT scale "
+                      ">= 18")
+    for leg in legs:
+        name = leg.get("graph")
+        where = f"approx.scaling.legs[{name}]"
+        errors += _check_plan(leg.get("plan"), f"{where}.plan")
+        if not leg.get("sources_per_sec", 0) > 0:
+            errors.append(f"{where}: sources_per_sec missing or zero")
+        if name in ingest and leg.get("digest") != ingest[name]["digest"]:
+            errors.append(f"{where}: digest does not match its ingest "
+                          "record — leg ran on different data")
+        base = leg.get("baseline_sources_per_sec")
+        if base and leg.get("sources_per_sec", 0) < SCALING_REGRESSION * base:
+            errors.append(
+                f"{where}: sources/sec regressed "
+                f"({leg['sources_per_sec']:.3g} < {SCALING_REGRESSION} * "
+                f"baseline {base:.3g})")
+
+    comm = sc.get("comm")
+    if not comm:
+        return errors + ["approx.scaling: comm record missing"]
+    if comm.get("scale", 0) < 18:
+        errors.append(f"approx.scaling.comm: measured at scale "
+                      f"{comm.get('scale')} < 18")
+    shapes = comm.get("shapes", {})
+    if len(shapes) < 2:
+        errors.append(f"approx.scaling.comm: need >= 2 mesh shapes, got "
+                      f"{sorted(shapes)}")
+    for name, s in shapes.items():
+        where = f"approx.scaling.comm[{name}]"
+        wire, model = s.get("wire_bytes", 0), s.get("model_bytes", 0)
+        if not (wire > 0 and model > 0):
+            errors.append(f"{where}: wire/model bytes missing")
+        elif not (1.0 / SCALING_ABS_RATIO
+                  <= wire / model <= SCALING_ABS_RATIO):
+            errors.append(f"{where}: measured/model bytes ratio "
+                          f"{wire / model:.2f} outside "
+                          f"[1/{SCALING_ABS_RATIO:g}, {SCALING_ABS_RATIO:g}]")
+    red_m = comm.get("reduction_measured", 0)
+    red_p = comm.get("reduction_model", 0)
+    if not (red_m > 0 and red_p > 0):
+        errors.append("approx.scaling.comm: 2D->3D reduction missing")
+    else:
+        if red_m <= 1.0:
+            errors.append(f"approx.scaling.comm: replication did not reduce "
+                          f"bytes on the wire (reduction {red_m:.2f}x)")
+        rel = red_m / red_p
+        if not (1.0 / SCALING_REL_RATIO <= rel <= SCALING_REL_RATIO):
+            errors.append(
+                f"approx.scaling.comm: measured reduction {red_m:.2f}x "
+                f"deviates from the model's {red_p:.2f}x by more than "
+                f"{SCALING_REL_RATIO}x")
+    return errors
+
+
+def _rmat_scale(name: str) -> int:
+    if name.startswith("rmat_s"):
+        try:
+            return int(name[len("rmat_s"):].split("_")[0])
+        except ValueError:
+            return 0
+    return 0
 
 
 def check_serve(rec: dict) -> list:
