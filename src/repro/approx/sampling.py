@@ -221,6 +221,45 @@ class AdaptiveSampler:
     def capped(self) -> bool:
         return self._drawn >= self.cap
 
+    # ----------------------------------------------------- checkpointing
+    def state(self) -> dict:
+        """Portable snapshot of the sampling stream position.
+
+        Everything ``from_state`` needs to continue this exact stream:
+        the epoch-schedule position, the draw count, and the generator's
+        bit-level state. The stop latch is *not* captured — a restored
+        sampler is re-armed on purpose (resumption exists to keep
+        sampling past the point the original run stopped at).
+        """
+        return {
+            "ei": self._ei,
+            "drawn": self._drawn,
+            "rng_state": self.rng.bit_generator.state,
+        }
+
+    @classmethod
+    def from_state(cls, n: int, state: dict, *, eps: float, delta: float,
+                   n_b: int, tau0: Optional[int] = None, growth: float = 2.0,
+                   cap: Optional[int] = None) -> "AdaptiveSampler":
+        """Rebuild a sampler mid-stream from a ``state()`` snapshot.
+
+        ``eps``/``delta``/``cap`` are the *new* run's targets (a
+        refinement resumes under a tighter ε, hence a larger Hoeffding
+        cap); ``n_b``/``tau0``/``growth`` must match the original run or
+        the epoch schedule — and with it the drawn stream — diverges.
+        The schedule generator is re-advanced to the snapshot's epoch
+        index, so the next ``next_epoch()`` demands exactly the epoch
+        the original sampler would have demanded next.
+        """
+        s = cls(n, eps=eps, delta=delta, n_b=n_b, tau0=tau0, growth=growth,
+                cap=cap)
+        for _ in range(state["ei"]):
+            next(s._epochs)
+        s._ei = int(state["ei"])
+        s._drawn = int(state["drawn"])
+        s.rng.bit_generator.state = state["rng_state"]
+        return s
+
     # ------------------------------------------------------- demand side
     def next_epoch(self) -> Optional[Tuple[int, int]]:
         """Demand for one epoch: ``(epoch_index, n_sources)``, or ``None``

@@ -51,6 +51,8 @@ from repro.bc.fusion import (PACKS, BatchAssembler, FusedBatch,
 from repro.bc.planner import (BCPlan, BCPlanner, bucket_sizes,
                               plan_for_request)
 from repro.bc.query import TIER_DEADLINE_S, TIERS, BCQuery
+from repro.bc.refine import (ApproxCheckpoint, checkpoint_from,
+                             resume_approx)
 from repro.bc.solve import BCResult, honest_converged, plan, solve
 
 __all__ = [
@@ -62,6 +64,7 @@ __all__ = [
     "BatchAssembler", "FusedBatch", "scatter", "order_demand", "PACKS",
     "TIERS", "TIER_DEADLINE_S",
     "plan_for_request", "bucket_sizes",
+    "ApproxCheckpoint", "checkpoint_from", "resume_approx",
     "ApproxResult", "LambdaEstimator", "stopping_check",
     "choose_sample_batch", "AdaptiveSampler", "UniformSampler",
 ]

@@ -115,6 +115,26 @@ class BCPlan:
         d["notes"] = list(self.notes)
         return d
 
+    @classmethod
+    def from_json(cls, d: Dict) -> "BCPlan":
+        """Inverse of ``to_json`` — the serving wire form round-trips.
+
+        Restores the tuple/enum shapes JSON flattens (``mesh_axes`` dict
+        → ordered pairs, ``buckets``/``notes`` lists → tuples, the
+        nested ``execution`` dict → ``ExecutionConfig``), so
+        ``BCPlan.from_json(p.to_json())== p`` for any planner output.
+        """
+        d = dict(d)
+        axes = d.get("mesh_axes")
+        d["mesh_axes"] = (None if axes is None
+                          else tuple((k, int(v)) for k, v in axes.items()))
+        d["buckets"] = tuple(int(b) for b in d.get("buckets") or ())
+        d["notes"] = tuple(d.get("notes") or ())
+        ex = d.get("execution")
+        d["execution"] = (None if ex is None
+                          else ExecutionConfig.from_json(ex))
+        return cls(**d)
+
     def summary(self) -> str:
         where = (f"mesh{self.axes_dict()}" if self.placement == "mesh"
                  else "single_host")

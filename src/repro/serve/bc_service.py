@@ -72,13 +72,13 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.bc import (PACKS, TIER_DEADLINE_S, TIERS, AdaptiveSampler,
-                      BatchAssembler, BatchExecutor, BCPlan, BCQuery,
-                      ExecutionConfig, LambdaEstimator, build_executor,
-                      honest_converged, order_demand, plan_for_request,
-                      scatter)
+                      ApproxCheckpoint, BatchAssembler, BatchExecutor,
+                      BCPlan, BCQuery, ExecutionConfig, LambdaEstimator,
+                      build_executor, checkpoint_from, honest_converged,
+                      order_demand, plan_for_request, scatter)
 from repro.bc import plan as bc_plan
 from repro.bc import stopping_check
-from repro.graphs.formats import Graph
+from repro.graphs.formats import Graph, graph_digest
 
 
 @dataclasses.dataclass
@@ -133,6 +133,53 @@ class BCResponse:
     plan: Optional[BCPlan] = None  # the per-request plan that sized the run
     tier: str = "normal"  # the request's latency tier
     latency_s: float = 0.0  # submit -> retirement (what QoS is measured on)
+    digest: Optional[str] = None  # content digest of the graph served
+    # resumable (S1, S2, τ) estimator state, attached only when the
+    # service runs with checkpoints=True (the result cache's refine
+    # path). Host-side only — never serialized onto the wire.
+    checkpoint: Optional[ApproxCheckpoint] = None
+
+    def to_json(self) -> Dict:
+        """JSON wire form (the gateway's result payload).
+
+        Every numpy scalar/array is converted to a plain Python value —
+        ``json.dumps`` on dataclass fields would otherwise choke on the
+        ``np.float64``/``np.int64`` leaking out of the estimator — and
+        Python's shortest-repr float serialization round-trips each
+        float64 *exactly*, so cached payloads compare bitwise. The
+        ``checkpoint`` (host-side numpy state) stays off the wire.
+        """
+        return {
+            "rid": int(self.rid),
+            "graph": str(self.graph),
+            "topk": [int(v) for v in self.topk],
+            "lam": [float(x) for x in np.asarray(self.lam)],
+            "halfwidth": [float(x) for x in np.asarray(self.halfwidth)],
+            "n_samples": int(self.n_samples),
+            "n_epochs": int(self.n_epochs),
+            "converged": bool(self.converged),
+            "seconds": float(self.seconds),
+            "plan": self.plan.to_json() if self.plan is not None else None,
+            "tier": str(self.tier),
+            "latency_s": float(self.latency_s),
+            "digest": self.digest,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "BCResponse":
+        """Inverse of ``to_json`` (float64 arrays restored bit-exactly)."""
+        plan = d.get("plan")
+        return cls(
+            rid=int(d["rid"]), graph=d["graph"],
+            topk=[int(v) for v in d["topk"]],
+            lam=np.asarray(d["lam"], dtype=np.float64),
+            halfwidth=np.asarray(d["halfwidth"], dtype=np.float64),
+            n_samples=int(d["n_samples"]), n_epochs=int(d["n_epochs"]),
+            converged=bool(d["converged"]), seconds=float(d["seconds"]),
+            plan=None if plan is None else BCPlan.from_json(plan),
+            tier=d.get("tier", "normal"),
+            latency_s=float(d.get("latency_s", 0.0)),
+            digest=d.get("digest"))
 
 
 @dataclasses.dataclass
@@ -194,7 +241,8 @@ class BCService:
                  execution: Optional[ExecutionConfig] = None,
                  backend: Optional[str] = None, mesh=None, iters: int = 0,
                  fuse: bool = True, pack: str = "deadline",
-                 tick_budget: Optional[int] = None):
+                 tick_budget: Optional[int] = None,
+                 checkpoints: bool = False):
         if pack not in PACKS:
             raise ValueError(f"pack must be one of {PACKS}, got {pack!r}")
         if tick_budget is not None and tick_budget <= 0:
@@ -214,8 +262,24 @@ class BCService:
                                  "conflicting legacy backend=")
             execution = (execution or ExecutionConfig()).resolve(
                 backend=backend)
-        self.graphs = dict(graphs)
+        # Registration accepts a plain Graph or a (Graph, digest) pair —
+        # the out-of-core ingest path (graphs.formats.IngestResult)
+        # already computed the content digest during its streaming pass,
+        # so serve must not recompute it; graphs registered without one
+        # get graph_digest() lazily on first use. Either way the serve
+        # path and the ingest pipeline share one content identity — the
+        # result cache's key.
+        self.graphs: Dict[str, Graph] = {}
+        self._digests: Dict[str, Optional[str]] = {}
+        for name, val in graphs.items():
+            if isinstance(val, tuple):
+                g, dg = val
+            else:
+                g, dg = val, None
+            self.graphs[name] = g
+            self._digests[name] = dg
         self.execution = execution
+        self.checkpoints = checkpoints
         self.backend = execution.backend if execution is not None else None
         self.mesh = mesh
         self.iters = iters
@@ -291,6 +355,44 @@ class BCService:
         executor)."""
         return self._graph_executor(name).plan
 
+    # ------------------------------------------------- public introspection
+    def executor_for(self, name: str) -> BatchExecutor:
+        """The shared per-graph executor (the gateway's refine path runs
+        ``repro.bc.resume_approx`` through it, so refined and scratch
+        answers execute on the same jitted step + device adjacency)."""
+        return self._graph_executor(name)
+
+    def request_plan(self, req: BCRequest) -> BCPlan:
+        """The per-request ``BCPlan`` a request would be sized by (what
+        ``BCResponse.plan`` will carry) — the gateway prices admission
+        decisions off its ``predicted_seconds`` *before* submitting."""
+        return (self._plan_for_request(req) if self.fuse
+                else self._graph_executor(req.graph).plan)
+
+    def digest(self, name: str) -> Optional[str]:
+        """Content digest of a registered graph (the cache-key identity).
+
+        Returns the digest supplied at registration (ingest already paid
+        for it), else computes ``graphs.formats.graph_digest`` once and
+        caches it. Stats-only registrations (``GraphStats``) carry their
+        own digest field; without one — no edge arrays to hash — this
+        stays ``None`` and cache-backed serving is off for that graph.
+        """
+        if self._digests.get(name) is None:
+            g = self.graphs[name]
+            if getattr(g, "digest", None):
+                self._digests[name] = g.digest
+            elif hasattr(g, "src"):
+                self._digests[name] = graph_digest(g)
+        return self._digests.get(name)
+
+    def describe_graph(self, name: str) -> Dict:
+        """One registry row (the gateway's ``GET /v1/graphs`` record)."""
+        g = self.graphs[name]
+        return {"name": name, "n": int(g.n), "m": int(g.m),
+                "digest": self.digest(name),
+                "plan": self.plan_for(name).to_json()}
+
     # ------------------------------------------------------- admission
     def _pop_next(self) -> _Queued:
         """Next request to admit: earliest absolute deadline (EDF) with
@@ -346,13 +448,19 @@ class BCService:
         res = job.est.result(n_epochs=job.n_epochs, converged=converged)
         ids = res.topk(job.req.k)
         now = time.monotonic()
+        # checkpoints=True: snapshot the (S1, S2, τ) sums + sampling
+        # stream so a cached answer stays *resumable* — the gateway's
+        # looser-ε cache hits refine from here instead of resampling.
+        ckpt = (checkpoint_from(job.est, job.sampler, n_epochs=res.n_epochs)
+                if self.checkpoints else None)
         self.finished.append(BCResponse(
             rid=job.req.rid, graph=job.req.graph, topk=ids.tolist(),
             lam=res.lam[ids], halfwidth=res.halfwidth[ids],
             n_samples=res.n_samples, n_epochs=res.n_epochs,
             converged=res.converged,
             seconds=now - job.t0, plan=job.plan,
-            tier=job.req.priority, latency_s=now - job.t_submit))
+            tier=job.req.priority, latency_s=now - job.t_submit,
+            digest=self.digest(job.req.graph), checkpoint=ckpt))
         self.slots[i] = None
 
     # ------------------------------------------------------------------

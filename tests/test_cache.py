@@ -1,0 +1,211 @@
+"""Result-cache semantics + the checkpointed refine contract.
+
+Three layers under test, service-side (no HTTP — that's
+``test_gateway.py``):
+
+* ``serve.cache.ResultCache`` — the hit/refine/miss state machine over
+  (digest, δ, k, rule, tier) keys with ε ordered, tightest-entry-wins
+  inserts, and the LRU eviction cap;
+* ``repro.bc.refine`` — checkpoint snapshots and the bitwise resume
+  contract: a loose-ε service run refined to a tighter ε must equal a
+  from-scratch tight run over the same (seed, rid) stream, bit for bit;
+* the ``BCResponse`` JSON wire form — numpy-free payloads that
+  round-trip float64 exactly, pinned by a golden fixture.
+"""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.bc import ApproxCheckpoint, resume_approx
+from repro.graphs.generators import rmat
+from repro.serve.bc_service import BCRequest, BCResponse, BCService
+from repro.serve.cache import HIT, MISS, REFINE, ResultCache
+
+_CACHE = {}
+
+
+def _graph():
+    if "g" not in _CACHE:
+        g = rmat(6, 8, seed=5)
+        g, _ = g.remove_isolated()
+        _CACHE["g"] = g
+    return _CACHE["g"]
+
+
+def _ckpt_stub(n: int = 4) -> ApproxCheckpoint:
+    return ApproxCheckpoint(n=n, eps=0.1, delta=0.1, rule="normal", n_b=n,
+                            s1=np.zeros(n), s2=np.zeros(n), tau=0,
+                            n_epochs=0, sampler_state={}, prefix_exact=True)
+
+
+_KW = dict(delta=0.1, k=10, rule="normal", tier="normal")
+
+
+# ---------------------------------------------------------- state machine
+def test_lookup_state_machine():
+    """ε ordering: tighter-or-equal cached → HIT, looser cached with a
+    checkpoint → REFINE, empty → MISS."""
+    c = ResultCache()
+    assert c.lookup("d1", eps=0.05, **_KW) == (None, MISS)
+    c.put("d1", eps=0.1, payload={"v": 1}, checkpoint=_ckpt_stub(), **_KW)
+    entry, kind = c.lookup("d1", eps=0.1, **_KW)  # equal ε
+    assert kind == HIT and entry.payload == {"v": 1}
+    _, kind = c.lookup("d1", eps=0.2, **_KW)  # looser request
+    assert kind == HIT
+    entry, kind = c.lookup("d1", eps=0.05, **_KW)  # tighter request
+    assert kind == REFINE and entry.checkpoint is not None
+    assert c.stats()["hits"] == 2 and c.stats()["refines"] == 1
+
+
+def test_refine_requires_checkpoint():
+    """A looser entry with no checkpoint cannot satisfy a tighter request
+    — reported as MISS, never as a silent loose answer."""
+    c = ResultCache()
+    c.put("d1", eps=0.1, payload={}, checkpoint=None, **_KW)
+    assert c.lookup("d1", eps=0.05, **_KW) == (None, MISS)
+    _, kind = c.lookup("d1", eps=0.1, **_KW)
+    assert kind == HIT
+
+
+def test_key_mismatches_miss():
+    """Any differing key component — digest, δ, k, rule, tier — misses:
+    those change the answer, not just its accuracy."""
+    c = ResultCache()
+    c.put("d1", eps=0.1, payload={}, checkpoint=_ckpt_stub(), **_KW)
+    assert c.lookup("d2", eps=0.1, **_KW)[1] == MISS  # digest
+    for field, other in [("delta", 0.05), ("k", 5),
+                         ("rule", "bernstein"), ("tier", "batch")]:
+        kw = {**_KW, field: other}
+        assert c.lookup("d1", eps=0.1, **kw)[1] == MISS, field
+    assert c.lookup(None, eps=0.1, **_KW)[1] == MISS  # digest-less graph
+
+
+def test_put_keeps_tightest_entry():
+    """A looser result never overwrites a tighter cached one."""
+    c = ResultCache()
+    c.put("d1", eps=0.05, payload={"tight": True}, **_KW)
+    entry = c.put("d1", eps=0.2, payload={"loose": True}, **_KW)
+    assert entry.eps == 0.05  # the tighter entry survived
+    got, kind = c.lookup("d1", eps=0.1, **_KW)
+    assert kind == HIT and got.payload == {"tight": True}
+    assert len(c) == 1
+
+
+def test_lru_eviction_cap():
+    """Insertions past max_entries evict least-recently-used keys; a
+    lookup refreshes recency."""
+    c = ResultCache(max_entries=3)
+    for i in range(3):
+        c.put(f"d{i}", eps=0.1, payload={"i": i}, **_KW)
+    c.lookup("d0", eps=0.1, **_KW)  # refresh d0: d1 is now LRU
+    c.put("d3", eps=0.1, payload={"i": 3}, **_KW)
+    assert len(c) == 3 and c.evictions == 1
+    assert c.lookup("d1", eps=0.1, **_KW)[1] == MISS  # evicted
+    assert c.lookup("d0", eps=0.1, **_KW)[1] == HIT  # survived
+
+    with pytest.raises(ValueError, match="max_entries"):
+        ResultCache(max_entries=0)
+
+
+# --------------------------------------------------------- refine contract
+def _serve_one(eps: float, *, rid: int = 0, k: int = 10) -> BCResponse:
+    """One checkpointing service run; rid pins the (seed, rid) stream."""
+    svc = BCService({"web": _graph()}, checkpoints=True)
+    svc.submit(BCRequest(rid=rid, graph="web", eps=eps, delta=0.1,
+                         k=k, rule="normal"))
+    out = svc.run()
+    assert len(out) == 1 and not svc.exhausted
+    return out[0], svc
+
+
+def test_refined_bitwise_equals_scratch_tight():
+    """The headline contract: loose run + checkpointed refine to tight ε
+    == from-scratch tight run over the same stream, bitwise."""
+    loose, svc = _serve_one(0.15)
+    assert loose.checkpoint is not None and loose.checkpoint.prefix_exact
+    ex = svc.executor_for("web")
+    refined, _ = resume_approx(ex, loose.checkpoint, eps=0.05, topk=10)
+
+    scratch, _ = _serve_one(0.05)
+    ids = refined.topk(10)
+    assert ids.tolist() == scratch.topk
+    assert np.array_equal(refined.lam[ids], scratch.lam)
+    assert np.array_equal(refined.halfwidth[ids], scratch.halfwidth)
+    assert refined.n_samples == scratch.n_samples
+    assert refined.n_epochs == scratch.n_epochs
+    assert refined.converged
+
+
+def test_refine_reuses_cached_samples():
+    """Refinement continues from the cached sums — it never draws fewer
+    samples than the loose run already paid for, and when the cached
+    sums already certify the tighter ε it draws none at all."""
+    loose, svc = _serve_one(0.2)
+    ex = svc.executor_for("web")
+    refined, ckpt2 = resume_approx(ex, loose.checkpoint, eps=0.1, topk=10)
+    assert refined.n_samples >= loose.n_samples
+    # the returned checkpoint snapshots the refined run (chainable)
+    assert ckpt2.n_epochs == refined.n_epochs
+    refined2, _ = resume_approx(ex, ckpt2, eps=0.05, topk=10)
+    assert refined2.n_samples >= refined.n_samples
+
+
+def test_capped_run_checkpoint_not_prefix_exact():
+    """A run truncated by its Hoeffding cap records prefix_exact=False:
+    its stream no longer matches a scratch run's, so the bitwise claim
+    is off (refinement still statistically valid)."""
+    g = _graph()
+    svc = BCService({"web": g}, checkpoints=True)
+    # bernstein at ε=0.1 caps well before the empirical rule fires
+    svc.submit(BCRequest(rid=0, graph="web", eps=0.1, delta=0.1,
+                         rule="bernstein"))
+    out = svc.run()
+    ck = out[0].checkpoint
+    assert ck is not None and not ck.prefix_exact
+
+
+def test_no_checkpoint_by_default():
+    """checkpoints=False (the default) keeps responses lean."""
+    svc = BCService({"web": _graph()})
+    svc.submit(BCRequest(rid=0, graph="web", eps=0.2))
+    assert svc.run()[0].checkpoint is None
+
+
+# ------------------------------------------------------------- wire form
+def test_response_json_roundtrip():
+    """to_json → dumps → loads → from_json restores every field, float64
+    bit-exactly (shortest-repr float serialization is lossless)."""
+    resp, _ = _serve_one(0.15)
+    d = json.loads(json.dumps(resp.to_json()))
+    back = BCResponse.from_json(d)
+    assert back.rid == resp.rid and back.graph == resp.graph
+    assert back.topk == resp.topk
+    assert np.array_equal(back.lam, np.asarray(resp.lam))
+    assert np.array_equal(back.halfwidth, np.asarray(resp.halfwidth))
+    assert (back.n_samples, back.n_epochs, back.converged) == \
+        (resp.n_samples, resp.n_epochs, resp.converged)
+    assert back.digest == resp.digest and back.tier == resp.tier
+    assert back.plan is not None
+    assert dataclasses.asdict(back.plan) == dataclasses.asdict(resp.plan)
+    # nothing numpy leaks onto the wire
+    def _no_numpy(v):
+        if isinstance(v, dict):
+            return all(_no_numpy(x) for x in v.values())
+        if isinstance(v, (list, tuple)):
+            return all(_no_numpy(x) for x in v)
+        return not isinstance(v, np.generic) and not isinstance(v, np.ndarray)
+    assert _no_numpy(resp.to_json())
+
+
+def test_response_golden_fixture():
+    """The wire schema is pinned by a checked-in fixture: from_json must
+    accept it and to_json must reproduce it byte-for-byte. Breaking
+    either means a gateway client just broke — update the fixture
+    deliberately, not incidentally."""
+    path = pathlib.Path(__file__).parent / "data" / "bc_response_golden.json"
+    golden = json.loads(path.read_text())
+    resp = BCResponse.from_json(golden)
+    assert resp.to_json() == golden

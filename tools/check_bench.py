@@ -27,7 +27,13 @@ serving legs) fails CI instead of producing a hollow artifact.
   scenario: per-tier p50/p95 latency for the FIFO baseline and the
   deadline-scheduler legs, the tight-ε tier's p95 strictly better under
   the scheduler, tiers recorded in the executed plans, and no
-  wholesale throughput collapse between the two legs.
+  wholesale throughput collapse between the two legs. Plus the
+  ``gateway`` record merged in by ``benchmarks/bc_gateway.py``: the
+  content-addressed cache hit must be well under the cold solve with a
+  byte-identical payload, the looser-entry refine must flag
+  ``refining=true`` and land bitwise-equal to a from-scratch tight run,
+  and the overload burst must reject (or degrade) without starving the
+  interactive tier.
 
 Usage: ``python tools/check_bench.py BENCH_approx.json BENCH_serve.json``
 (file kind is sniffed from the record, not the name).
@@ -247,6 +253,73 @@ def check_serve(rec: dict) -> list:
             errors.append(f"serve: fused throughput regressed at "
                           f"concurrency {c} (speedup {s:.2f} < 0.9)")
     errors += _check_mixed_tier(rec.get("mixed_tier"))
+    errors += _check_gateway(rec.get("gateway"))
+    return errors
+
+
+def _check_gateway(gw) -> list:
+    """The HTTP gateway record: the cache must pay, the refine contract
+    must hold over the wire, and overload must never starve the tight
+    tier."""
+    if not gw:
+        return ["serve: gateway record missing (run benchmarks/"
+                "bc_gateway.py after bc_serve)"]
+    errors = []
+    lat = gw.get("latency")
+    if not lat:
+        errors.append("serve.gateway: latency record missing")
+    else:
+        # a cache hit skips the solver entirely — anything under 2x
+        # means the cache (or the cold path) is broken, the real margin
+        # is order(s) of magnitude
+        if not lat.get("cached_speedup", 0) >= 2.0:
+            errors.append(f"serve.gateway: cache-hit latency not well "
+                          f"under cold ({lat.get('cached_speedup', 0):.1f}x "
+                          f"< 2x)")
+        if not lat.get("cache_identical_payload", False):
+            errors.append("serve.gateway: cached repeat payload differs "
+                          "from the cold run's")
+        if not lat.get("refining_flagged", False):
+            errors.append("serve.gateway: looser-entry hit did not flag "
+                          "refining=true")
+        if not lat.get("refine_bitwise", False):
+            errors.append("serve.gateway: refined result != from-scratch "
+                          "tight run (bitwise resume contract broken)")
+        if not lat.get("refine_stale_s", 1e9) < lat.get("refine_done_s", 0):
+            errors.append("serve.gateway: stale answer not faster than "
+                          "the finished refinement")
+    over = gw.get("overload") or {}
+    for policy in ("reject", "degrade"):
+        leg = over.get(policy)
+        where = f"serve.gateway.overload[{policy}]"
+        if not leg:
+            errors.append(f"{where}: leg missing")
+            continue
+        tiers = leg.get("tiers", {})
+        tight = tiers.get("interactive", {})
+        served = (tight.get("admitted", 0) + tight.get("cache_hits", 0)
+                  + tight.get("cache_refines", 0))
+        if not served > 0:
+            errors.append(f"{where}: overload starved the interactive "
+                          f"tier (nothing served)")
+        if not leg.get("tight_admit_rate", 0) >= \
+                leg.get("loose_admit_rate", 1):
+            errors.append(f"{where}: tight tier admitted at a lower rate "
+                          f"than the flooding loose tier "
+                          f"({leg.get('tight_admit_rate')} < "
+                          f"{leg.get('loose_admit_rate')})")
+        if policy == "reject":
+            if not leg.get("rejected", 0) > 0:
+                errors.append(f"{where}: burst past the horizon drew no "
+                              f"429s")
+            if not leg.get("degraded", 1) == 0:
+                errors.append(f"{where}: reject policy must not degrade")
+        else:
+            if not leg.get("degraded", 0) > 0:
+                errors.append(f"{where}: burst past the horizon degraded "
+                              f"nothing")
+            if not leg.get("rejected", 1) == 0:
+                errors.append(f"{where}: degrade policy must not reject")
     return errors
 
 
