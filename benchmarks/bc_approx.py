@@ -11,12 +11,14 @@ seconds. Reports
 * ``spearman``       — rank correlation of λ̂ vs λ over all vertices,
 * ``max_norm_err``   — max_v |λ̂ − λ| / (n·(n−2)), comparable to ε,
 * ``plan`` / ``mesh_epochs.*.plan`` — the executed ``BCPlan`` records,
-* ``backends``      — the self-calibrated dense-vs-COO race: the run
+* ``backends``      — the self-calibrated dense/COO/CSR race: the run
   refits ``results/cost_calibration.json`` on its own graph, then times
-  pinned dense, pinned COO and planner-routed (``auto``) legs over a
-  fixed uniform sample budget, recording each executed plan next to its
-  ``measured_seconds`` (``tools/check_bench.py`` gates prediction drift
-  at 2× and that ``auto`` lands on COO),
+  pinned dense, pinned COO, pinned frontier-sparse CSR and
+  planner-routed (``auto``) legs over a fixed uniform sample budget,
+  recording each executed plan next to its ``measured_seconds`` — the
+  CSR leg's plan carries the frontier-occupancy trace
+  (``tools/check_bench.py`` gates prediction drift at 2×, that ``auto``
+  lands on a sparse backend, and that CSR beats pinned COO),
 
 plus a mesh-vs-single-host *epoch* comparison (``mesh_epochs`` record):
 both paths run the same adaptive estimator — the mesh step returns fused
@@ -120,7 +122,7 @@ def bench_bc_approx(scale: int = 10, degree: int = 8, eps: float = 0.05,
 
 def bench_backends(scale: int = 10, degree: int = 8, eps: float = 0.05,
                    delta: float = 0.1, nb: int = 64, seed: int = 0) -> Dict:
-    """Dense-vs-COO executor race, planned with a fresh calibration.
+    """Dense/COO/CSR executor race, planned with a fresh calibration.
 
     The ISSUE-6 measurement loop, end to end: (1) refit the α-β step
     constants on this benchmark's own graph (``repro.launch.calibrate``)
@@ -135,7 +137,10 @@ def bench_backends(scale: int = 10, degree: int = 8, eps: float = 0.05,
     (uniform strategy → exactly 4 batches, no adaptive early stop), so
     ``measured_seconds`` times exactly the work the plan priced —
     ``tools/check_bench.py`` gates the prediction drift at 2× and
-    asserts the auto leg actually lights up the COO fast path.
+    asserts the auto leg actually lights up a sparse fast path. The
+    pinned CSR leg's executed plan additionally carries the
+    frontier-occupancy trace (per-iteration frontier nnz, compaction
+    hit rate, overflow count) under ``plan.occupancy``.
     """
     from repro.bc import BCQuery, ExecutionConfig, solve
     from repro.bc import plan as bc_plan
@@ -147,12 +152,13 @@ def bench_backends(scale: int = 10, degree: int = 8, eps: float = 0.05,
     g, _ = g.remove_isolated()
 
     cal = calibrate(g, nb_pair=(max(nb // 4, 8), nb), reps=2,
-                    variants=(("dense", False), ("coo", False)))
+                    variants=(("dense", False), ("coo", False),
+                              ("csr", False)))
     cal_path = save_calibration(cal)
 
     budget = 4 * nb
     legs: Dict[str, Dict] = {}
-    for leg in ("dense", "coo", "auto"):
+    for leg in ("dense", "coo", "csr", "auto"):
         execution = ExecutionConfig(backend=None if leg == "auto" else leg)
         q = BCQuery(mode="approx", eps=eps, delta=delta, rule="normal",
                     n_b=nb, strategy="uniform", max_samples=budget,
@@ -181,6 +187,8 @@ def bench_backends(scale: int = 10, degree: int = 8, eps: float = 0.05,
         "calibration": cal.to_json(),
         "coo_speedup": (legs["dense"]["measured_seconds"]
                         / max(legs["coo"]["measured_seconds"], 1e-9)),
+        "csr_speedup": (legs["coo"]["measured_seconds"]
+                        / max(legs["csr"]["measured_seconds"], 1e-9)),
         **legs,
     }
 
@@ -329,6 +337,14 @@ def main(argv=None) -> Dict:
         scale=scale, degree=args.degree, eps=args.eps, delta=args.delta,
         nb=args.nb, rule=args.rule, seed=args.seed, mesh_shape=mesh_shape,
         iters=args.mesh_iters)
+    # Records merged in by other benchmarks (bc_scaling.py --merge) must
+    # survive a rerun of this one.
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            prev = json.load(f)
+        for key in ("scaling",):
+            if key in prev and key not in rec:
+                rec[key] = prev[key]
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
     pl = rec["plan"]
@@ -342,11 +358,20 @@ def main(argv=None) -> Dict:
     bk = rec["backends"]
     print(f"[bc_approx] backends ({bk['sample_budget']} uniform samples): "
           f"dense {bk['dense']['measured_seconds']:.2f}s vs coo "
-          f"{bk['coo']['measured_seconds']:.2f}s — coo speedup "
-          f"{bk['coo_speedup']:.2f}x; auto routed to "
+          f"{bk['coo']['measured_seconds']:.2f}s vs csr "
+          f"{bk['csr']['measured_seconds']:.2f}s — coo speedup "
+          f"{bk['coo_speedup']:.2f}x, csr-over-coo "
+          f"{bk['csr_speedup']:.2f}x; auto routed to "
           f"backend={bk['auto']['backend']}"
           + (" [calibrated]" if bk["auto"]["calibrated"] else ""))
-    for leg in ("dense", "coo", "auto"):
+    occ = bk["csr"]["plan"].get("occupancy") or {}
+    if occ:
+        print(f"[bc_approx]   csr occupancy: fnnz "
+              f"{occ.get('fnnz_first')}→{occ.get('fnnz_last')} over "
+              f"{occ.get('iters_bf')} fwd iters, hit_rate "
+              f"{occ.get('hit_rate', 0.0):.2f}, "
+              f"overflows {occ.get('overflows')}")
+    for leg in ("dense", "coo", "csr", "auto"):
         print(f"[bc_approx]   {leg}: predicted "
               f"{bk[leg]['predicted_seconds']:.3g}s / measured "
               f"{bk[leg]['measured_seconds']:.3g}s "

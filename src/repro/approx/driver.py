@@ -184,13 +184,17 @@ def adjacency_bytes(n: int, m_edges: int, *, backend: str = "dense",
 
     The one memory model shared by ``choose_sample_batch`` (n_b
     rejection) and ``repro.bc.BCPlanner`` (plan predictions): f32 dense
-    (n, n) divided across ``p`` devices, or replicated COO (src, dst, w)
-    edge arrays. ``transpose=True`` doubles dense storage for paths that
-    keep A and Aᵀ resident (the distributed step does).
+    (n, n) divided across ``p`` devices, replicated COO (src, dst, w)
+    edge arrays, or the CSR backend's dual-sorted arc lists (by-src and
+    by-dst copies plus two int32 row-pointer arrays). ``transpose=True``
+    doubles dense storage for paths that keep A and Aᵀ resident (the
+    distributed step does).
     """
     if backend == "dense":
         b = 4.0 * n * n / max(p, 1)
         return 2.0 * b if transpose else b
+    if backend == "csr":
+        return 24.0 * m_edges + 8.0 * (n + 1)
     return 12.0 * m_edges
 
 
@@ -242,7 +246,8 @@ def choose_sample_batch(n: int, m_edges: int, *, p: int = 1,
             continue
         reg = choose_bc_regime(n, m_edges, nb, fill=0.5, p=p,
                                calibration=calibration)
-        step_s = min(reg["dense_s"], reg["coo_s"])
+        step_s = min(reg["dense_s"], reg["coo_s"],
+                     reg.get("csr_s", float("inf")))
         overhead = dispatch_overhead_s
         if calibration is not None and calibration.has(backend):
             overhead = calibration.overhead_seconds(backend)

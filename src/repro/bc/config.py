@@ -46,10 +46,19 @@ class Backend(str, enum.Enum):
     ``COO`` — edge-list relaxation via ``segment_min/max`` + tie-masked
     ``segment_sum`` (``monoids.*_relax_coo``); work scales with nnz
     instead of n², the paper's sparse-frontier regime. Single-host only.
+
+    ``CSR`` — frontier-compacted edge relaxation over dual-sorted arc
+    lists (``core.adjacency.CsrAdj``): each iteration compacts the
+    active maximal frontier into a static power-of-two capacity bucket,
+    expands only its incident CSR arc ranges and scatters candidates
+    with segment ops — per-iteration work tracks frontier nnz × average
+    degree instead of E, with a correctness-preserving fallback to the
+    full COO relax when every bucket overflows. Single-host only.
     """
 
     DENSE = "dense"
     COO = "coo"
+    CSR = "csr"
 
 
 def as_backend(value: Union["Backend", str, None]) -> Optional[Backend]:

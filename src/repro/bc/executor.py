@@ -41,9 +41,11 @@ import numpy as np
 
 from repro.bc.config import Backend, as_backend
 from repro.bc.planner import BCPlan, bucket_sizes
-from repro.core.adjacency import coo_adj_from_graph, dense_adj_from_graph
+from repro.core.adjacency import (CsrAdj, coo_adj_from_graph,
+                                  csr_adj_from_graph, dense_adj_from_graph)
 from repro.core.mfbc import (mfbc_batch, mfbc_batch_moments,
-                             mfbc_batch_moments_segmented)
+                             mfbc_batch_moments_segmented,
+                             mfbc_batch_moments_traced)
 from repro.graphs.formats import Graph
 
 Moments = Tuple[np.ndarray, np.ndarray, np.ndarray]  # (S1, S2, n_reach)
@@ -103,6 +105,14 @@ register_backend(BackendSpec(
 register_backend(BackendSpec(
     backend=Backend.COO,
     make_adjacency=lambda g, plan: coo_adj_from_graph(g),
+    placements=("single_host",)))
+
+register_backend(BackendSpec(
+    backend=Backend.CSR,
+    # The plan's n_b sizes the compaction capacity ladder: the frontier
+    # buckets bound (batch row, vertex) slots, so the batch axis is part
+    # of the capacity math (see core.adjacency.frontier_caps).
+    make_adjacency=lambda g, plan: csr_adj_from_graph(g, n_b=plan.n_b),
     placements=("single_host",)))
 
 
@@ -247,12 +257,15 @@ class _ExecutorBase:
 
 
 class SingleHostExecutor(_ExecutorBase):
-    """One-device moments step (dense blocked or COO segment-op relax).
+    """One-device moments step (dense blocked, COO, or frontier-compacted
+    CSR segment-op relax).
 
     The adjacency comes from the plan's backend via the registry
     (``backend_spec``); the jitted ``core.mfbc`` batch functions
-    dispatch on its type, so dense and COO share every line above the
-    relax.
+    dispatch on its type, so every backend shares each line above the
+    relax. A ``CsrAdj`` adjacency additionally routes ``step`` and
+    ``step_sum`` through the traced moments entry point and accumulates
+    the frontier occupancy side channel (``occupancy_summary``).
     """
 
     def __init__(self, g: Graph, plan: BCPlan):
@@ -260,14 +273,64 @@ class SingleHostExecutor(_ExecutorBase):
         self.n_b = plan.n_b
         self.buckets = plan.buckets or bucket_sizes(plan.n_b)
         self._adj = backend_spec(plan.backend).make_adjacency(g, plan)
+        # Frontier-occupancy trace: collected only for the compacting
+        # adjacency (the frontier-sparse engine's side channel); dense and
+        # COO moments run the untraced jit path, byte-for-byte as before.
+        self._trace = isinstance(self._adj, CsrAdj)
+        self._occ: Dict[str, Any] = {}
+
+    def _record_occupancy(self, tr_bf, tr_br) -> None:
+        def trim(tr):
+            iters = int(tr.iters)
+            return [int(x) for x in
+                    np.asarray(tr.fnnz)[:min(iters, tr.fnnz.shape[0])]]
+        per_bf, per_br = trim(tr_bf), trim(tr_br)
+        o = self._occ
+        o["batches"] = o.get("batches", 0) + 1
+        o["iters_bf"], o["iters_br"] = int(tr_bf.iters), int(tr_br.iters)
+        o["per_iter_bf"], o["per_iter_br"] = per_bf, per_br
+        o["fnnz_first"] = per_bf[0] if per_bf else 0
+        o["fnnz_last"] = per_bf[-1] if per_bf else 0
+        o["overflows"] = (o.get("overflows", 0) + int(tr_bf.overflows)
+                          + int(tr_br.overflows))
+        o["compact_hits"] = (o.get("compact_hits", 0)
+                             + int(tr_bf.compact_hits)
+                             + int(tr_br.compact_hits))
+        o["relax_calls"] = (o.get("relax_calls", 0) + int(tr_bf.iters)
+                            + int(tr_br.iters))
+        calls = max(o["relax_calls"], 1)
+        o["hit_rate"] = o["compact_hits"] / calls
+
+    def occupancy_summary(self):
+        """Accumulated frontier-occupancy trace, or None when not traced.
+
+        Per-iteration profiles (``per_iter_bf``/``per_iter_br``, forward
+        and backward sweep frontier nnz) are from the most recent batch;
+        ``overflows``/``compact_hits``/``relax_calls``/``hit_rate``
+        accumulate over every traced batch this executor ran.
+        """
+        return dict(self._occ) if self._occ else None
 
     def _moments(self, src, val) -> Moments:
-        s1, s2, nr = mfbc_batch_moments(self._adj, jnp.asarray(src),
-                                        jnp.asarray(val))
+        if self._trace:
+            s1, s2, nr, tr_bf, tr_br = mfbc_batch_moments_traced(
+                self._adj, jnp.asarray(src), jnp.asarray(val))
+            self._record_occupancy(tr_bf, tr_br)
+        else:
+            s1, s2, nr = mfbc_batch_moments(self._adj, jnp.asarray(src),
+                                            jnp.asarray(val))
         return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
                 np.asarray(nr))
 
     def _sum(self, src, val) -> np.ndarray:
+        if self._trace:
+            # S1 of the moments entry point IS λ_partial, so the exact
+            # sweep can ride the traced path at the cost of one extra
+            # elementwise square it discards.
+            s1, _, _, tr_bf, tr_br = mfbc_batch_moments_traced(
+                self._adj, jnp.asarray(src), jnp.asarray(val))
+            self._record_occupancy(tr_bf, tr_br)
+            return np.asarray(s1, np.float64)
         lam_b, _, _ = mfbc_batch(self._adj, jnp.asarray(src),
                                  jnp.asarray(val))
         return np.asarray(lam_b, np.float64)

@@ -79,7 +79,7 @@ class BCPlan:
 
     mode: str  # "exact" | "approx"
     placement: str  # "single_host" | "mesh"
-    backend: str  # "dense" | "coo" (flat mirror of execution.backend)
+    backend: str  # "dense" | "coo" | "csr" (flat mirror of execution.backend)
     use_kernel: bool
     n_b: int
     block: int
@@ -93,13 +93,19 @@ class BCPlan:
     predicted_comm_bytes: float
     predicted_seconds: float
     predicted_mem_bytes: float
-    regime: Dict[str, float]  # choose_bc_regime output (dense vs COO)
+    regime: Dict[str, float]  # choose_bc_regime output (dense/coo/csr)
     buckets: Tuple[int, ...] = ()  # padded batch shapes the executor serves
     tier: Optional[str] = None  # latency tier of the request this plan sizes
     # fully resolved typed execution choice (backend/use_kernel/placement
     # above are its flat mirrors, kept for JSON and legacy readers)
     execution: Optional[ExecutionConfig] = None
     notes: Tuple[str, ...] = ()  # planner diagnostics (e.g. forced fallbacks)
+    # Frontier-occupancy trace of an *executed* plan (attached by
+    # ``solve`` after the run when the executor collected one — the
+    # frontier-sparse CSR backend's side channel): per-iteration frontier
+    # nnz of the last batch's forward/backward sweeps, compaction hit
+    # rate and overflow count. None on freshly planned (or dense/COO) plans.
+    occupancy: Optional[Dict] = None
 
     def axes_dict(self) -> Optional[Dict[str, int]]:
         return dict(self.mesh_axes) if self.mesh_axes is not None else None
@@ -113,6 +119,11 @@ class BCPlan:
         d["execution"] = (self.execution.to_json()
                           if self.execution is not None else None)
         d["notes"] = list(self.notes)
+        # Wire-schema compat: the occupancy side channel only appears on
+        # executed CSR plans — older clients (and the golden fixture)
+        # never see the key.
+        if d.get("occupancy") is None:
+            d.pop("occupancy", None)
         return d
 
     @classmethod
@@ -227,6 +238,10 @@ class BCPlanner:
         budget = n if query.mode == "exact" else min(hint, cap)
 
         cal = self.calibration
+        # est_iters feeds the frontier-occupancy-aware CSR rate (total
+        # frontier work amortizes over the sweep's iterations), so it is
+        # resolved *before* any regime call.
+        est_iters = self._est_iters(n, weighted, query.iters)
         backend = pins.backend
         if placement == "mesh":
             # the distributed step is dense-adjacency only
@@ -241,12 +256,14 @@ class BCPlanner:
             # to the minimum even though the COO executor has room.
             backend = Backend(choose_bc_regime(n, m, query.n_b or 64,
                                                fill=0.5, p=p,
-                                               calibration=cal)["regime"])
+                                               calibration=cal,
+                                               est_iters=est_iters)["regime"])
         n_b = query.n_b or min(n, choose_sample_batch(
             n, m, p=p, backend=backend.value,
             mem_bytes=self.mem_bytes, budget_hint=hint,
             calibration=cal))
-        regime = choose_bc_regime(n, m, n_b, fill=0.5, p=p, calibration=cal)
+        regime = choose_bc_regime(n, m, n_b, fill=0.5, p=p, calibration=cal,
+                                  est_iters=est_iters)
 
         # Kernel flag: an explicit pin wins; otherwise light up the Pallas
         # dense kernels only where the calibration *measured* them faster
@@ -258,11 +275,14 @@ class BCPlanner:
                               and cal.kernel_pays())
 
         # -- predictions (α-β cost layer, per device) -------------------
-        est_iters = self._est_iters(n, weighted, query.iters)
         if backend == Backend.DENSE:
             step_s = (regime["dense_kernel_s"]
                       if use_kernel and "dense_kernel_s" in regime
                       else regime["dense_s"])
+        elif backend == Backend.CSR:
+            # a calibrated regime may predate the CSR variant; price with
+            # the COO rate then (an upper bound — CSR only sheds work)
+            step_s = regime.get("csr_s", regime["coo_s"])
         else:
             step_s = regime["coo_s"]
         n_batches = -(-budget // n_b)
@@ -314,17 +334,19 @@ class BCPlanner:
             n_devices = len(jax.devices())
         if pins.placement == "single_host":
             return "single_host", None, notes
-        # A pinned COO backend has no distributed step — stay on one host,
-        # but never silently: the caller asked for a topology the backend
-        # cannot use, so the fallback is warned and carried on plan.notes.
-        if pins.backend == Backend.COO:
+        # A pinned COO/CSR backend has no distributed step — stay on one
+        # host, but never silently: the caller asked for a topology the
+        # backend cannot use, so the fallback is warned and carried on
+        # plan.notes.
+        if pins.backend in (Backend.COO, Backend.CSR):
             if pins.placement == "mesh":
-                raise ValueError("mesh placement supports only the dense "
-                                 "backend; the COO step is single-host only")
+                raise ValueError(
+                    f"mesh placement supports only the dense backend; the "
+                    f"{pins.backend.value.upper()} step is single-host only")
             if n_devices > 1:
-                note = (f"pinned backend 'coo' has no distributed step: "
-                        f"falling back to single_host placement despite "
-                        f"{n_devices} visible devices")
+                note = (f"pinned backend {pins.backend.value!r} has no "
+                        f"distributed step: falling back to single_host "
+                        f"placement despite {n_devices} visible devices")
                 notes.append(note)
                 warnings.warn(note, UserWarning, stacklevel=3)
             return "single_host", None, notes

@@ -121,12 +121,28 @@ def solve(g: Graph, query: Optional[BCQuery] = None, *, mesh=None,
     t0 = time.time()
     if query.mode == "exact":
         lam, n_swept = _run_exact(g, executor, sources, progress_cb)
-        return BCResult(lam=lam, plan=plan, query=query,
-                        seconds=time.time() - t0, n_swept=n_swept)
+        return BCResult(lam=lam, plan=_with_occupancy(plan, executor),
+                        query=query, seconds=time.time() - t0,
+                        n_swept=n_swept)
     res = _run_approx(g, query, executor, progress_cb)
-    return BCResult(lam=res.lam, plan=plan, query=query,
-                    seconds=time.time() - t0, n_swept=res.n_samples,
-                    approx=res)
+    return BCResult(lam=res.lam, plan=_with_occupancy(plan, executor),
+                    query=query, seconds=time.time() - t0,
+                    n_swept=res.n_samples, approx=res)
+
+
+def _with_occupancy(plan: BCPlan, executor: BatchExecutor) -> BCPlan:
+    """Attach the executor's frontier-occupancy trace to the executed plan.
+
+    Only the frontier-compacted CSR step collects a trace
+    (``SingleHostExecutor.occupancy_summary`` returns ``None``
+    otherwise), so dense/COO plans pass through *by identity* —
+    callers that cache the plan object (serving) keep their reference.
+    """
+    occ_fn = getattr(executor, "occupancy_summary", None)
+    occ = occ_fn() if occ_fn is not None else None
+    if occ is None:
+        return plan
+    return dataclasses.replace(plan, occupancy=occ)
 
 
 # ---------------------------------------------------------------- drivers

@@ -1,14 +1,18 @@
 """Adjacency containers usable inside jit (registered pytrees).
 
 ``DenseAdj`` wraps an ``(n, n)`` float matrix with ``inf`` off-structure.
-``CooAdj`` wraps padded edge arrays (static nnz). Both expose the two
-monoid relaxations and the SP-DAG child count; dispatch is static (python
-``isinstance``), so a jitted function specializes per format.
+``CooAdj`` wraps padded edge arrays (static nnz). ``CsrAdj`` carries the
+same arcs sorted both ways (by src and by dst) with row pointers, so its
+relaxations can compact the active frontier and touch only incident arc
+ranges. All expose the two monoid relaxations and the SP-DAG child count;
+dispatch is static (python ``isinstance``), so a jitted function
+specializes per format.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+import functools
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,19 +23,61 @@ from repro.core.monoids import Centpath, Multpath
 from repro.graphs.formats import Graph, coo_to_dense, pad_edges
 
 
+class RelaxStats(NamedTuple):
+    """Cheap side output of one frontier-compacted relaxation.
+
+    ``bucket`` is the capacity-ladder index that served the call
+    (``len(caps)`` = the full-edge-list fallback, -1 = the backend has no
+    compaction at all); ``overflow`` is 1 iff the fallback ran.
+    """
+
+    nnz: jax.Array  # int32 — active frontier entries seen by this relax
+    arcs: jax.Array  # int32 — arc slots the frontier's ranges needed
+    bucket: jax.Array  # int32 — ladder index chosen
+    overflow: jax.Array  # int32 — 1 iff the full-edge-list fallback ran
+
+
+def _gather_rows_scatter(src: jax.Array, dst: jax.Array, w: jax.Array,
+                         n: int, sources: jax.Array) -> jax.Array:
+    """Rows of the dense adjacency for ``sources``: (nb, n).
+
+    Scatters each arc's weight into row ``searchsorted(sorted(sources),
+    src)`` and reduces with one ``segment_min`` over (nb*n + 1) flat
+    segments (the +1 is the dump for arcs whose src is not sampled) —
+    O(E log nb + nb*n) instead of an (nb, E) boolean hit matrix. The
+    final gather maps sorted rows back to the callers' order (duplicate
+    sources all read the first occurrence's row).
+    """
+    nb = sources.shape[0]
+    ss = jnp.sort(sources)
+    rc = jnp.clip(jnp.searchsorted(ss, src), 0, nb - 1)
+    flat = jnp.where(ss[rc] == src, rc * n + dst, nb * n)
+    out = jax.ops.segment_min(w, flat, num_segments=nb * n + 1)
+    out = out[:-1].reshape(nb, n)
+    out = jnp.where(jnp.isfinite(out), out, jnp.inf)
+    return out[jnp.searchsorted(ss, sources)]
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DenseAdj:
     a: jax.Array  # (n, n), inf off-structure
     block: int = 512
     use_kernel: bool = False  # route dense relax through the Pallas kernels
+    # Transpose hoisted out of the relax loop: computed once at build and
+    # carried as a pytree leaf, so jitted relax_cp never re-transposes.
+    at: Optional[jax.Array] = None
+
+    def __post_init__(self):
+        if self.at is None:
+            self.at = self.a.T
 
     def tree_flatten(self):
-        return (self.a,), (self.block, self.use_kernel)
+        return (self.a, self.at), (self.block, self.use_kernel)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], *aux)
+        return cls(children[0], aux[0], aux[1], children[1])
 
     @property
     def n(self) -> int:
@@ -52,9 +98,9 @@ class DenseAdj:
         if self.use_kernel:
             from repro.kernels import ops as kops
 
-            w, p, c = kops.centpath_matmul(F.w, F.p, self.a.T)
+            w, p, c = kops.centpath_matmul(F.w, F.p, self.at)
             return Centpath(w, p, c)
-        return monoids.centpath_relax_dense(F, self.a.T, block=self.block)
+        return monoids.centpath_relax_dense(F, self.at, block=self.block)
 
     def count_sp_children(self, Tw: jax.Array) -> jax.Array:
         return monoids.count_sp_children_dense(Tw, self.a, block=self.block)
@@ -67,31 +113,21 @@ class CooAdj:
     dst: jax.Array  # (E,) int32
     w: jax.Array  # (E,) float32, padding = inf
     n_static: int
-    row_w: jax.Array  # (n,) unused placeholder for row gather; see gather_rows
 
     def tree_flatten(self):
-        return (self.src, self.dst, self.w, self.row_w), (self.n_static,)
+        return (self.src, self.dst, self.w), (self.n_static,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], children[2], aux[0], children[3])
+        return cls(children[0], children[1], children[2], aux[0])
 
     @property
     def n(self) -> int:
         return self.n_static
 
     def gather_rows(self, sources: jax.Array) -> jax.Array:
-        """Rows of the dense adjacency for the given sources: (nb, n).
-
-        One scatter-min per batch: for arcs with src in ``sources`` place w.
-        """
-        nb = sources.shape[0]
-        # match arcs to batch rows: (nb, E) bool — memory O(nb*E), fine for
-        # the batch sizes used; chunked upstream for huge graphs.
-        hit = self.src[None, :] == sources[:, None]
-        cand = jnp.where(hit, self.w[None, :], jnp.inf)
-        out = jax.ops.segment_min(cand.T, self.dst, num_segments=self.n).T
-        return jnp.where(jnp.isfinite(out), out, jnp.inf)
+        return _gather_rows_scatter(self.src, self.dst, self.w, self.n,
+                                    sources)
 
     def relax_mp(self, F: Multpath) -> Multpath:
         return monoids.multpath_relax_coo(F, self.src, self.dst, self.w, self.n)
@@ -104,6 +140,127 @@ class CooAdj:
                                              self.n)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CsrAdj:
+    """Dual-sorted arc lists with frontier-compacted relaxations.
+
+    The same arcs are carried twice: sorted by src with row pointers
+    (``indptr``/``src``/``dst``/``w`` — the by-src arrays double as valid
+    COO for the overflow fallback) and sorted by dst (``indptr_in``/
+    ``src_in``/``w_in`` — the CSC side MFBr's backward action expands).
+    ``caps`` is the static power-of-two capacity ladder ``((vcap, ecap),
+    ...)``: each relax counts the *union-column* frontier (vertices
+    active in any batch row) and its incident arcs, picks the smallest
+    bucket that fits with ``lax.switch``, and falls back to the
+    full-edge-list COO relax when every bucket overflows — so results
+    never depend on the ladder, only the work does.
+    """
+
+    indptr: jax.Array  # (n+1,) int32 row pointers into the by-src arrays
+    src: jax.Array  # (E,) int32, sorted ascending
+    dst: jax.Array  # (E,) int32
+    w: jax.Array  # (E,) float32, padding = inf
+    indptr_in: jax.Array  # (n+1,) int32 row pointers into the by-dst arrays
+    src_in: jax.Array  # (E,) int32 — predecessor of each in-arc
+    w_in: jax.Array  # (E,) float32
+    n_static: int
+    caps: Tuple[Tuple[int, int], ...]
+
+    def tree_flatten(self):
+        return ((self.indptr, self.src, self.dst, self.w,
+                 self.indptr_in, self.src_in, self.w_in),
+                (self.n_static, self.caps))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, aux[0], aux[1])
+
+    @property
+    def n(self) -> int:
+        return self.n_static
+
+    def gather_rows(self, sources: jax.Array) -> jax.Array:
+        return _gather_rows_scatter(self.src, self.dst, self.w, self.n,
+                                    sources)
+
+    def _pick_bucket(self, mask: jax.Array, indptr: jax.Array):
+        """Count the union-column frontier and choose the smallest fitting
+        bucket. ``nnz`` is active *columns* (vertices live in any batch
+        row — what the compacting relaxes expand), ``arcs`` their
+        incident arc total."""
+        deg = indptr[1:] - indptr[:-1]
+        colmask = jnp.any(mask, axis=0)
+        nnz = jnp.sum(colmask.astype(jnp.int32))
+        arcs = jnp.sum(jnp.where(colmask, deg, 0)).astype(jnp.int32)
+        bucket = jnp.int32(len(self.caps))
+        for i in reversed(range(len(self.caps))):
+            vcap, ecap = self.caps[i]
+            fits = (nnz <= vcap) & (arcs <= ecap)
+            bucket = jnp.where(fits, jnp.int32(i), bucket)
+        return nnz, arcs, bucket
+
+    def relax_mp_stats(self, F: Multpath) -> Tuple[Multpath, RelaxStats]:
+        nnz, arcs, bucket = self._pick_bucket(jnp.isfinite(F.w), self.indptr)
+        branches = [functools.partial(
+            monoids.multpath_relax_csr, indptr=self.indptr, dst=self.dst,
+            w=self.w, n=self.n, vcap=v, ecap=e) for v, e in self.caps]
+        branches.append(lambda Fb: monoids.multpath_relax_coo(
+            Fb, self.src, self.dst, self.w, self.n))
+        out = jax.lax.switch(bucket, branches, F)
+        overflow = (bucket == len(self.caps)).astype(jnp.int32)
+        return out, RelaxStats(nnz, arcs, bucket, overflow)
+
+    def relax_cp_stats(self, F: Centpath) -> Tuple[Centpath, RelaxStats]:
+        nnz, arcs, bucket = self._pick_bucket(jnp.isfinite(F.w),
+                                              self.indptr_in)
+        branches = [functools.partial(
+            monoids.centpath_relax_csr, indptr_in=self.indptr_in,
+            src_in=self.src_in, w_in=self.w_in, n=self.n, vcap=v, ecap=e)
+            for v, e in self.caps]
+        branches.append(lambda Fb: monoids.centpath_relax_coo(
+            Fb, self.src, self.dst, self.w, self.n))
+        out = jax.lax.switch(bucket, branches, F)
+        overflow = (bucket == len(self.caps)).astype(jnp.int32)
+        return out, RelaxStats(nnz, arcs, bucket, overflow)
+
+    def relax_mp(self, F: Multpath) -> Multpath:
+        return self.relax_mp_stats(F)[0]
+
+    def relax_cp(self, F: Centpath) -> Centpath:
+        return self.relax_cp_stats(F)[0]
+
+    def count_sp_children(self, Tw: jax.Array) -> jax.Array:
+        return monoids.count_sp_children_coo(Tw, self.src, self.dst, self.w,
+                                             self.n)
+
+
+def frontier_caps(n_b: int, n: int, m: int) -> Tuple[Tuple[int, int], ...]:
+    """Power-of-two ``(vcap, ecap)`` escalation ladder for compaction.
+
+    ``vcap`` bounds the compacted union-frontier *columns* (vertices
+    active in any batch row), ``ecap`` their incident arc slots. A
+    compact relax costs ``n_b * ecap`` candidate work plus an O(n)
+    compaction, against ``n_b * m`` for the full COO fallback — so the
+    ladder's ecaps climb power-of-two from ~m/32 and stop short of
+    ``m``, letting the fallback absorb saturated frontiers (typically
+    the 1–3 mid-sweep iterations) while the compact buckets win the
+    launch and drain phases. ``vcap = n`` on every rung: column count
+    never overflows, only arc volume escalates.
+    """
+    full_e = max(m, 1)
+    caps = []
+    e = 2
+    while e < max(full_e // 32, 2):
+        e *= 2
+    while e < full_e and len(caps) < 4:
+        caps.append((int(n), int(e)))
+        e *= 4
+    if not caps:
+        caps.append((int(n), int(full_e)))
+    return tuple(caps)
+
+
 def dense_adj_from_graph(g: Graph, *, block: int = 512,
                          use_kernel: bool = False) -> DenseAdj:
     return DenseAdj(jnp.asarray(coo_to_dense(g)), block=block,
@@ -112,5 +269,32 @@ def dense_adj_from_graph(g: Graph, *, block: int = 512,
 
 def coo_adj_from_graph(g: Graph, *, pad_multiple: int = 128) -> CooAdj:
     src, dst, w = pad_edges(g, multiple=pad_multiple)
-    return CooAdj(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
-                  g.n, jnp.zeros((g.n,), jnp.float32))
+    return CooAdj(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w), g.n)
+
+
+def csr_adj_from_graph(g: Graph, *, n_b: int = 64,
+                       caps: Optional[Tuple[Tuple[int, int], ...]] = None,
+                       pad_multiple: int = 1) -> CsrAdj:
+    """Build the dual-sorted container on the host (stable sorts).
+
+    ``n_b`` sizes the default capacity ladder (it bounds the batch axis
+    of the frontiers the relaxes will see); pass explicit ``caps`` to
+    override — tests force escalation with caps like ``((1, 1),)``.
+    """
+    src, dst, w = pad_edges(g, multiple=pad_multiple)
+    order = np.argsort(src, kind="stable")
+    src_s, dst_s, w_s = src[order], dst[order], w[order]
+    indptr = np.zeros(g.n + 1, np.int32)
+    np.add.at(indptr, src_s + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    order_in = np.argsort(dst, kind="stable")
+    src_in, dst_in, w_in = src[order_in], dst[order_in], w[order_in]
+    indptr_in = np.zeros(g.n + 1, np.int32)
+    np.add.at(indptr_in, dst_in + 1, 1)
+    np.cumsum(indptr_in, out=indptr_in)
+    if caps is None:
+        caps = frontier_caps(n_b, g.n, int(src_s.shape[0]))
+    return CsrAdj(jnp.asarray(indptr), jnp.asarray(src_s),
+                  jnp.asarray(dst_s), jnp.asarray(w_s),
+                  jnp.asarray(indptr_in), jnp.asarray(src_in),
+                  jnp.asarray(w_in), g.n, tuple(caps))

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.core import mfbf as _mfbf
 from repro.core import mfbr as _mfbr
-from repro.core.adjacency import (CooAdj, DenseAdj, coo_adj_from_graph,
+from repro.core.adjacency import (CooAdj, CsrAdj, DenseAdj,
+                                  coo_adj_from_graph, csr_adj_from_graph,
                                   dense_adj_from_graph)
 from repro.core.monoids import INF
 from repro.graphs.formats import Graph
@@ -80,6 +81,39 @@ def mfbc_batch_moments(adj, sources: jax.Array, valid: jax.Array, *,
             jnp.sum(mask, axis=0).astype(jnp.int32))
 
 
+def _batch_contrib_traced(adj, sources: jax.Array, valid: jax.Array, *,
+                          max_iters_bf: int, max_iters_br: int):
+    """``_batch_contrib`` with the occupancy traces of both sweeps."""
+    nb = sources.shape[0]
+    Tw, Tm, tr_bf = _mfbf.mfbf(adj, sources, max_iters=max_iters_bf,
+                               trace=True)
+    rows = jnp.arange(nb)
+    Tw = Tw.at[rows, sources].set(INF)
+    Tm = Tm.at[rows, sources].set(1.0)
+    Zp, tr_br = _mfbr.mfbr(adj, Tw, Tm, max_iters=max_iters_br, trace=True)
+    mask = jnp.isfinite(Tw) & valid[:, None]
+    contrib = jnp.where(mask, Zp * Tm, 0.0)
+    return contrib, mask, tr_bf, tr_br
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters_bf", "max_iters_br"))
+def mfbc_batch_moments_traced(adj, sources: jax.Array, valid: jax.Array, *,
+                              max_iters_bf: int = 0, max_iters_br: int = 0):
+    """``mfbc_batch_moments`` plus the per-iteration occupancy traces.
+
+    Returns (S1, S2, n_reach, trace_bf, trace_br) where the traces are
+    ``repro.core.mfbf.SweepTrace`` tuples for the forward (MFBF) and
+    backward (MFBr) sweeps of this batch. Moment outputs are computed by
+    the same relaxation sequence as the untraced entry point — the trace
+    is a read-only side channel, so values are bitwise-unchanged.
+    """
+    contrib, mask, tr_bf, tr_br = _batch_contrib_traced(
+        adj, sources, valid, max_iters_bf=max_iters_bf,
+        max_iters_br=max_iters_br)
+    return (jnp.sum(contrib, axis=0), jnp.sum(contrib * contrib, axis=0),
+            jnp.sum(mask, axis=0).astype(jnp.int32), tr_bf, tr_br)
+
+
 @functools.partial(jax.jit, static_argnames=("n_slots", "iterate",
                                              "max_iters_bf", "max_iters_br"))
 def mfbc_batch_moments_segmented(adj, sources: jax.Array, valid: jax.Array,
@@ -118,8 +152,9 @@ def mfbc(g: Graph, *, n_b: Optional[int] = None, backend: str = "dense",
     Args:
       g: host COO graph (positive weights).
       n_b: batch size (paper's memory/time tradeoff). Default min(n, 64).
-      backend: "dense" (blocked tropical matmul / Pallas) or "coo"
-        (segment-op message passing).
+      backend: "dense" (blocked tropical matmul / Pallas), "coo"
+        (segment-op message passing) or "csr" (frontier-compacted
+        segment-op message passing).
       iterate: "while" | "fori" (static bound, for cost analysis).
       max_iters: static iteration bound for "fori" (default n-1).
       sources: optionally restrict to these sources (approximate BC).
@@ -149,6 +184,8 @@ def mfbc(g: Graph, *, n_b: Optional[int] = None, backend: str = "dense",
         adj = dense_adj_from_graph(g, block=block, use_kernel=use_kernel)
     elif backend == "coo":
         adj = coo_adj_from_graph(g)
+    elif backend == "csr":
+        adj = csr_adj_from_graph(g, n_b=n_b)
     else:
         raise ValueError(f"unknown backend {backend!r}")
 

@@ -18,23 +18,64 @@ vertices is clamped to 1 just before reciprocals are taken in MFBr.
 ``iterate`` selects ``lax.while_loop`` (dynamic trip count — production) or
 ``lax.fori_loop`` with a static bound (used by the dry-run/roofline so that
 ``cost_analysis`` sees the real per-iteration work).
+
+The while-loop condition reads an active count folded into the loop carry:
+``_step`` computes the next frontier's population from the ``keep`` mask it
+already materializes, so the cond never re-reduces the full ``(n_b, n)``
+frontier. ``F'`` is active exactly where ``keep`` holds, so the carried
+count is identical to ``jnp.any(_frontier_active(F'))`` and results are
+bitwise-unchanged.
+
+``trace=True`` additionally threads a :class:`SweepTrace` through the loop:
+per-iteration frontier nnz plus, for adjacencies with frontier compaction
+(``CsrAdj``), how many relax calls a compaction bucket served and how many
+overflowed to the full edge list.
 """
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.monoids import INF, Multpath, multpath_combine
 
+# Fixed-size per-iteration occupancy trace; iterations past the cap fold
+# into the last slot (so ``fnnz[min(iters, cap) - 1]`` is always the tail).
+TRACE_CAP = 64
+
+
+class SweepTrace(NamedTuple):
+    """Occupancy side-channel of one frontier sweep (MFBF or MFBr)."""
+
+    fnnz: jax.Array  # (TRACE_CAP,) int32 frontier nnz per iteration; -1 unused
+    iters: jax.Array  # int32 — iterations executed
+    overflows: jax.Array  # int32 — relax calls on the full-edge-list fallback
+    compact_hits: jax.Array  # int32 — relax calls served by a capacity bucket
+
+
+def empty_trace() -> SweepTrace:
+    return SweepTrace(jnp.full((TRACE_CAP,), -1, jnp.int32), jnp.int32(0),
+                      jnp.int32(0), jnp.int32(0))
+
 
 def _frontier_active(F: Multpath) -> jax.Array:
     return jnp.isfinite(F.w) & (F.m > 0)
 
 
-def _step(adj, T: Multpath, F: Multpath) -> Tuple[Multpath, Multpath]:
-    """One maximal-frontier relaxation: returns (T', F')."""
+def _relax_with_stats(adj, F: Multpath):
+    """(C, overflow, compact_hit) — zero stats for non-compacting formats."""
+    fn = getattr(adj, "relax_mp_stats", None)
+    if fn is None:
+        return adj.relax_mp(F), jnp.int32(0), jnp.int32(0)
+    C, st = fn(F)
+    hit = ((st.bucket >= 0) & (st.overflow == 0)).astype(jnp.int32)
+    return C, st.overflow, hit
+
+
+def _step(adj, T: Multpath, F: Multpath
+          ) -> Tuple[Multpath, Multpath, jax.Array]:
+    """One maximal-frontier relaxation: returns (T', F', |F' active|)."""
     C = adj.relax_mp(F)  # exactly-(j+1)-edge minimal paths from the frontier
     T_new = multpath_combine(T, C)
     # New frontier: candidates that match the (possibly improved) best
@@ -42,49 +83,75 @@ def _step(adj, T: Multpath, F: Multpath) -> Tuple[Multpath, Multpath]:
     # accumulate without double counting.
     keep = (C.w == T_new.w) & jnp.isfinite(C.w) & (C.m > 0)
     F_new = Multpath(jnp.where(keep, C.w, INF), jnp.where(keep, C.m, 0.0))
-    return T_new, F_new
+    return T_new, F_new, jnp.sum(keep.astype(jnp.int32))
 
 
-def mfbf(adj, sources: jax.Array, *, iterate: Union[str, Tuple[str, int]] = "while",
-         max_iters: int = 0) -> Tuple[jax.Array, jax.Array]:
+def mfbf(adj, sources: jax.Array, *,
+         iterate: Union[str, Tuple[str, int]] = "while",
+         max_iters: int = 0, trace: bool = False):
     """Run MFBF for one batch of sources.
 
     Args:
-      adj: DenseAdj or CooAdj.
+      adj: DenseAdj, CooAdj or CsrAdj.
       sources: (nb,) int32 vertex ids.
       iterate: "while" for a dynamic loop, "fori" for a static loop of
         ``max_iters`` iterations (must upper-bound the SP edge count).
       max_iters: static bound; also caps the while loop defensively
         (0 means n - 1).
+      trace: also return the :class:`SweepTrace` occupancy side output.
 
     Returns:
       (Tw, Tm): (nb, n) distances and multiplicities. Unreachable = (inf, 0).
+      With ``trace=True``: (Tw, Tm, SweepTrace).
     """
     n = adj.n
-    nb = sources.shape[0]
     bound = max_iters if max_iters > 0 else n - 1
     Tw0 = adj.gather_rows(sources)  # direct edges, (nb, n); paper line 1
     Tm0 = jnp.where(jnp.isfinite(Tw0), 1.0, 0.0).astype(Tw0.dtype)
     T0 = Multpath(Tw0, Tm0)
     F0 = T0  # paper line 2: initial frontier = exactly-1-edge paths
+    nact0 = jnp.sum(_frontier_active(F0).astype(jnp.int32))
+
+    if trace:
+
+        def cond(state):
+            return (state[3] > 0) & (state[2] < bound)
+
+        def body(state):
+            T, F, it, nact, tr = state
+            C, over, hit = _relax_with_stats(adj, F)
+            T_new = multpath_combine(T, C)
+            keep = (C.w == T_new.w) & jnp.isfinite(C.w) & (C.m > 0)
+            F_new = Multpath(jnp.where(keep, C.w, INF),
+                             jnp.where(keep, C.m, 0.0))
+            slot = jnp.minimum(it, TRACE_CAP - 1)
+            tr = SweepTrace(tr.fnnz.at[slot].set(nact), it + 1,
+                            tr.overflows + over, tr.compact_hits + hit)
+            return (T_new, F_new, it + 1,
+                    jnp.sum(keep.astype(jnp.int32)), tr)
+
+        T, _, _, _, tr = jax.lax.while_loop(
+            cond, body, (T0, F0, jnp.int32(0), nact0, empty_trace()))
+        return T.w, T.m, tr
 
     if iterate == "while":
 
         def cond(state):
-            _, F, it = state
-            return jnp.any(_frontier_active(F)) & (it < bound)
+            return (state[3] > 0) & (state[2] < bound)
 
         def body(state):
-            T, F, it = state
-            T, F = _step(adj, T, F)
-            return T, F, it + 1
+            T, F, it, _ = state
+            T, F, nact = _step(adj, T, F)
+            return T, F, it + 1, nact
 
-        T, _, _ = jax.lax.while_loop(cond, body, (T0, F0, jnp.int32(0)))
+        T, _, _, _ = jax.lax.while_loop(cond, body,
+                                        (T0, F0, jnp.int32(0), nact0))
     else:
 
         def body(_, state):
             T, F = state
-            return _step(adj, T, F)
+            T, F, _ = _step(adj, T, F)
+            return T, F
 
         T, _ = jax.lax.fori_loop(0, bound, body, (T0, F0))
 

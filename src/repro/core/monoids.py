@@ -21,6 +21,11 @@ Two relaxation regimes are provided for each action:
   This is the jnp oracle for the Pallas kernels in ``repro.kernels``.
 * ``*_relax_coo``    — edge-list relaxation via ``segment_min/max`` + a
   tie-masked ``segment_sum`` (the TPU-native sparse idiom).
+* ``*_relax_csr``    — frontier-compacted relaxation: the active entries
+  of ``F`` are compacted into a static-capacity slot buffer
+  (``jnp.nonzero(..., size=cap)``), only their incident CSR arc ranges
+  are expanded, and candidates are scattered with the same segment ops —
+  per-iteration work tracks the maximal frontier instead of E.
 
 Equality of float path weights is exact (paper assumes exact arithmetic;
 integer-valued float32 weights are exact up to 2**24).
@@ -256,3 +261,114 @@ def count_sp_children_coo(Tw: jax.Array, src: jax.Array, dst: jax.Array,
     hit = (cand == Tw[:, dst]) & jnp.isfinite(cand)
     return jax.ops.segment_sum(hit.astype(jnp.int32).T, src,
                                num_segments=n).T
+
+
+# ---------------------------------------------------------------------------
+# Frontier-compacted CSR regime: work tracks the maximal frontier.
+# ---------------------------------------------------------------------------
+
+
+def _compact_cols(mask: jax.Array, indptr: jax.Array, vcap: int):
+    """Compact the frontier's active *columns* into ``vcap`` slots.
+
+    mask: (nb, n) bool frontier occupancy. A column (vertex) is active
+    when any batch row holds it — the union frontier. Compacting columns
+    instead of (row, vertex) pairs keeps the batch axis contiguous, so
+    the relax below runs the same SIMD-friendly 2D segment ops as the
+    COO kernels, just over the frontier's incident arc set. Returns
+    (u, offs): per-slot vertex id and the inclusive cumsum of per-slot
+    arc degrees (``offs[-1]`` = total incident arcs). Slots past the
+    population carry degree 0, so they own no arc range.
+    """
+    n = mask.shape[1]
+    cols = jnp.nonzero(jnp.any(mask, axis=0), size=vcap, fill_value=n)[0]
+    valid = cols < n
+    u = jnp.where(valid, cols, 0).astype(jnp.int32)
+    deg = jnp.where(valid, indptr[u + 1] - indptr[u], 0)
+    offs = jnp.cumsum(deg)
+    return u, offs
+
+
+def _expand_edges(u: jax.Array, offs: jax.Array, indptr: jax.Array,
+                  ecap: int):
+    """Expand compacted slots into ``ecap`` load-balanced arc slots.
+
+    Owner assignment is a scatter of each populated slot's start offset
+    followed by a cumulative max — two linear passes over ``ecap``, no
+    per-arc binary search. Returns (owner, arc_id, live); dead slots
+    (``pos >= offs[-1]``) are masked.
+    """
+    vcap = u.shape[0]
+    pos = jnp.arange(ecap, dtype=offs.dtype)
+    starts = jnp.concatenate([jnp.zeros((1,), offs.dtype), offs[:-1]])
+    slots = jnp.arange(vcap, dtype=jnp.int32)
+    # Degree-0 slots share a start with their successor; dropping them
+    # keeps the cummax from handing their (empty) range to the wrong owner.
+    tgt = jnp.where(offs > starts, starts, ecap)
+    owner = jnp.zeros((ecap,), jnp.int32).at[tgt].max(slots, mode="drop")
+    j = jax.lax.cummax(owner)
+    live = pos < offs[-1]
+    eid = jnp.where(live, indptr[u[j]] + (pos - starts[j]), 0)
+    return j, eid.astype(jnp.int32), live
+
+
+def multpath_relax_csr(F: Multpath, indptr: jax.Array, dst: jax.Array,
+                       w: jax.Array, n: int, *, vcap: int, ecap: int
+                       ) -> Multpath:
+    """Frontier-compacted ``multpath_relax_coo`` over by-src CSR arcs.
+
+    Only arcs leaving the union frontier are touched: active columns
+    compact into ``vcap`` slots, their out-arc ranges into ``ecap`` arc
+    slots, and (nb, ecap) candidates scatter with the same batched 2D
+    segment ops as the COO kernel. Dead arc slots carry w = inf — the
+    COO kernel's own padding idiom — so they are monoid-inert. The
+    result is exactly ``multpath_relax_coo`` *provided* the frontier
+    fits — active columns ``<= vcap`` and incident arcs ``<= ecap`` —
+    which the caller guarantees by capacity-bucket selection
+    (``CsrAdj``): arcs from inactive columns hold F.w = inf in every
+    batch row and can never win a segment min.
+    """
+    mask = jnp.isfinite(F.w)
+    u, offs = _compact_cols(mask, indptr, vcap)
+    j, eid, live = _expand_edges(u, offs, indptr, ecap)
+    uj = u[j]
+    wa = jnp.where(live, w[eid], INF)
+    seg = jnp.where(live, dst[eid], 0)
+    cand = F.w[:, uj] + wa[None, :]  # (nb, ecap)
+    minw = jax.ops.segment_min(cand.T, seg, num_segments=n).T
+    tie = (cand == minw[:, seg]) & jnp.isfinite(cand)
+    m = jax.ops.segment_sum(jnp.where(tie, F.m[:, uj], 0.0).T, seg,
+                            num_segments=n).T
+    minw = jnp.where(m > 0, minw, INF)
+    return Multpath(minw, m)
+
+
+def centpath_relax_csr(F: Centpath, indptr_in: jax.Array, src_in: jax.Array,
+                       w_in: jax.Array, n: int, *, vcap: int, ecap: int
+                       ) -> Centpath:
+    """Frontier-compacted ``centpath_relax_coo`` over by-dst (CSC) arcs.
+
+    The active side of the Brandes action is the *child* (the arc's
+    dst): active child columns compact into slots, each child's in-arc
+    range expands, and (nb, ecap) candidates scatter to the predecessor
+    side with the batched 2D segment ops of the COO kernel. Equals
+    ``centpath_relax_coo`` under the same capacity proviso.
+    """
+    mask = jnp.isfinite(F.w)
+    u, offs = _compact_cols(mask, indptr_in, vcap)
+    j, eid, live = _expand_edges(u, offs, indptr_in, ecap)
+    uj = u[j]
+    wa = w_in[eid]
+    alive = live & jnp.isfinite(wa)  # padding arcs never contribute
+    seg = jnp.where(alive, src_in[eid], 0)
+    Fw = F.w[:, uj]
+    cand = jnp.where(alive[None, :] & jnp.isfinite(Fw),
+                     Fw - wa[None, :], -INF)  # (nb, ecap)
+    maxw = jax.ops.segment_max(cand.T, seg, num_segments=n).T
+    tie = (cand == maxw[:, seg]) & jnp.isfinite(cand)
+    p = jax.ops.segment_sum(jnp.where(tie, F.p[:, uj], 0.0).T, seg,
+                            num_segments=n).T
+    c = jax.ops.segment_sum(jnp.where(tie, 1.0, 0.0).T, seg,
+                            num_segments=n).T
+    maxw = jnp.where(c > 0, maxw, -INF)
+    return Centpath(maxw, p, c)

@@ -49,7 +49,7 @@ from repro.spgemm.cost_model import (Calibration, StepRates, relax_ops,
 
 #: (backend, use_kernel) pairs calibrated by default.
 DEFAULT_VARIANTS: Tuple[Tuple[str, bool], ...] = (
-    ("dense", False), ("dense", True), ("coo", False))
+    ("dense", False), ("dense", True), ("coo", False), ("csr", False))
 
 
 def _measure_step_seconds(g, backend: str, use_kernel: bool, nb: int,
@@ -89,8 +89,13 @@ def _fit_rates(backend: str, n: int, m: int, est_iters: int,
     throughput fit through the larger point.
     """
     (nb1, t1), (nb2, t2) = sorted(t_by_nb.items())[:2]
-    w1 = 2.0 * est_iters * relax_ops(backend, n, m, nb1)
-    w2 = 2.0 * est_iters * relax_ops(backend, n, m, nb2)
+    # est_iters is forwarded so the CSR variant's occupancy-amortized
+    # per-iteration work is priced with the same iteration heuristic at
+    # fit and predict time (dense/COO ignore it).
+    w1 = 2.0 * est_iters * relax_ops(backend, n, m, nb1,
+                                     est_iters=est_iters)
+    w2 = 2.0 * est_iters * relax_ops(backend, n, m, nb2,
+                                     est_iters=est_iters)
     if t2 > t1 > 0 and w2 > w1:
         rate = (w2 - w1) / (t2 - t1)
         overhead = max(0.0, t1 - w1 / rate)

@@ -180,27 +180,36 @@ def autotune(sizes: ProblemSizes, axes: Dict[str, int],
 def choose_bc_regime(n: int, m_edges: int, nb: int, fill: float,
                      *, vpu_ops: float = 3.9e12,
                      hbm_bw: float = 819e9, p: int = 256,
-                     calibration=None) -> Dict[str, float]:
-    """Dense-vs-COO relax regime choice (the paper's §7 observation that
+                     calibration=None,
+                     est_iters: Optional[int] = None) -> Dict[str, float]:
+    """Dense/COO/CSR relax regime choice (the paper's §7 observation that
     MFBC shines on dense frontiers, made quantitative for TPU).
 
     dense: work = 4·nb·n²/p VPU ops, traffic ≈ tile-model (compute-bound).
     coo:   work = 4·nb·m·fill/p ops but gather/segment traffic
            ≈ 24 bytes per (frontier-entry × edge) touch, memory-bound.
+    csr:   frontier-occupancy-aware — the compacting relax's sweep-total
+           work ``Σ_iter frontier_nnz·k̄ ≈ nb·m`` amortizes over
+           ``est_iters`` iterations plus an ``nb·n`` per-iteration floor
+           (``cost_model.relax_ops``); ``est_iters`` must be the same
+           heuristic the planner prices sweeps with.
 
     With a measured ``calibration`` (``cost_model.Calibration``), the
     analytic estimates are replaced by fitted per-relax seconds for
     every measured variant — including the Pallas-kernel dense route
-    (``dense_kernel_s``) — and the result carries ``calibrated: True``.
-    Note the calibrated COO estimate is fill-independent: the real COO
-    relax processes the full padded edge list every iteration (no
-    frontier compaction), so ``fill`` only shapes the analytic fallback.
+    (``dense_kernel_s``) and the frontier-compacted CSR rate
+    (``csr_s``, present only when that variant was measured) — and the
+    result carries ``calibrated: True``. Note the calibrated COO
+    estimate is fill-independent: the real COO relax processes the full
+    padded edge list every iteration (no frontier compaction), so
+    ``fill`` only shapes the analytic fallback.
 
     Returns per-iteration second estimates and the winner; the driver
     switches per iteration as the frontier fills (fill = fraction of
     active frontier entries).
     """
     out: Dict[str, float] = {}
+    csr_s: Optional[float] = None
     if calibration is not None and calibration.has("dense") \
             and calibration.has("coo"):
         dense_s = calibration.step_seconds("dense", n, m_edges, nb, p=p)
@@ -208,14 +217,26 @@ def choose_bc_regime(n: int, m_edges: int, nb: int, fill: float,
         if calibration.has("dense", use_kernel=True):
             out["dense_kernel_s"] = calibration.step_seconds(
                 "dense", n, m_edges, nb, p=p, use_kernel=True)
+        if calibration.has("csr"):
+            csr_s = calibration.step_seconds("csr", n, m_edges, nb, p=p,
+                                             est_iters=est_iters)
         out["calibrated"] = True
     else:
         dense_s = 4.0 * nb * n * n / (p * vpu_ops)
         coo_touch = nb * fill * m_edges / p
         coo_s = max(4.0 * coo_touch / vpu_ops, 24.0 * coo_touch / hbm_bw)
+        iters = max(int(est_iters or 1), 1)
+        # Matches cost_model.relax_ops("csr"): sweep-total nb·m amortized
+        # over est_iters plus the per-iteration (nb, n) compaction floor.
+        csr_touch = nb * (m_edges / iters + n) / p
+        csr_s = max(4.0 * csr_touch / vpu_ops, 24.0 * csr_touch / hbm_bw)
         out["calibrated"] = False
+    candidates = {"dense": dense_s, "coo": coo_s}
+    if csr_s is not None:
+        out["csr_s"] = csr_s
+        candidates["csr"] = csr_s
     out.update({"dense_s": dense_s, "coo_s": coo_s,
-                "regime": "dense" if dense_s <= coo_s else "coo",
+                "regime": min(candidates, key=candidates.get),
                 "crossover_fill": min(1.0, (n * n) / max(m_edges, 1)
                                       * (4.0 / vpu_ops)
                                       / max(4.0 / vpu_ops, 24.0 / hbm_bw))})

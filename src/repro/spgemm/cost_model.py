@@ -208,7 +208,7 @@ DEFAULT_CALIBRATION_PATH = "results/cost_calibration.json"
 CALIBRATION_VERSION = 1
 
 #: Execution variants the calibration prices (see ``variant_key``).
-STEP_VARIANTS = ("dense", "dense_kernel", "coo")
+STEP_VARIANTS = ("dense", "dense_kernel", "coo", "csr")
 
 
 def variant_key(backend: str, use_kernel: bool = False) -> str:
@@ -220,20 +220,33 @@ def variant_key(backend: str, use_kernel: bool = False) -> str:
 
 
 def relax_ops(backend: str, n: int, m_edges: int, nb: int,
-              *, p: int = 1, use_kernel: bool = False) -> float:
+              *, p: int = 1, use_kernel: bool = False,
+              est_iters: Optional[int] = None) -> float:
     """Work units of ONE relax iteration of one batch, per device.
 
     The unit the calibrated throughput is expressed in: dense relax
     touches every (source, vertex²) candidate (``4·nb·n²/p`` min-plus +
     tie updates, kernel or jnp fallback alike); the COO relax is
     segment ops over the *full* padded edge list every iteration
-    (``4·nb·m/p`` — the implementation does not compact frontiers, so
+    (``4·nb·m/p`` — that implementation does not compact frontiers, so
     work is fill-independent; the analytic model's ``fill`` knob only
     applies to the uncalibrated estimate).
+
+    The CSR relax compacts the maximal frontier, so its per-iteration
+    work is *occupancy-aware*: each (source, vertex) entry enters the
+    maximal frontier O(1) times per sweep, so the sweep's total
+    candidate work is ≈ ``nb·m`` — ``Σ_iter frontier_nnz·k̄`` — spread
+    over ``est_iters`` iterations, plus the per-iteration ``(nb, n)``
+    mask/compaction floor: ``4·nb·(m/est_iters + n)/p``. Callers that
+    price a whole sweep (W = 2·est_iters·relax_ops) must pass the same
+    ``est_iters`` the fit used, so the heuristic cancels.
     """
     backend = str(getattr(backend, "value", backend))
     if backend == "dense":
         return 4.0 * nb * n * n / max(p, 1)
+    if backend == "csr":
+        iters = max(int(est_iters or 1), 1)
+        return 4.0 * nb * (m_edges / iters + n) / max(p, 1)
     return 4.0 * nb * m_edges / max(p, 1)
 
 
@@ -271,11 +284,18 @@ class Calibration:
         return variant_key(backend, use_kernel) in self.rates
 
     def step_seconds(self, backend: str, n: int, m_edges: int, nb: int,
-                     *, p: int = 1, use_kernel: bool = False) -> float:
-        """Calibrated seconds of ONE relax iteration of one batch."""
+                     *, p: int = 1, use_kernel: bool = False,
+                     est_iters: Optional[int] = None) -> float:
+        """Calibrated seconds of ONE relax iteration of one batch.
+
+        ``est_iters`` only matters for the frontier-compacting CSR
+        variant (its per-iteration work amortizes the sweep, see
+        ``relax_ops``) and must match the value the fit used.
+        """
         r = self.rates[variant_key(backend, use_kernel)]
         return r.relax_seconds(relax_ops(backend, n, m_edges, nb, p=p,
-                                         use_kernel=use_kernel))
+                                         use_kernel=use_kernel,
+                                         est_iters=est_iters))
 
     def overhead_seconds(self, backend: str, use_kernel: bool = False
                          ) -> float:

@@ -48,7 +48,7 @@ def test_planner_single_host_on_one_device(small_graph):
     assert pl.placement == "single_host"
     assert pl.mesh_axes is None and pl.n_devices == 1
     assert pl.predicted_comm_bytes == 0.0  # no collectives on one host
-    assert pl.backend in ("dense", "coo") and pl.n_b >= 1
+    assert pl.backend in ("dense", "coo", "csr") and pl.n_b >= 1
 
 
 def test_planner_mesh_on_eight_devices(small_graph):
@@ -105,7 +105,7 @@ def test_plan_is_json_serializable(small_graph):
     d = json.loads(json.dumps(pl.to_json()))
     assert d["placement"] == "mesh"
     assert d["mesh_axes"] == {"pod": 2, "data": 2, "model": 2}
-    assert d["regime"]["regime"] in ("dense", "coo")
+    assert d["regime"]["regime"] in ("dense", "coo", "csr")
     assert "single_host" in pl.summary() or "mesh" in pl.summary()
 
 
@@ -118,9 +118,9 @@ def test_query_validation():
         BCQuery(rule="gaussian")
     with pytest.warns(DeprecationWarning):
         with pytest.raises(ValueError):
-            BCQuery(backend="csr")
+            BCQuery(backend="hyper")
     with pytest.raises(ValueError):
-        ExecutionConfig(backend="csr")
+        ExecutionConfig(backend="hyper")
     with pytest.raises(ValueError):
         ExecutionConfig(placement="cluster")
     with pytest.raises(ValueError, match="conflicting"):
@@ -154,13 +154,16 @@ def test_legacy_kwargs_shim_matches_execution_config(small_graph):
 
 
 def test_backend_registry():
-    assert set(registered_backends()) == {Backend.DENSE, Backend.COO}
+    assert set(registered_backends()) == {Backend.DENSE, Backend.COO,
+                                          Backend.CSR}
     assert backend_spec("dense").placements == ("single_host", "mesh")
     assert backend_spec(Backend.COO).placements == ("single_host",)
+    assert backend_spec("csr").placements == ("single_host",)
     assert backend_spec("dense").supports_kernel
     assert not backend_spec("coo").supports_kernel
+    assert not backend_spec("csr").supports_kernel
     with pytest.raises(ValueError):
-        backend_spec("csr")
+        backend_spec("hyper")
 
 
 # ------------------------------------------------------------- executors
@@ -410,7 +413,7 @@ def test_coo_dense_executor_parity_on_random_rmat(g, batch_seed):
     not guaranteed — rtol=1e-4/atol=1e-6, same as kernels/ref.py)."""
     nb = 8
     execs = {}
-    for be in ("dense", "coo"):
+    for be in ("dense", "coo", "csr"):
         pl = BCPlanner(calibration=None).plan(
             g, BCQuery(mode="approx", n_b=nb,
                        execution=ExecutionConfig(backend=be)),
@@ -421,17 +424,19 @@ def test_coo_dense_executor_parity_on_random_rmat(g, batch_seed):
     src = rng.integers(0, g.n, nb).astype(np.int32)
     val = np.ones(nb, bool)
     d1, d2, dn = execs["dense"].step(src, val)
-    c1, c2, cn = execs["coo"].step(src, val)
-    np.testing.assert_allclose(c1, d1, rtol=1e-4, atol=1e-6)
-    np.testing.assert_allclose(c2, d2, rtol=1e-4, atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(cn), np.asarray(dn))
+    for be in ("coo", "csr"):
+        c1, c2, cn = execs[be].step(src, val)
+        np.testing.assert_allclose(c1, d1, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(c2, d2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(cn), np.asarray(dn))
     # fused slotted variant: same tolerance, per slot
     sid = np.sort(rng.integers(0, 2, nb)).astype(np.int32)
     ds = execs["dense"].step_segmented(src, val, sid, 2)
-    cs = execs["coo"].step_segmented(src, val, sid, 2)
-    np.testing.assert_allclose(cs[0], ds[0], rtol=1e-4, atol=1e-6)
-    np.testing.assert_allclose(cs[1], ds[1], rtol=1e-4, atol=1e-5)
-    np.testing.assert_array_equal(np.asarray(cs[2]), np.asarray(ds[2]))
+    for be in ("coo", "csr"):
+        cs = execs[be].step_segmented(src, val, sid, 2)
+        np.testing.assert_allclose(cs[0], ds[0], rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(cs[1], ds[1], rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(cs[2]), np.asarray(ds[2]))
 
 
 def test_fused_equals_unfused_per_backend(small_graph):
@@ -441,7 +446,7 @@ def test_fused_equals_unfused_per_backend(small_graph):
     on BOTH executors' backends."""
     g, _ = small_graph
     rng = np.random.default_rng(3)
-    for be in ("dense", "coo"):
+    for be in ("dense", "coo", "csr"):
         pl = BCPlanner(calibration=None).plan(
             g, BCQuery(mode="approx", n_b=16,
                        execution=ExecutionConfig(backend=be)),
@@ -462,6 +467,75 @@ def test_fused_equals_unfused_per_backend(small_graph):
                                           np.asarray(u2)[0])
             np.testing.assert_array_equal(np.asarray(nr)[slot],
                                           np.asarray(un)[0])
+
+
+# --------------------------------------------- frontier-sparse CSR backend
+def test_csr_solve_attaches_occupancy_trace(small_graph):
+    """A pinned-CSR solve records the frontier-occupancy side channel on
+    the executed plan; dense/COO plans stay untouched (and pass through
+    solve by identity — see test_solve_reuses_prebuilt_executor)."""
+    g, ref = small_graph
+    q = BCQuery(mode="exact", n_b=16,
+                execution=ExecutionConfig(backend="csr"))
+    res = solve(g, q)
+    np.testing.assert_allclose(res.lam, ref, rtol=1e-4, atol=1e-6)
+    occ = res.plan.occupancy
+    assert occ is not None and occ["batches"] >= 1
+    assert occ["per_iter_bf"] and occ["relax_calls"] > 0
+    assert occ["fnnz_first"] >= occ["fnnz_last"]
+    assert 0.0 <= occ["hit_rate"] <= 1.0
+    # occupancy survives the JSON artifact round-trip
+    from repro.bc.planner import BCPlan
+    d = json.loads(json.dumps(res.plan.to_json()))
+    assert d["occupancy"] == occ
+    assert BCPlan.from_json(d).occupancy == occ
+    # dense plans (and old JSON records without the field) stay None
+    pl_dense = plan(g, BCQuery(mode="exact"), n_devices=1)
+    assert pl_dense.occupancy is None
+    old = pl_dense.to_json()
+    old.pop("occupancy", None)
+    assert BCPlan.from_json(old).occupancy is None
+
+
+def test_dense_relax_cp_transpose_is_hoisted(small_graph):
+    """Satellite 2: ``DenseAdj.relax_cp`` must use the prebuilt Aᵀ pytree
+    leaf — no per-call 2D transpose of the (n, n) adjacency may appear in
+    the traced program. (The monoid scan's 3D ``moveaxis`` over the
+    frontier stack is expected and allowed.)"""
+    import jax
+
+    from repro.core.adjacency import dense_adj_from_graph
+    from repro.core.mfbf import mfbf
+
+    g, _ = small_graph
+    adj = dense_adj_from_graph(g, block=64, use_kernel=False)
+    assert adj.at is not None
+    np.testing.assert_array_equal(np.asarray(adj.at), np.asarray(adj.a).T)
+
+    from repro.core import monoids
+
+    F = monoids.centpath_identity((4, g.n))
+    jaxpr = jax.make_jaxpr(adj.relax_cp)(F)
+
+    def _has_2d_transpose(jpr):
+        for eqn in jpr.eqns:
+            if eqn.primitive.name == "transpose":
+                perm = eqn.params.get("permutation")
+                if tuple(perm) == (1, 0):
+                    return True
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    if _has_2d_transpose(sub.jaxpr):
+                        return True
+        return False
+
+    assert not _has_2d_transpose(jaxpr.jaxpr), \
+        "relax_cp still transposes the adjacency per call"
+    # the hoisted transpose computes the same thing end to end
+    src = np.arange(4, dtype=np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(mfbf(adj, src)[0]),
+        np.asarray(mfbf(dense_adj_from_graph(g, block=64), src)[0]))
 
 
 # ------------------------------------------------------------ multi-device

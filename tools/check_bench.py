@@ -10,7 +10,9 @@ serving legs) fails CI instead of producing a hollow artifact.
   with per-leg plans. Plus the self-calibrated ``backends`` race: at
   least one recorded plan must have *executed* on the COO backend, the
   planner-routed ``auto`` leg must be calibrated and must not lose to
-  both pinned legs, COO must beat dense wall-clock, and every leg that
+  the pinned legs, COO must beat dense wall-clock, the frontier-sparse
+  CSR leg must beat pinned COO and carry a monotone-plausible
+  frontier-occupancy trace on its executed plan, and every leg that
   records a ``measured_seconds`` next to its plan must satisfy the
   ISSUE-6 drift gate ``|predicted_seconds − measured| / measured ≤ 2``.
   Plus the ``scaling`` record merged in by ``benchmarks/bc_scaling.py``:
@@ -60,13 +62,13 @@ def _check_plan(plan: dict, where: str) -> list:
 
 
 def _check_backends(bk) -> list:
-    """The calibrated COO fast-path gates (ISSUE 6 acceptance)."""
+    """The calibrated sparse fast-path gates (ISSUE 6 + ISSUE 9)."""
     if not bk:
         return ["approx: backends record missing (self-calibrated "
-                "dense-vs-COO race)"]
+                "dense/COO/CSR race)"]
     errors = []
-    legs = [l for l in ("dense", "coo", "auto") if l in bk]
-    for leg in ("dense", "coo", "auto"):
+    legs = [l for l in ("dense", "coo", "csr", "auto") if l in bk]
+    for leg in ("dense", "coo", "csr", "auto"):
         if leg not in bk:
             errors.append(f"approx.backends: {leg} leg missing")
     # (a) the COO fast path actually executed: >= 1 recorded plan ran
@@ -96,7 +98,8 @@ def _check_backends(bk) -> list:
         errors.append("approx.backends.auto: plan not calibrated — "
                       "results/cost_calibration.json was not picked up")
     best_pinned = min(bk["dense"]["measured_seconds"],
-                      bk["coo"]["measured_seconds"])
+                      bk["coo"]["measured_seconds"],
+                      bk["csr"]["measured_seconds"])
     if bk["auto"]["measured_seconds"] > 1.5 * best_pinned:
         errors.append(f"approx.backends: auto leg "
                       f"({bk['auto']['measured_seconds']:.3g}s) lost to the "
@@ -104,6 +107,30 @@ def _check_backends(bk) -> list:
     if bk.get("coo_speedup", 0) < 1.0:
         errors.append(f"approx.backends: COO did not beat dense wall-clock "
                       f"(speedup {bk.get('coo_speedup', 0):.2f}x < 1)")
+    # ISSUE 9: the frontier-sparse CSR step must beat the full-edge-list
+    # COO relax wall-clock, and its executed plan must carry a plausible
+    # frontier-occupancy trace (a maximal-frontier sweep starts with
+    # every seeded row active and drains — first-iteration nnz >= last).
+    if bk.get("csr_speedup", 0) < 1.0:
+        errors.append(f"approx.backends: CSR did not beat pinned COO "
+                      f"wall-clock (csr_speedup "
+                      f"{bk.get('csr_speedup', 0):.2f}x < 1)")
+    occ = bk["csr"].get("plan", {}).get("occupancy")
+    if not occ:
+        errors.append("approx.backends.csr: plan.occupancy trace missing")
+    else:
+        per_iter = occ.get("per_iter_bf") or []
+        if not per_iter:
+            errors.append("approx.backends.csr: occupancy.per_iter_bf "
+                          "empty — no frontier trace recorded")
+        if not occ.get("fnnz_first", 0) >= occ.get("fnnz_last", 0):
+            errors.append(
+                f"approx.backends.csr: occupancy not monotone-plausible "
+                f"(fnnz_first {occ.get('fnnz_first')} < fnnz_last "
+                f"{occ.get('fnnz_last')})")
+        if not occ.get("relax_calls", 0) > 0:
+            errors.append("approx.backends.csr: occupancy.relax_calls "
+                          "missing or zero")
     return errors
 
 
