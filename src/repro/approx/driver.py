@@ -106,6 +106,10 @@ class LambdaEstimator:
         self.s1 = np.zeros(n, dtype=np.float64)
         self.s2 = np.zeros(n, dtype=np.float64)
         self.tau = 0
+        # Epoch-by-epoch convergence trace: ``stopping_check`` appends
+        # (τ, max normalized halfwidth) at each boundary it tests, so
+        # serving can stream partial convergence to polling clients.
+        self.hw_history: list = []
 
     def update(self, s1_batch: np.ndarray, s2_batch: np.ndarray,
                n_valid: int) -> None:
@@ -269,6 +273,7 @@ def stopping_check(est: "LambdaEstimator", eps: float, topk: Optional[int],
     """
     delta_check = est.delta / (2.0 ** (check_index + 1))
     hw = est.halfwidth_normalized(delta=delta_check)
+    est.hw_history.append((int(est.tau), float(hw.max())))
     if hw.max() <= eps:
         return True, hw
     if topk is not None and est.tau >= 2:

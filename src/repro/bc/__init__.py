@@ -54,11 +54,15 @@ from repro.bc.query import TIER_DEADLINE_S, TIERS, BCQuery
 from repro.bc.refine import (ApproxCheckpoint, checkpoint_from,
                              resume_approx)
 from repro.bc.solve import BCResult, honest_converged, plan, solve
+from repro.core.metrics import (METRICS, MetricSpec, fuse_group, metric_spec,
+                                register_metric, registered_metrics)
 
 __all__ = [
     "BCQuery", "BCPlan", "BCPlanner", "BCResult",
     "Backend", "ExecutionConfig", "as_backend",
     "BackendSpec", "register_backend", "backend_spec", "registered_backends",
+    "MetricSpec", "register_metric", "metric_spec", "registered_metrics",
+    "METRICS", "fuse_group",
     "BatchExecutor", "SingleHostExecutor", "MeshExecutor", "build_executor",
     "plan", "solve", "honest_converged",
     "BatchAssembler", "FusedBatch", "scatter", "order_demand", "PACKS",

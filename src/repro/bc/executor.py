@@ -43,7 +43,10 @@ from repro.bc.config import Backend, as_backend
 from repro.bc.planner import BCPlan, bucket_sizes
 from repro.core.adjacency import (CsrAdj, coo_adj_from_graph,
                                   csr_adj_from_graph, dense_adj_from_graph)
-from repro.core.mfbc import (mfbc_batch, mfbc_batch_moments,
+from repro.core.metrics import components_graph, components_labels
+from repro.core.mfbc import (metric_batch_moments,
+                             metric_batch_moments_segmented, mfbc_batch,
+                             mfbc_batch_moments,
                              mfbc_batch_moments_segmented,
                              mfbc_batch_moments_traced)
 from repro.graphs.formats import Graph
@@ -124,11 +127,16 @@ class BatchExecutor(Protocol):
     buckets: Tuple[int, ...]  # padded shapes served (ascending, max = n_b)
     plan: BCPlan
 
-    def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
-        """Per-vertex (Σδ, Σδ², n_reach) over the batch's valid sources."""
+    def step(self, sources: np.ndarray, valid: np.ndarray, *,
+             metric: str = "betweenness", hops: int = 0) -> Moments:
+        """Per-vertex (Σδ, Σδ², n_reach) over the batch's valid sources.
+        ``metric`` selects the per-source contribution formula
+        (``core.metrics`` registry); the default is the original
+        betweenness path, byte-for-byte."""
         ...
 
-    def step_sum(self, sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
+    def step_sum(self, sources: np.ndarray, valid: np.ndarray, *,
+                 metric: str = "betweenness", hops: int = 0) -> np.ndarray:
         """Σδ only — the exact sweep's reduction, skipping the moments
         overhead (on the mesh: one n/p_model all-reduce instead of the
         3× stacked one). Built lazily, so approx-only callers never
@@ -136,17 +144,28 @@ class BatchExecutor(Protocol):
         ...
 
     def step_segmented(self, sources: np.ndarray, valid: np.ndarray,
-                       slot_ids: np.ndarray, n_slots: int) -> Moments:
+                       slot_ids: np.ndarray, n_slots: int, *,
+                       metrics=None, hops: int = 0) -> Moments:
         """Per-slot (Σδ, Σδ², n_reach), each ``(n_slots, n)`` — the fused
         cross-request batch: row tags ``slot_ids ∈ [0, n_slots)`` say
         which query each source belongs to. Slot j's statistics are
         bitwise what an unfused run of its rows (in the same order)
         would produce on the same executor. Batches are padded to the
-        smallest serving bucket, not ``n_b``."""
+        smallest serving bucket, not ``n_b``. ``metrics`` optionally
+        names each slot's metric (length ``n_slots``; ``None`` means all
+        betweenness) — the cross-metric fusion surface, restricted to
+        slots whose sweep structures match (``core.metrics.fuse_group``).
+        """
         ...
 
     def bucket_for(self, k: int) -> int:
         """The padded shape a k-source fused batch runs at."""
+        ...
+
+    def labels(self) -> np.ndarray:
+        """Fixed-point metric entry (components): (n,) float64 min-label
+        array over the zero-weight symmetrized structure, computed in
+        one call. Single-host only."""
         ...
 
 
@@ -228,21 +247,43 @@ class _ExecutorBase:
     def bucket_for(self, k: int) -> int:
         return _bucket_for(k, self.buckets, self.n_b)
 
-    def step(self, sources: np.ndarray, valid: np.ndarray) -> Moments:
+    def step(self, sources: np.ndarray, valid: np.ndarray, *,
+             metric: str = "betweenness", hops: int = 0) -> Moments:
         src, val = _pad_batch(sources, valid, self.n_b)
-        return self._moments(src, val)
+        if metric == "betweenness":
+            # the original path, byte-for-byte (including the CSR trace)
+            return self._moments(src, val)
+        return self._metric_moments(src, val, metric, hops)
 
-    def step_sum(self, sources: np.ndarray, valid: np.ndarray) -> np.ndarray:
+    def step_sum(self, sources: np.ndarray, valid: np.ndarray, *,
+                 metric: str = "betweenness", hops: int = 0) -> np.ndarray:
         src, val = _pad_batch(sources, valid, self.n_b)
-        return self._sum(src, val)
+        if metric == "betweenness":
+            return self._sum(src, val)
+        return self._metric_moments(src, val, metric, hops)[0]
 
     def step_segmented(self, sources: np.ndarray, valid: np.ndarray,
-                       slot_ids: np.ndarray, n_slots: int) -> Moments:
+                       slot_ids: np.ndarray, n_slots: int, *,
+                       metrics=None, hops: int = 0) -> Moments:
         bucket = self.bucket_for(np.asarray(sources).shape[0])
         n_seg = _slot_bucket(n_slots)  # pad the slot dim too (jit-static)
         src, val, sid = _pad_segmented(sources, valid, slot_ids, bucket,
                                        n_seg)
-        s1, s2, nr = self._segmented(src, val, sid, n_seg, bucket)
+        if metrics is None or all(m == "betweenness" for m in metrics):
+            s1, s2, nr = self._segmented(src, val, sid, n_seg, bucket)
+            return s1[:n_slots], s2[:n_slots], nr[:n_slots]
+        if len(metrics) != n_slots:
+            raise ValueError(f"metrics names {len(metrics)} slots, "
+                             f"batch has {n_slots}")
+        # static kinds tuple (first-appearance order) + per-row tags;
+        # padding rows tag kind 0 — they are valid=False and land in the
+        # dump segment regardless.
+        kinds = tuple(dict.fromkeys(metrics))
+        slot_kind = np.array([kinds.index(m) for m in metrics]
+                             + [0], np.int32)  # [-1] = the dump segment
+        mids = slot_kind[np.minimum(sid, len(metrics))]
+        s1, s2, nr = self._metric_segmented(src, val, sid, mids, kinds,
+                                            n_seg, bucket, hops)
         return s1[:n_slots], s2[:n_slots], nr[:n_slots]
 
     # -- compute hooks (padded inputs, full padded outputs) -------------
@@ -254,6 +295,23 @@ class _ExecutorBase:
 
     def _segmented(self, src, val, sid, n_seg: int, bucket: int) -> Moments:
         raise NotImplementedError
+
+    # -- metric-generic hooks (betweenness never routes through these) --
+    def _metric_moments(self, src, val, metric: str, hops: int) -> Moments:
+        raise NotImplementedError(
+            f"{type(self).__name__} runs betweenness only; metric "
+            f"{metric!r} sweeps are single-host")
+
+    def _metric_segmented(self, src, val, sid, mids, kinds, n_seg: int,
+                          bucket: int, hops: int) -> Moments:
+        raise NotImplementedError(
+            f"{type(self).__name__} runs betweenness only; metrics "
+            f"{kinds!r} fuse single-host")
+
+    def labels(self) -> np.ndarray:
+        raise NotImplementedError(
+            f"{type(self).__name__} has no fixed-point metric entry "
+            f"(components runs single-host)")
 
 
 class SingleHostExecutor(_ExecutorBase):
@@ -272,12 +330,17 @@ class SingleHostExecutor(_ExecutorBase):
         self.plan = plan
         self.n_b = plan.n_b
         self.buckets = plan.buckets or bucket_sizes(plan.n_b)
+        self._g = g
         self._adj = backend_spec(plan.backend).make_adjacency(g, plan)
         # Frontier-occupancy trace: collected only for the compacting
         # adjacency (the frontier-sparse engine's side channel); dense and
         # COO moments run the untraced jit path, byte-for-byte as before.
         self._trace = isinstance(self._adj, CsrAdj)
         self._occ: Dict[str, Any] = {}
+        # Lazy second adjacency for the components fixed point (the
+        # zero-weight symmetrized structure) — non-components callers
+        # never build it.
+        self._cc_adj = None
 
     def _record_occupancy(self, tr_bf, tr_br) -> None:
         def trim(tr):
@@ -341,6 +404,28 @@ class SingleHostExecutor(_ExecutorBase):
             n_slots=n_seg)
         return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
                 np.asarray(nr))
+
+    def _metric_moments(self, src, val, metric: str, hops: int) -> Moments:
+        mids = jnp.zeros(src.shape[0], jnp.int32)
+        s1, s2, nr = metric_batch_moments(
+            self._adj, jnp.asarray(src), jnp.asarray(val), mids,
+            kinds=(metric,), hops=int(hops))
+        return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
+                np.asarray(nr))
+
+    def _metric_segmented(self, src, val, sid, mids, kinds, n_seg: int,
+                          bucket: int, hops: int) -> Moments:
+        s1, s2, nr = metric_batch_moments_segmented(
+            self._adj, jnp.asarray(src), jnp.asarray(val), jnp.asarray(sid),
+            jnp.asarray(mids), kinds=kinds, n_slots=n_seg, hops=int(hops))
+        return (np.asarray(s1, np.float64), np.asarray(s2, np.float64),
+                np.asarray(nr))
+
+    def labels(self) -> np.ndarray:
+        if self._cc_adj is None:
+            self._cc_adj = backend_spec(self.plan.backend).make_adjacency(
+                components_graph(self._g), self.plan)
+        return np.asarray(components_labels(self._cc_adj), np.float64)
 
 
 class MeshExecutor(_ExecutorBase):

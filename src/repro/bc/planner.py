@@ -31,6 +31,7 @@ from repro.approx.driver import (adjacency_bytes, choose_sample_batch,
                                  state_bytes)
 from repro.approx.sampling import hoeffding_budget
 from repro.bc.config import Backend, ExecutionConfig
+from repro.core.metrics import metric_spec
 from repro.graphs.formats import Graph
 from repro.spgemm.autotune import choose_bc_regime
 from repro.spgemm.cost_model import (DEFAULT, Calibration, CostParams,
@@ -96,6 +97,10 @@ class BCPlan:
     regime: Dict[str, float]  # choose_bc_regime output (dense/coo/csr)
     buckets: Tuple[int, ...] = ()  # padded batch shapes the executor serves
     tier: Optional[str] = None  # latency tier of the request this plan sizes
+    # Metric this plan prices (MetricSpec registry): forward-only sweeps
+    # cost half of BC's forward+backward pair via ``spec.sweeps``.
+    metric: str = "betweenness"
+    hops: int = 0  # khop's bound; 0 for unbounded metrics
     # fully resolved typed execution choice (backend/use_kernel/placement
     # above are its flat mirrors, kept for JSON and legacy readers)
     execution: Optional[ExecutionConfig] = None
@@ -124,6 +129,12 @@ class BCPlan:
         # never see the key.
         if d.get("occupancy") is None:
             d.pop("occupancy", None)
+        # Same rule for the metric fields: default-metric plans keep the
+        # pre-metric wire schema byte-stable.
+        if d.get("metric") == "betweenness":
+            d.pop("metric", None)
+        if not d.get("hops"):
+            d.pop("hops", None)
         return d
 
     @classmethod
@@ -213,6 +224,7 @@ class BCPlanner:
         """
         n, m = g.n, g.m
         pins = query.execution or ExecutionConfig()
+        spec = metric_spec(query.metric)
         placement, axes, notes = self._placement(n, m, query, mesh, n_devices)
         p = 1
         if axes is not None:
@@ -242,6 +254,9 @@ class BCPlanner:
         # frontier work amortizes over the sweep's iterations), so it is
         # resolved *before* any regime call.
         est_iters = self._est_iters(n, weighted, query.iters)
+        if spec.bounded:
+            # a hop-bounded sweep runs exactly hops - 1 relax iterations
+            est_iters = max(1, min(est_iters, query.hops - 1))
         backend = pins.backend
         if placement == "mesh":
             # the distributed step is dense-adjacency only
@@ -286,6 +301,9 @@ class BCPlanner:
         else:
             step_s = regime["coo_s"]
         n_batches = -(-budget // n_b)
+        if spec.fixed_point:
+            # one whole-graph label fixed point, not per-source batches
+            n_batches = 1
         state_nnz = _WORD * n_b * n  # one (n_b, n) f32 state matrix
         if placement == "mesh":
             c = dict(axes).get("pod", 1)
@@ -293,8 +311,10 @@ class BCPlanner:
             comm_per_iter = 3.0 * state_nnz / max(math.sqrt(p / c), 1.0)
         else:
             comm_per_iter = 0.0
-        # MFBF + MFBr ≈ 2 sweeps of est_iters relaxations per batch
-        iters_total = 2 * est_iters * n_batches
+        # spec.sweeps relax sweeps of est_iters relaxations per batch:
+        # MFBF + MFBr = 2 for betweenness, 1 for forward-only metrics —
+        # the plan JSON records the metric next to this pricing.
+        iters_total = spec.sweeps * est_iters * n_batches
         comm_bytes = comm_per_iter * iters_total
         # Calibrated fixed per-batch overhead (one device call per batch):
         # dispatch + host sync, the α of the measured α-β fit.
@@ -317,13 +337,32 @@ class BCPlanner:
             predicted_comm_bytes=float(comm_bytes),
             predicted_seconds=float(seconds), predicted_mem_bytes=float(mem),
             regime=regime, buckets=bucket_sizes(int(n_b)),
-            tier=query.tier, execution=execution, notes=tuple(notes))
+            tier=query.tier, metric=query.metric, hops=int(query.hops),
+            execution=execution, notes=tuple(notes))
 
     # ------------------------------------------------------------------
     def _placement(self, n: int, m: int, query, mesh,
                    n_devices: Optional[int]):
         notes: List[str] = []
         pins = query.execution or ExecutionConfig()
+        # Only betweenness has a distributed (Theorem 5.1) moments step;
+        # sibling metrics run their sweeps single-host — never silently
+        # when a topology was visible.
+        if query.metric != "betweenness":
+            if mesh is not None or pins.placement == "mesh":
+                raise ValueError(
+                    f"mesh placement is betweenness-only; metric "
+                    f"{query.metric!r} has no distributed step")
+            if n_devices is None:
+                import jax
+
+                n_devices = len(jax.devices())
+            if n_devices > 1:
+                note = (f"metric {query.metric!r} has no distributed step: "
+                        f"planning single_host placement despite "
+                        f"{n_devices} visible devices")
+                notes.append(note)
+            return "single_host", None, notes
         if mesh is not None:
             axes = tuple(zip(mesh.axis_names, (int(s) for s in
                                                mesh.devices.shape)))
@@ -389,6 +428,7 @@ def plan_for_request(g: Graph, *, eps: float, delta: float,
                      rule: str = "normal", topk: Optional[int] = None,
                      max_samples: Optional[int] = None, seed: int = 0,
                      tier: Optional[str] = None,
+                     metric: str = "betweenness", hops: int = 0,
                      execution: Optional[ExecutionConfig] = None,
                      backend: Optional[str] = None, iters: int = 0,
                      mesh=None, n_devices: Optional[int] = None,
@@ -425,8 +465,12 @@ def plan_for_request(g: Graph, *, eps: float, delta: float,
             raise ValueError("plan_for_request got both execution= and a "
                              "conflicting legacy backend=")
         execution = (execution or ExecutionConfig()).resolve(backend=backend)
-    q = BCQuery(mode="approx", eps=eps, delta=delta, rule=rule, topk=topk,
+    # Fixed-point metrics (components) are exact by construction — the
+    # (ε, δ) contract degenerates to "the answer", so the query plans in
+    # exact mode while every sampled metric keeps the approx search.
+    mode = "exact" if metric_spec(metric).fixed_point else "approx"
+    q = BCQuery(mode=mode, eps=eps, delta=delta, rule=rule, topk=topk,
                 max_samples=max_samples, seed=seed, tier=tier,
-                execution=execution, iters=iters)
+                metric=metric, hops=hops, execution=execution, iters=iters)
     return (planner or _REQUEST_PLANNER).plan(g, q, mesh=mesh,
                                               n_devices=n_devices)

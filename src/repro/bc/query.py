@@ -32,6 +32,7 @@ import warnings
 from typing import Optional
 
 from repro.bc.config import Backend, ExecutionConfig
+from repro.core.metrics import metric_spec
 
 MODES = ("exact", "approx")
 RULES = ("bernstein", "normal")
@@ -60,6 +61,9 @@ class BCQuery:
     """
 
     mode: str = "exact"
+    # -- metric (MetricSpec registry, repro.core.metrics) ----------------
+    metric: str = "betweenness"
+    hops: int = 0  # khop's bound (edges); required >= 1 iff metric="khop"
     # -- approx accuracy / budget ---------------------------------------
     eps: float = 0.05
     delta: float = 0.1
@@ -90,6 +94,17 @@ class BCQuery:
         if self.strategy not in STRATEGIES:
             raise ValueError(f"strategy must be one of {STRATEGIES}, "
                              f"got {self.strategy!r}")
+        spec = metric_spec(self.metric)  # raises with the registered list
+        if spec.bounded:
+            if self.hops < 1:
+                raise ValueError(f"metric {self.metric!r} needs hops >= 1, "
+                                 f"got {self.hops}")
+        elif self.hops:
+            raise ValueError(f"hops only applies to hop-bounded metrics, "
+                             f"not {self.metric!r}")
+        if spec.fixed_point and self.mode != "exact":
+            raise ValueError(f"metric {self.metric!r} is a fixed point — "
+                             f"exact only, not mode={self.mode!r}")
         self._resolve_execution()
         if self.tier is not None and self.tier not in TIERS:
             raise ValueError(f"tier must be None or one of {TIERS}, "

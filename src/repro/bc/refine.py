@@ -101,7 +101,8 @@ def checkpoint_from(est: LambdaEstimator, sampler: AdaptiveSampler,
 def resume_approx(executor: BatchExecutor, ckpt: ApproxCheckpoint, *,
                   eps: float, delta: Optional[float] = None,
                   topk: Optional[int] = None,
-                  max_samples: Optional[int] = None
+                  max_samples: Optional[int] = None,
+                  metric: str = "betweenness", hops: int = 0
                   ) -> Tuple[ApproxResult, ApproxCheckpoint]:
     """Continue a checkpointed run to a tighter ε; returns (result, ckpt).
 
@@ -143,7 +144,11 @@ def resume_approx(executor: BatchExecutor, ckpt: ApproxCheckpoint, *,
         sources = sampler.draw(tau_e)
         for lo in range(0, tau_e, ckpt.n_b):
             chunk = sources[lo:lo + ckpt.n_b]
-            s1, s2, _ = executor.step(chunk, np.ones(chunk.shape[0], bool))
+            # metric/hops must match the checkpointed run's — the sums
+            # being resumed are per-metric contributions (the cache keys
+            # entries per metric, so a refine never crosses metrics).
+            s1, s2, _ = executor.step(chunk, np.ones(chunk.shape[0], bool),
+                                      metric=metric, hops=hops)
             est.update(s1, s2, int(chunk.shape[0]))
         n_epochs = ei + 1
         done, _ = stopping_check(est, eps, topk, ei)

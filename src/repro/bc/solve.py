@@ -31,6 +31,7 @@ from repro.approx.driver import (ApproxResult, LambdaEstimator,
 from repro.bc.executor import BatchExecutor, build_executor
 from repro.bc.planner import BCPlan, BCPlanner
 from repro.bc.query import BCQuery
+from repro.core.metrics import metric_spec
 from repro.graphs.formats import Graph
 
 _DEFAULT_PLANNER = BCPlanner()
@@ -119,8 +120,14 @@ def solve(g: Graph, query: Optional[BCQuery] = None, *, mesh=None,
     if executor is None:
         executor = build_executor(g, plan, mesh=mesh)
     t0 = time.time()
+    spec = metric_spec(query.metric)
+    if spec.fixed_point:
+        # components: one whole-graph label fixed point, no source sweep
+        lam = executor.labels()
+        return BCResult(lam=lam, plan=plan, query=query,
+                        seconds=time.time() - t0, n_swept=g.n)
     if query.mode == "exact":
-        lam, n_swept = _run_exact(g, executor, sources, progress_cb)
+        lam, n_swept = _run_exact(g, query, executor, sources, progress_cb)
         return BCResult(lam=lam, plan=_with_occupancy(plan, executor),
                         query=query, seconds=time.time() - t0,
                         n_swept=n_swept)
@@ -146,7 +153,8 @@ def _with_occupancy(plan: BCPlan, executor: BatchExecutor) -> BCPlan:
 
 
 # ---------------------------------------------------------------- drivers
-def _run_exact(g: Graph, ex: BatchExecutor, sources, progress_cb):
+def _run_exact(g: Graph, q: BCQuery, ex: BatchExecutor, sources,
+               progress_cb):
     all_sources = (np.arange(g.n, dtype=np.int32) if sources is None
                    else np.asarray(sources, np.int32))
     nb = ex.n_b
@@ -156,7 +164,8 @@ def _run_exact(g: Graph, ex: BatchExecutor, sources, progress_cb):
         chunk = all_sources[b * nb:(b + 1) * nb]
         # Σδ-only reduction: the sweep never needs Σδ², so skip the
         # moments overhead (3× stacked all-reduce on the mesh).
-        lam += ex.step_sum(chunk, np.ones(chunk.shape[0], bool))
+        lam += ex.step_sum(chunk, np.ones(chunk.shape[0], bool),
+                           metric=q.metric, hops=q.hops)
         if progress_cb is not None:
             progress_cb(b, n_batches, lam)
     return lam, int(all_sources.shape[0])
@@ -168,7 +177,7 @@ def _run_approx(g: Graph, q: BCQuery, ex: BatchExecutor,
     est = LambdaEstimator(n, q.eps, q.delta, q.rule)
 
     def run_batch(b: S.SampleBatch) -> None:
-        s1, s2, _ = ex.step(b.sources, b.valid)
+        s1, s2, _ = ex.step(b.sources, b.valid, metric=q.metric, hops=q.hops)
         est.update(s1, s2, b.n_valid)
 
     if q.strategy == "uniform":

@@ -2,7 +2,11 @@
 from repro.core.adjacency import (CooAdj, DenseAdj, coo_adj_from_graph,
                                   dense_adj_from_graph)
 from repro.core.bfs_bc import bfs_bc
-from repro.core.brandes_ref import brandes_bc
+from repro.core.brandes_ref import (brandes_bc, cc_ref, closeness_ref,
+                                    khop_ref)
+from repro.core.metrics import (METRICS, MetricSpec, components_graph,
+                                components_labels, fuse_group, metric_spec,
+                                register_metric, registered_metrics)
 from repro.core.mfbc import mfbc, mfbc_batch
 from repro.core.mfbf import mfbf
 from repro.core.mfbr import mfbr
@@ -12,5 +16,8 @@ from repro.core.monoids import (Centpath, Multpath, centpath_combine,
 __all__ = [
     "CooAdj", "DenseAdj", "coo_adj_from_graph", "dense_adj_from_graph",
     "bfs_bc", "brandes_bc", "mfbc", "mfbc_batch", "mfbf", "mfbr",
+    "closeness_ref", "cc_ref", "khop_ref",
+    "MetricSpec", "register_metric", "metric_spec", "registered_metrics",
+    "METRICS", "fuse_group", "components_graph", "components_labels",
     "Centpath", "Multpath", "centpath_combine", "multpath_combine",
 ]

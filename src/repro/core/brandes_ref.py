@@ -96,3 +96,111 @@ def brandes_bc(g: Graph, sources: Optional[np.ndarray] = None,
     if return_aux:
         return lam, dists, sigmas
     return lam
+
+
+# ==========================================================================
+# Sibling-metric oracles (plain numpy BFS / Dijkstra / union-find) — the
+# ground truth for the MetricSpec sweeps in ``repro.core.metrics``.
+# ==========================================================================
+
+
+def _sssp(g: Graph, s: int, indptr, indices, weights, unweighted: bool
+          ) -> np.ndarray:
+    """Single-source distances (BFS or Dijkstra), (n,) float64."""
+    dist = np.full(g.n, np.inf)
+    dist[s] = 0.0
+    if unweighted:
+        frontier = [int(s)]
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for ei in range(indptr[u], indptr[u + 1]):
+                    v = int(indices[ei])
+                    if not np.isfinite(dist[v]):
+                        dist[v] = dist[u] + 1.0
+                        nxt.append(v)
+            frontier = nxt
+    else:
+        heap = [(0.0, int(s))]
+        while heap:
+            d, u = heapq.heappop(heap)
+            if d > dist[u]:
+                continue
+            for ei in range(indptr[u], indptr[u + 1]):
+                v = int(indices[ei])
+                nd = d + weights[ei]
+                if nd < dist[v]:
+                    dist[v] = nd
+                    heapq.heappush(heap, (float(nd), v))
+    return dist
+
+
+def closeness_ref(g: Graph, sources: Optional[np.ndarray] = None
+                  ) -> np.ndarray:
+    """Farness oracle: F(v) = Σ_s τ(s, v) over finite distances, s ≠ v.
+
+    The transpose of the usual closeness orientation — distances *into*
+    v from each source — matching the sweep convention where row s of T
+    holds τ(s, ·). Unreachable pairs contribute 0.
+    """
+    indptr, indices, weights = coo_to_csr(g)
+    unweighted = bool(np.all(weights == 1.0))
+    src_list = np.arange(g.n) if sources is None else np.asarray(sources)
+    far = np.zeros(g.n, dtype=np.float64)
+    for s in src_list:
+        dist = _sssp(g, int(s), indptr, indices, weights, unweighted)
+        dist[int(s)] = np.inf  # self-pair excluded, like d(s, s) = 0
+        finite = np.isfinite(dist)
+        far[finite] += dist[finite]
+    return far
+
+
+def khop_ref(g: Graph, sources: Optional[np.ndarray] = None, *,
+             hops: int = 1) -> np.ndarray:
+    """k-hop in-reachability oracle: R(v) = |{s : v within ``hops`` edges
+    of s, v ≠ s}| — hop-limited BFS on the arc structure (weights
+    ignored; hop counts are edge counts)."""
+    if hops < 1:
+        raise ValueError(f"khop requires hops >= 1, got {hops}")
+    indptr, indices, _ = coo_to_csr(g)
+    src_list = np.arange(g.n) if sources is None else np.asarray(sources)
+    reach = np.zeros(g.n, dtype=np.float64)
+    for s in src_list:
+        depth = np.full(g.n, -1, dtype=np.int64)
+        depth[int(s)] = 0
+        frontier = [int(s)]
+        for d in range(hops):
+            nxt = []
+            for u in frontier:
+                for ei in range(indptr[u], indptr[u + 1]):
+                    v = int(indices[ei])
+                    if depth[v] < 0:
+                        depth[v] = d + 1
+                        nxt.append(v)
+            frontier = nxt
+        hit = depth >= 0
+        hit[int(s)] = False
+        reach[hit] += 1.0
+    return reach
+
+
+def cc_ref(g: Graph) -> np.ndarray:
+    """Weakly-connected-components oracle: label(v) = min vertex id in
+    v's component (union-find over the undirected arc structure)."""
+    parent = np.arange(g.n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = int(parent[root])
+        while parent[x] != root:
+            parent[x], x = root, int(parent[x])
+        return root
+
+    for u, v in zip(g.src.tolist(), g.dst.tolist()):
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            # union by min id keeps the root the component minimum
+            lo, hi = (ru, rv) if ru < rv else (rv, ru)
+            parent[hi] = lo
+    return np.array([find(v) for v in range(g.n)], dtype=np.float64)

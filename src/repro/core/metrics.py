@@ -1,0 +1,184 @@
+"""Metric registry — the sweep structure of every supported graph metric.
+
+The paper closes with "our design methodology is readily extensible to
+other graph problems": every metric here is an alternate monoid sweep
+over the same relaxation engine (``adjacency.relax_mp`` — dense, COO and
+CSR backends all work by construction, since they implement the shared
+relax protocol).
+
+``MetricSpec`` is the metric analogue of ``repro.bc.executor.BackendSpec``:
+a frozen description of *how a metric sweeps* — how many α-β-priced relax
+sweeps a batch costs (the planner multiplies its per-iteration step model
+by this), whether the sampled estimator path applies, whether the forward
+sweep is hop-bounded, and which fused ``step_segmented`` group the metric
+may share a device batch with. The registry is the single source of truth
+for ``BCQuery`` validation, planner pricing, executor dispatch and the
+serving layer's cross-metric fusion grouping.
+
+Per-source contribution semantics (all share MFBF's maximal-frontier
+forward sweep and the ``t = s`` self-mask):
+
+* ``betweenness`` — δ_s(v) = ζ(s, v)·σ̄(s, v): forward + backward sweep
+  (Algorithm 3), the paper's own workload.
+* ``closeness``   — δ_s(v) = τ(s, v) where finite: the farness / SSSP
+  distance-profile aggregate, forward sweep only (the source's own
+  column is masked to ∞ and contributes 0, exactly like d(s, s) = 0).
+* ``khop``        — δ_s(v) = 1 iff v is within ``hops`` edges of s:
+  Lemma 4.1's invariant (after j iterations T holds all paths of
+  ≤ j+1 edges) makes this a *bounded* forward sweep of ``hops - 1``
+  iterations — finiteness of T is hop-bounded reachability.
+* ``components``  — weak connectivity as a min-label fixed point over
+  the zero-weight symmetrized arc structure: one (1, n) Multpath row
+  holding per-vertex labels, relaxed until no label improves. Exact by
+  construction (labels are integer-valued f32, exact to 2²⁴), so it
+  bypasses the estimator entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.monoids import INF, Multpath, multpath_combine
+from repro.graphs.formats import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """How one metric sweeps through the shared relaxation engine.
+
+    Attributes:
+      name: registry key (``BCQuery.metric`` values).
+      sweeps: α-β-priced relax sweeps per batch — the planner prices
+        ``iters_total = sweeps * est_iters * n_batches``, so forward-only
+        metrics cost half of BC's forward+backward pair.
+      sampled: the adaptive-sampling estimator path applies (per-source
+        contributions are i.i.d. samples of a per-vertex total).
+      needs_backward: the batch body runs MFBr after MFBF.
+      bounded: the forward sweep is bounded by ``BCQuery.hops``.
+      fixed_point: whole-graph label fixed point — exact only, computed
+        in one executor call (``BatchExecutor.labels``), never sampled
+        and never fused.
+      description: one line for docs / ``/v1/metrics`` surfaces.
+    """
+
+    name: str
+    sweeps: int
+    sampled: bool
+    needs_backward: bool = False
+    bounded: bool = False
+    fixed_point: bool = False
+    description: str = ""
+
+
+_METRIC_REGISTRY: Dict[str, MetricSpec] = {}
+
+
+def register_metric(spec: MetricSpec) -> MetricSpec:
+    """Register (or override) the spec for a metric name."""
+    _METRIC_REGISTRY[spec.name] = spec
+    return spec
+
+
+def metric_spec(name: str) -> MetricSpec:
+    try:
+        return _METRIC_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown metric {name!r} (registered: "
+            f"{', '.join(sorted(_METRIC_REGISTRY))})") from None
+
+
+def registered_metrics() -> Tuple[str, ...]:
+    return tuple(sorted(_METRIC_REGISTRY))
+
+
+def fuse_group(name: str, hops: int = 0) -> str:
+    """``step_segmented`` compatibility key: requests whose groups match
+    may share one fused device batch (identical forward-sweep structure);
+    mismatched groups fall back to separate drains.
+
+    Unbounded forward sweeps all share ``"sweep"`` (a closeness epoch and
+    a BC forward sweep run the same relax sequence — BC rows just also
+    feed the backward sweep). Hop-bounded sweeps group per bound, and
+    fixed-point metrics never fuse.
+    """
+    spec = metric_spec(name)
+    if spec.fixed_point:
+        return f"fixed_point:{name}"
+    if spec.bounded:
+        return f"bounded:{int(hops)}"
+    return "sweep"
+
+
+register_metric(MetricSpec(
+    name="betweenness", sweeps=2, sampled=True, needs_backward=True,
+    description="shortest-path betweenness λ(v) (Algorithm 3, "
+                "forward + backward sweep)"))
+register_metric(MetricSpec(
+    name="closeness", sweeps=1, sampled=True,
+    description="farness Σ_s τ(s, v) — the SSSP distance-profile "
+                "aggregate, forward sweep only"))
+register_metric(MetricSpec(
+    name="khop", sweeps=1, sampled=True, bounded=True,
+    description="k-hop in-reachability |{s : τ_hops(s, v) < ∞}| — "
+                "bounded forward sweep (Lemma 4.1)"))
+register_metric(MetricSpec(
+    name="components", sweeps=1, sampled=False, fixed_point=True,
+    description="weakly connected components as a min-label fixed point "
+                "over the zero-weight symmetrized structure"))
+
+METRICS = registered_metrics()
+
+
+# ------------------------------------------------------------ components
+def components_graph(g: Graph) -> Graph:
+    """The zero-weight symmetrized pseudo-graph the label sweep runs on.
+
+    Weak connectivity ignores direction and weight: symmetrize the arc
+    structure, then zero the weights so relaxation propagates labels
+    unchanged (label + 0 = label). Any backend adjacency factory accepts
+    the result — padding arcs stay ∞-weighted self loops, so they remain
+    algebraically invisible.
+    """
+    sym = g.symmetrize()
+    return Graph(sym.n, sym.src, sym.dst,
+                 np.zeros(sym.nnz, dtype=np.float32),
+                 directed=False, name=f"{g.name}+cc")
+
+
+@jax.jit
+def components_labels(adj) -> jax.Array:
+    """Min-label fixed point: (n,) f32 labels, one per weak component.
+
+    One (1, n) Multpath row holds the current labels (initially each
+    vertex's own id). Each relax computes, per vertex, the minimum label
+    over in-neighbors on the zero-weight structure; the frontier keeps
+    only improved entries, and the loop stops when nothing improves.
+    Labels are integer-valued f32 (exact to 2²⁴), so the fixed point is
+    bitwise the min vertex id of each component — identical to a host
+    union-find (``brandes_ref.cc_ref``).
+    """
+    n = adj.n
+    ids = jnp.arange(n, dtype=jnp.float32)[None, :]
+    T0 = Multpath(ids, jnp.ones_like(ids))
+
+    def cond(state):
+        return (state[2] > 0) & (state[3] < n)
+
+    def body(state):
+        T, F, _, it = state
+        C = adj.relax_mp(F)
+        T_new = multpath_combine(T, C)
+        improved = T_new.w < T.w
+        F_new = Multpath(jnp.where(improved, T_new.w, INF),
+                         jnp.where(improved, 1.0, 0.0))
+        return (T_new, F_new, jnp.sum(improved.astype(jnp.int32)),
+                it + 1)
+
+    T, _, _, _ = jax.lax.while_loop(
+        cond, body, (T0, T0, jnp.int32(1), jnp.int32(0)))
+    return T.w[0]

@@ -20,7 +20,7 @@ from repro.core import mfbr as _mfbr
 from repro.core.adjacency import (CooAdj, CsrAdj, DenseAdj,
                                   coo_adj_from_graph, csr_adj_from_graph,
                                   dense_adj_from_graph)
-from repro.core.monoids import INF
+from repro.core.monoids import INF, Multpath
 from repro.graphs.formats import Graph
 
 
@@ -137,6 +137,134 @@ def mfbc_batch_moments_segmented(adj, sources: jax.Array, valid: jax.Array,
     contrib, mask, _, _ = _batch_contrib(adj, sources, valid, iterate=iterate,
                                          max_iters_bf=max_iters_bf,
                                          max_iters_br=max_iters_br)
+    seg = functools.partial(jax.ops.segment_sum, segment_ids=slot_ids,
+                            num_segments=n_slots + 1)
+    return (seg(contrib)[:n_slots], seg(contrib * contrib)[:n_slots],
+            seg(mask.astype(jnp.int32))[:n_slots])
+
+
+# ==========================================================================
+# Metric-generic batch bodies (the MetricSpec sweep substrate).
+#
+# Every sampled metric shares MFBF's forward sweep and the t = s self-mask;
+# they differ only in the final elementwise contribution formula (and, for
+# betweenness, the extra MFBr backward sweep). ``kinds`` is the *static*
+# tuple of metric names present in the batch and ``metric_ids`` tags each
+# row with an index into it, so a fused batch mixes metrics row-wise while
+# the relax sequence stays one shared collective. With
+# ``kinds=("betweenness",)`` the computation is the same op sequence as
+# ``mfbc_batch_moments`` — the generic entry points never perturb the
+# default path, which keeps calling the original functions above.
+# ==========================================================================
+
+
+def _bounded_mfbf(adj, sources: jax.Array, *, hops: int):
+    """MFBF stopped after ``hops - 1`` iterations (Lemma 4.1: T is then
+    exactly the ≤ ``hops``-edge shortest paths; finiteness is hop-bounded
+    reachability). ``hops=1`` runs zero iterations — T is the direct-edge
+    row gather itself."""
+    Tw0 = adj.gather_rows(sources)
+    Tm0 = jnp.where(jnp.isfinite(Tw0), 1.0, 0.0).astype(Tw0.dtype)
+    T0 = Multpath(Tw0, Tm0)
+
+    def body(_, state):
+        T, F = state
+        T, F, _ = _mfbf._step(adj, T, F)
+        return T, F
+
+    T, _ = jax.lax.fori_loop(0, hops - 1, body, (T0, T0))
+    return T.w, T.m
+
+
+def _metric_contrib(adj, sources: jax.Array, valid: jax.Array,
+                    metric_ids: jax.Array, *, kinds, hops: int,
+                    iterate: str, max_iters_bf: int, max_iters_br: int):
+    """Metric-generic Algorithm 3 batch body: (contrib, mask).
+
+    kinds: static tuple of metric names; rows select theirs via
+    ``metric_ids``. Bounded (khop) and unbounded sweeps never mix — the
+    serving layer groups fusion by ``core.metrics.fuse_group``.
+    """
+    nb = sources.shape[0]
+    bounded = any(k == "khop" for k in kinds)
+    if bounded:
+        if not all(k == "khop" for k in kinds):
+            raise ValueError("hop-bounded sweeps cannot fuse with "
+                             f"unbounded metrics: {kinds}")
+        if hops < 1:
+            raise ValueError(f"khop requires hops >= 1, got {hops}")
+        Tw, Tm = _bounded_mfbf(adj, sources, hops=hops)
+    else:
+        Tw, Tm = _mfbf.mfbf(adj, sources, iterate=iterate,
+                            max_iters=max_iters_bf)
+    rows = jnp.arange(nb)
+    Tw = Tw.at[rows, sources].set(INF)
+    Tm = Tm.at[rows, sources].set(1.0)
+    mask = jnp.isfinite(Tw) & valid[:, None]
+    Zp = None
+    if any(k == "betweenness" for k in kinds):
+        Zp = _mfbr.mfbr(adj, Tw, Tm, iterate=iterate, max_iters=max_iters_br)
+
+    def one(kind):
+        if kind == "betweenness":
+            return Zp * Tm
+        if kind == "closeness":
+            return Tw  # farness: δ_s(v) = τ(s, v) where finite
+        if kind == "khop":
+            return jnp.ones_like(Tw)  # reach indicator within the bound
+        raise ValueError(f"metric {kind!r} has no sampled batch body")
+
+    contrib = one(kinds[0])
+    for i, kind in enumerate(kinds[1:], start=1):
+        contrib = jnp.where((metric_ids == i)[:, None], one(kind), contrib)
+    return jnp.where(mask, contrib, 0.0), mask
+
+
+@functools.partial(jax.jit, static_argnames=("kinds", "hops", "iterate",
+                                             "max_iters_bf", "max_iters_br"))
+def metric_batch_moments(adj, sources: jax.Array, valid: jax.Array,
+                         metric_ids: jax.Array, *, kinds, hops: int = 0,
+                         iterate: str = "while", max_iters_bf: int = 0,
+                         max_iters_br: int = 0
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """``mfbc_batch_moments`` generalized over per-row metrics.
+
+    Returns (S1, S2, n_reach) over the batch's valid sources, where each
+    row's contribution formula is selected by ``kinds[metric_ids[row]]``.
+    """
+    contrib, mask = _metric_contrib(adj, sources, valid, metric_ids,
+                                    kinds=kinds, hops=hops, iterate=iterate,
+                                    max_iters_bf=max_iters_bf,
+                                    max_iters_br=max_iters_br)
+    return (jnp.sum(contrib, axis=0), jnp.sum(contrib * contrib, axis=0),
+            jnp.sum(mask, axis=0).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("kinds", "hops", "n_slots",
+                                             "iterate", "max_iters_bf",
+                                             "max_iters_br"))
+def metric_batch_moments_segmented(adj, sources: jax.Array,
+                                   valid: jax.Array, slot_ids: jax.Array,
+                                   metric_ids: jax.Array, *, kinds,
+                                   n_slots: int, hops: int = 0,
+                                   iterate: str = "while",
+                                   max_iters_bf: int = 0,
+                                   max_iters_br: int = 0
+                                   ) -> Tuple[jax.Array, jax.Array,
+                                              jax.Array]:
+    """``mfbc_batch_moments_segmented`` generalized over per-row metrics.
+
+    The cross-metric fusion primitive: a closeness epoch and a BC forward
+    sweep share one relax collective, with each slot's rows selecting
+    their own contribution formula. Per-slot segment sums accumulate each
+    slot's rows in batch order, so slot j's statistics stay
+    bitwise-identical to an unfused run of the same rows under the same
+    ``kinds``-compatible sweep structure.
+    """
+    contrib, mask = _metric_contrib(adj, sources, valid, metric_ids,
+                                    kinds=kinds, hops=hops, iterate=iterate,
+                                    max_iters_bf=max_iters_bf,
+                                    max_iters_br=max_iters_br)
     seg = functools.partial(jax.ops.segment_sum, segment_ids=slot_ids,
                             num_segments=n_slots + 1)
     return (seg(contrib)[:n_slots], seg(contrib * contrib)[:n_slots],

@@ -2,7 +2,14 @@
 
   PYTHONPATH=src python -m repro.launch.bc_run --graph rmat --scale 8 \
       --degree 8 --nb 64 [--weighted] [--backend auto|dense|coo] \
-      [--ckpt-dir d]
+      [--ckpt-dir d] [--metric betweenness|closeness|khop|components] \
+      [--hops k]
+
+``--metric`` swaps the analytic computed by the sweep (the MetricSpec
+registry, ``repro.core.metrics``): closeness is the forward-only farness
+profile, ``khop`` (with ``--hops k``) hop-bounded reachability, and
+``components`` the min-label fixed point (exact mode only, no source
+sweep). ``--verify`` checks each against its own host oracle.
 
 Every mode is one call into the unified solver API: build a
 ``repro.bc.BCQuery``, let ``BCPlanner`` resolve backend / batch size /
@@ -38,10 +45,10 @@ import time
 
 import numpy as np
 
-from repro.bc import BCQuery, ExecutionConfig
+from repro.bc import METRICS, BCQuery, ExecutionConfig
 from repro.bc import plan as bc_plan
 from repro.bc import solve as bc_solve
-from repro.core import brandes_bc
+from repro.core import brandes_bc, cc_ref, closeness_ref, khop_ref
 from repro.graphs.generators import from_spec
 from repro.launch.mesh import mesh_from_spec
 from repro.train import checkpoint as ckpt_lib
@@ -54,8 +61,17 @@ def _query_from_args(args, mode: str, **kw) -> BCQuery:
     execution = ExecutionConfig(
         backend=None if args.backend == "auto" else args.backend,
         use_kernel=True if args.use_kernel else None)
-    return BCQuery(mode=mode, n_b=args.nb or None, execution=execution,
-                   seed=args.seed, iters=args.iters, **kw)
+    try:
+        return BCQuery(mode=mode, n_b=args.nb or None, execution=execution,
+                       seed=args.seed, iters=args.iters, metric=args.metric,
+                       hops=args.hops, **kw)
+    except ValueError as e:  # e.g. --metric khop without --hops
+        raise SystemExit(f"[bc] bad query: {e}")
+
+
+# --verify oracles per metric (components verifies against union-find)
+_REFS = {"betweenness": brandes_bc, "closeness": closeness_ref,
+         "components": cc_ref}
 
 
 def run_approx(args, g):
@@ -107,6 +123,16 @@ def run_approx(args, g):
         print(f"[bc]   v={int(v):6d}  {res.lam[v]:12.2f} ± "
               f"{res.halfwidth[v]:.2f}")
     if args.verify:
+        if args.metric != "betweenness":
+            # Non-BC metrics have their own normalization constants; the
+            # ε bound below is the BC one, so check ranking quality only.
+            ref = (khop_ref(g, hops=args.hops) if args.metric == "khop"
+                   else _REFS[args.metric](g))
+            top_ref = set(np.argsort(ref)[::-1][:args.topk].tolist())
+            prec = len(top_ref & set(ids.tolist())) / args.topk
+            print(f"[bc] vs {args.metric} oracle: top-{args.topk} "
+                  f"precision {prec:.2f}")
+            return res
         ref = brandes_bc(g)
         norm = g.n * max(g.n - 2, 1)
         err = float(np.abs(res.lam - ref).max()) / norm
@@ -136,6 +162,10 @@ def main(argv=None):
                     choices=["auto", "dense", "coo"],
                     help="relax backend (auto = planner's regime choice)")
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--metric", default="betweenness", choices=list(METRICS),
+                    help="graph metric to solve (MetricSpec registry)")
+    ap.add_argument("--hops", type=int, default=0,
+                    help="hop bound (edges) for --metric khop")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--verify", action="store_true",
                     help="check against the Brandes oracle (slow)")
@@ -217,9 +247,10 @@ def main(argv=None):
     print("[bc] top-5 central vertices:", list(zip(top.tolist(),
                                                    np.round(lam[top], 2))))
     if args.verify:
-        ref = brandes_bc(g)
+        ref = (khop_ref(g, hops=args.hops) if args.metric == "khop"
+               else _REFS[args.metric](g))
         np.testing.assert_allclose(lam, ref, rtol=1e-4, atol=1e-6)
-        print("[bc] verified against Brandes oracle")
+        print(f"[bc] verified against {args.metric} host oracle")
     return lam
 
 

@@ -74,8 +74,9 @@ import numpy as np
 from repro.bc import (PACKS, TIER_DEADLINE_S, TIERS, AdaptiveSampler,
                       ApproxCheckpoint, BatchAssembler, BatchExecutor,
                       BCPlan, BCQuery, ExecutionConfig, LambdaEstimator,
-                      build_executor, checkpoint_from, honest_converged,
-                      order_demand, plan_for_request, scatter)
+                      build_executor, checkpoint_from, fuse_group,
+                      honest_converged, metric_spec, order_demand,
+                      plan_for_request, scatter)
 from repro.bc import plan as bc_plan
 from repro.bc import stopping_check
 from repro.graphs.formats import Graph, graph_digest
@@ -105,11 +106,24 @@ class BCRequest:
     priority: str = "normal"  # latency tier, one of repro.bc.TIERS
     deadline_s: Optional[float] = None  # None = the tier's default
     tenant: str = "default"  # fair-share accounting key
+    metric: str = "betweenness"  # repro.bc.registered_metrics()
+    hops: int = 0  # hop bound, required (>=1) for bounded metrics only
 
     def __post_init__(self) -> None:
         if self.priority not in TIERS:
             raise ValueError(f"priority must be one of {TIERS}, "
                              f"got {self.priority!r}")
+        # Same metric validation as BCQuery, but at request construction
+        # — a bad metric must 400 at submit, not explode ticks later
+        # inside _plan_for_request.
+        spec = metric_spec(self.metric)
+        if spec.bounded:
+            if self.hops < 1:
+                raise ValueError(f"metric {self.metric!r} needs hops >= 1, "
+                                 f"got {self.hops}")
+        elif self.hops:
+            raise ValueError(f"hops only applies to hop-bounded metrics, "
+                             f"not {self.metric!r}")
         # rid and seed feed np.random.SeedSequence entropy (the per-job
         # stream is derived from (seed, rid)), which rejects negatives —
         # fail at construction, not ticks later inside _admit.
@@ -338,16 +352,17 @@ class BCService:
 
     def _plan_for_request(self, req: BCRequest) -> BCPlan:
         """Per-request configuration search, cached by what sizes (or
-        tags) it: requests sharing (graph, ε, δ, rule, cap, tier) share
-        one plan."""
+        tags) it: requests sharing (graph, ε, δ, rule, cap, tier,
+        metric, hops) share one plan."""
         key = (req.graph, req.eps, req.delta, req.rule, req.max_samples,
-               req.priority)
+               req.priority, req.metric, req.hops)
         if key not in self._request_plans:
             self._request_plans[key] = plan_for_request(
                 self.graphs[req.graph], eps=req.eps, delta=req.delta,
                 rule=req.rule, max_samples=req.max_samples,
                 tier=req.priority, execution=self.execution,
-                iters=self.iters, mesh=self.mesh)
+                iters=self.iters, mesh=self.mesh,
+                metric=req.metric, hops=req.hops)
         return self._request_plans[key]
 
     def plan_for(self, name: str):
@@ -368,6 +383,17 @@ class BCService:
         decisions off its ``predicted_seconds`` *before* submitting."""
         return (self._plan_for_request(req) if self.fuse
                 else self._graph_executor(req.graph).plan)
+
+    def progress(self, rid: int) -> Optional[List[Tuple[int, float]]]:
+        """Epoch-by-epoch ``(τ, max normalized halfwidth)`` history of an
+        *active* request — the streaming partial-results hook the
+        gateway's poll endpoint exposes while a job is still running.
+        Returns ``None`` when no active slot carries the rid (queued, or
+        already finished — the final answer supersedes partials)."""
+        for job in self.slots:
+            if job is not None and job.req.rid == rid:
+                return list(job.est.hw_history)
+        return None
 
     def digest(self, name: str) -> Optional[str]:
         """Content digest of a registered graph (the cache-key identity).
@@ -409,7 +435,42 @@ class BCService:
                     key=lambda k: (self.queue[k].deadline, self.queue[k].seq))
         return self.queue.pop(j)
 
+    def _finish_fixed_point(self, q: _Queued) -> None:
+        """Answer a fixed-point metric (components) at admission time.
+
+        A label fixed point is one whole-graph sweep with no sampling
+        epochs, so there is nothing for a slot to advance tick by tick —
+        running it inline keeps the slot pool for the queries that need
+        incremental progress. The labels land in the response's ``lam``
+        channel (value = component id), halfwidths are exactly zero and
+        ``converged`` is True by construction.
+        """
+        req = q.req
+        t0 = time.monotonic()
+        ex = self._graph_executor(req.graph)
+        pl = (self._plan_for_request(req) if self.fuse else ex.plan)
+        lam = ex.labels()
+        ids = np.argsort(lam)[::-1][:req.k]
+        now = time.monotonic()
+        self.finished.append(BCResponse(
+            rid=req.rid, graph=req.graph, topk=[int(v) for v in ids],
+            lam=lam[ids], halfwidth=np.zeros(ids.shape[0]),
+            n_samples=int(self.graphs[req.graph].n), n_epochs=1,
+            converged=True, seconds=now - t0, plan=pl,
+            tier=req.priority, latency_s=now - q.t_submit,
+            digest=self.digest(req.graph)))
+
     def _admit(self) -> None:
+        # Fixed-point metrics bypass the slot pool entirely — they are
+        # answered the tick they would have been admitted, in admission
+        # order, even when every slot is busy.
+        fp = [q for q in self.queue
+              if metric_spec(q.req.metric).fixed_point]
+        if fp:
+            self.queue = [q for q in self.queue
+                          if not metric_spec(q.req.metric).fixed_point]
+            for q in sorted(fp, key=lambda q: q.seq):
+                self._finish_fixed_point(q)
         for i in range(self.n_slots):
             if self.slots[i] is not None or not self.queue:
                 continue
@@ -472,7 +533,8 @@ class BCService:
         done = 0
         for lo in range(0, sources.shape[0], nb):
             chunk = sources[lo:lo + nb]
-            s1, s2, _ = ex.step(chunk, np.ones(chunk.shape[0], bool))
+            s1, s2, _ = ex.step(chunk, np.ones(chunk.shape[0], bool),
+                                metric=job.req.metric, hops=job.req.hops)
             job.est.update(s1, s2, int(chunk.shape[0]))
             done += int(chunk.shape[0])
         return done
@@ -480,11 +542,21 @@ class BCService:
     def _run_fused(self, name: str, ex: BatchExecutor,
                    demand: List[Tuple[int, np.ndarray]]) -> int:
         """Drain several slots' demand (already in the tick's scheduled
-        order) through fused batches."""
+        order) through fused batches.
+
+        Demand arrives pre-grouped by ``fuse_group`` — every slot here
+        shares one sweep structure (and hop bound), so a single
+        ``step_segmented`` collective serves mixed metrics: the
+        executor's per-row metric tags pick each slot's contribution
+        formula out of the shared (Tw, Tm) sweep.
+        """
         done = 0
         for fb in self._assembler(name).assemble(demand):
+            metrics = tuple(self.slots[key].req.metric for key in fb.slots)
+            hops = self.slots[fb.slots[0]].req.hops
             s1, s2, nr = ex.step_segmented(fb.sources, fb.valid,
-                                           fb.slot_ids, fb.n_slots)
+                                           fb.slot_ids, fb.n_slots,
+                                           metrics=metrics, hops=hops)
             for slot, (r1, r2, _, cnt) in scatter(fb, (s1, s2, nr)).items():
                 self.slots[slot].est.update(r1, r2, cnt)
             done += fb.n_valid
@@ -554,13 +626,18 @@ class BCService:
             sched.append((i, rows[:k]))
             self.slots[i].backlog = rows[k:]
             remaining -= k
-        # -- execute per graph (order preserved within each group) ------
+        # -- execute per (graph, fuse group): metrics sharing one sweep
+        # structure (betweenness + closeness; khop at one hop bound)
+        # fuse into a single collective, mismatched structures drain as
+        # separate batches (order preserved within each group) ------
         processed = 0
-        by_graph: Dict[str, List[Tuple[int, np.ndarray]]] = {}
+        by_group: Dict[Tuple[str, str], List[Tuple[int, np.ndarray]]] = {}
         for i, rows in sched:
-            by_graph.setdefault(self.slots[i].req.graph, []).append((i, rows))
-        for name, dem in by_graph.items():
-            ex = self._graph_executor(name)  # once per graph, not per slot
+            r = self.slots[i].req
+            by_group.setdefault((r.graph, fuse_group(r.metric, r.hops)),
+                                []).append((i, rows))
+        for (name, _), dem in by_group.items():
+            ex = self._graph_executor(name)  # once per group, not per slot
             lone = (len(dem) == 1
                     and self.slots[dem[0][0]].sampler.n_b == ex.n_b)
             if self.fuse and not lone:

@@ -40,9 +40,13 @@ HIT = "hit"        # cached ε ≤ requested ε — serve as-is, O(1)
 REFINE = "refine"  # cached ε > requested ε — serve stale + resume tighter
 MISS = "miss"      # no usable entry — full solve
 
-# (graph_digest, delta, k, rule, tier): everything that changes the
-# answer except ε, which the lookup orders instead of matching.
-Key = Tuple[str, float, int, str, str]
+# (graph_digest, delta, k, rule, tier, metric): everything that changes
+# the answer except ε, which the lookup orders instead of matching.
+# metric is part of the key — a closeness answer and a betweenness
+# answer at the same (digest, δ, k, rule, tier) are different analytics
+# and must never collide. Hop-bounded metrics fold the bound into the
+# metric component ("khop:3"), so distinct bounds are distinct keys too.
+Key = Tuple[str, float, int, str, str, str]
 
 
 @dataclasses.dataclass
@@ -84,15 +88,16 @@ class ResultCache:
 
     @staticmethod
     def key(digest: str, *, delta: float, k: int, rule: str,
-            tier: str) -> Key:
-        return (digest, float(delta), int(k), str(rule), str(tier))
+            tier: str, metric: str = "betweenness") -> Key:
+        return (digest, float(delta), int(k), str(rule), str(tier),
+                str(metric))
 
     def __len__(self) -> int:
         return len(self._entries)
 
     # ------------------------------------------------------------------
     def lookup(self, digest: Optional[str], *, eps: float, delta: float,
-               k: int, rule: str, tier: str
+               k: int, rule: str, tier: str, metric: str = "betweenness"
                ) -> Tuple[Optional[CacheEntry], str]:
         """Resolve one query against the cache: (entry, HIT|REFINE|MISS).
 
@@ -107,7 +112,8 @@ class ResultCache:
             with self._lock:
                 self.misses += 1
             return None, MISS
-        key = self.key(digest, delta=delta, k=k, rule=rule, tier=tier)
+        key = self.key(digest, delta=delta, k=k, rule=rule, tier=tier,
+                       metric=metric)
         with self._lock:
             entry = self._entries.get(key)
             if entry is None:
@@ -126,8 +132,8 @@ class ResultCache:
             return None, MISS
 
     def put(self, digest: Optional[str], *, eps: float, delta: float,
-            k: int, rule: str, tier: str, payload: Dict,
-            checkpoint: Optional[ApproxCheckpoint] = None
+            k: int, rule: str, tier: str, metric: str = "betweenness",
+            payload: Dict, checkpoint: Optional[ApproxCheckpoint] = None
             ) -> Optional[CacheEntry]:
         """Insert one finished answer; keeps the tightest ε per key.
 
@@ -138,7 +144,8 @@ class ResultCache:
         """
         if digest is None:
             return None
-        key = self.key(digest, delta=delta, k=k, rule=rule, tier=tier)
+        key = self.key(digest, delta=delta, k=k, rule=rule, tier=tier,
+                       metric=metric)
         with self._lock:
             existing = self._entries.get(key)
             if existing is not None and existing.eps <= eps:

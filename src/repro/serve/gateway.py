@@ -25,13 +25,22 @@ that make repeated centrality queries cheap at the edge:
 Endpoints (all JSON)::
 
     POST /v1/bc        {graph, eps?, delta?, k?, rule?, seed?,
-                        priority?, deadline_s?, tenant?}
+                        priority?, deadline_s?, tenant?,
+                        metric?, hops?}
                        -> 202 {rid, status} | 200 (cache) | 429 | 404
     GET  /v1/bc/{rid}  -> {rid, status: queued|running|partial|done,
-                           queue_depth, result?, refining?, latency_s?}
+                           queue_depth, result?, refining?, latency_s?,
+                           progress?}   (progress while running: the
+                           epoch-by-epoch CI-halfwidth history)
     GET  /v1/graphs    -> {graphs: [{name, n, m, digest, plan}]}
     GET  /v1/metrics   -> per-tier admit/reject/degrade/cache counters
-                          + cache stats + queue depths
+                          + cache stats + queue depths + the learned
+                          per-(metric, backend) admission correction
+
+``metric`` picks the analytic (any ``repro.bc.registered_metrics()``
+name — betweenness, closeness, khop + hops, components); every metric
+rides the same plan → admit → slot/fuse → cache path, and cache keys
+carry the metric so distinct analytics never collide.
 
 Threading: HTTP handler threads only touch the gateway under its lock
 (submit, poll, metrics — all O(pending)); a single worker thread owns
@@ -43,12 +52,14 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-from repro.bc import TIER_DEADLINE_S, TIERS, ApproxCheckpoint, resume_approx
+from repro.bc import (TIER_DEADLINE_S, TIERS, ApproxCheckpoint, metric_spec,
+                      resume_approx)
 from repro.serve.bc_service import BCRequest, BCResponse, BCService
 from repro.serve.cache import HIT, MISS, REFINE, ResultCache
 
@@ -131,6 +142,8 @@ class _GwRequest:
     delta: float = 0.1
     k: int = 10
     rule: str = "normal"
+    metric: str = "betweenness"
+    hops: int = 0
     result: Optional[Dict] = None  # BCResponse.to_json payload
     cached: bool = False
     refining: bool = False
@@ -174,6 +187,36 @@ class BCGateway:
         self._next_rid = 0
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
+        # Admission recalibration: EWMA of observed latency_s /
+        # predicted_seconds per (metric, backend), multiplied into each
+        # miss's predicted cost before the horizon test. The α-β model
+        # prices relative work well but its absolute scale drifts with
+        # the machine; a consistently slow solver inflates the factor
+        # above 1 and the horizon tightens to match reality.
+        self._correction: Dict[Tuple[str, str], float] = {}
+
+    _EWMA_ALPHA = 0.3  # smoothing for the admission correction factor
+
+    def _observe_latency(self, metric: str, backend: str, seconds: float,
+                         predicted: float) -> None:
+        """Fold one finished run's observed/predicted ratio into the
+        (metric, backend) admission correction EWMA. Callers hold the
+        gateway lock."""
+        if predicted <= 0 or seconds <= 0:
+            return
+        key = (metric, backend)
+        ratio = seconds / predicted
+        prev = self._correction.get(key)
+        self._correction[key] = (
+            ratio if prev is None
+            else (1.0 - self._EWMA_ALPHA) * prev + self._EWMA_ALPHA * ratio)
+
+    def _predict(self, req: BCRequest) -> float:
+        """Admission price: the plan's α-β prediction scaled by the
+        (metric, backend) correction learned from finished runs."""
+        plan = self.service.request_plan(req)
+        factor = self._correction.get((req.metric, plan.backend), 1.0)
+        return float(plan.predicted_seconds) * factor
 
     # ------------------------------------------------------------ submit
     def submit(self, payload: Dict) -> Dict:
@@ -206,13 +249,30 @@ class BCGateway:
         if eps <= 0 or not (0 < delta < 1) or k <= 0:
             return {"http_status": 400,
                     "error": "need eps > 0, 0 < delta < 1, k > 0"}
+        metric = payload.get("metric", "betweenness")
+        hops = int(payload.get("hops", 0))
+        try:
+            spec = metric_spec(metric)
+        except ValueError as e:
+            return {"http_status": 400, "error": str(e)}
+        if spec.bounded and hops < 1:
+            return {"http_status": 400,
+                    "error": f"metric {metric!r} needs hops >= 1"}
+        if not spec.bounded and hops:
+            return {"http_status": 400,
+                    "error": f"hops only applies to hop-bounded metrics, "
+                             f"not {metric!r}"}
+        # Metric component of the cache key: distinct metrics (and
+        # distinct hop bounds) must never share an entry.
+        cache_metric = f"{metric}:{hops}" if spec.bounded else metric
 
         with self._lock:
             self.metrics.bump(tier, "submitted")
             now = time.monotonic()
             digest = self.service.digest(graph)
             entry, kind = self.cache.lookup(
-                digest, eps=eps, delta=delta, k=k, rule=rule, tier=tier)
+                digest, eps=eps, delta=delta, k=k, rule=rule, tier=tier,
+                metric=cache_metric)
             if kind == REFINE and not self.config.refine:
                 entry, kind = None, MISS
 
@@ -235,7 +295,7 @@ class BCGateway:
             req = BCRequest(rid=rid, graph=graph, k=k, eps=eps,
                             delta=delta, rule=rule, seed=seed,
                             priority=tier, deadline_s=deadline_rel,
-                            tenant=tenant)
+                            tenant=tenant, metric=metric, hops=hops)
 
             if kind == REFINE:
                 # Looser entry answers now; the tighter run continues
@@ -245,15 +305,18 @@ class BCGateway:
                 gw = _GwRequest(rid=rid, tier=tier, eps=eps,
                                 status="partial", t_submit=now,
                                 deadline_rel=deadline_rel,
-                                result=entry.payload, refining=True)
+                                result=entry.payload, refining=True,
+                                metric=metric, hops=hops)
                 self._requests[rid] = gw
                 self._refines.append(_RefineJob(
                     rid=rid, req=req, checkpoint=entry.checkpoint,
                     digest=digest, t_submit=now))
                 return {"http_status": 202, **self._status_doc(gw)}
 
-            # MISS: price the request and test the admission horizon.
-            pred = float(self.service.request_plan(req).predicted_seconds)
+            # MISS: price the request (α-β prediction × the learned
+            # (metric, backend) correction) and test the admission
+            # horizon.
+            pred = self._predict(req)
             backlog = self._backlog_at(deadline_rel)
             if backlog + pred > self.config.horizon_s:
                 if self.config.overload == "reject":
@@ -274,8 +337,7 @@ class BCGateway:
                 if degraded > eps:
                     self.metrics.bump(tier, "degraded")
                     req = dataclasses.replace(req, eps=degraded)
-                    pred = float(
-                        self.service.request_plan(req).predicted_seconds)
+                    pred = self._predict(req)
                     gw_degraded_from: Optional[float] = eps
                     eps = degraded
                 else:
@@ -287,6 +349,7 @@ class BCGateway:
             gw = _GwRequest(rid=rid, tier=tier, eps=eps, status="queued",
                             t_submit=now, deadline_rel=deadline_rel,
                             predicted_s=pred, delta=delta, k=k, rule=rule,
+                            metric=metric, hops=hops,
                             degraded_from=gw_degraded_from)
             self._requests[rid] = gw
             self.service.submit(req)
@@ -319,6 +382,18 @@ class BCGateway:
             doc["degraded_from"] = gw.degraded_from
         if gw.status in ("queued", "running"):
             doc["predicted_s"] = round(gw.predicted_s, 4)
+        if gw.status == "running":
+            # Streaming partial results: the estimator's epoch-by-epoch
+            # (τ, max normalized halfwidth) history, so pollers watch a
+            # long run converge instead of a frozen "running". Early
+            # epochs can have an undefined (infinite) halfwidth — JSON
+            # has no inf, so those stream as null.
+            hist = self.service.progress(gw.rid)
+            if hist:
+                doc["progress"] = {"epochs": [
+                    {"tau": int(t),
+                     "halfwidth": (float(h) if math.isfinite(h) else None)}
+                    for t, h in hist]}
         if gw.refining:
             doc["refining"] = True
         if gw.result is not None:
@@ -349,6 +424,9 @@ class BCGateway:
         doc["cache"] = self.cache.stats()
         with self._lock:
             doc["queue_depth"] = self._queue_depth()
+            doc["admission_correction"] = {
+                f"{m}/{b}": round(v, 4)
+                for (m, b), v in sorted(self._correction.items())}
         return doc
 
     # ------------------------------------------------------ solver side
@@ -383,10 +461,26 @@ class BCGateway:
             gw.status = "done"
             gw.latency_s = time.monotonic() - gw.t_submit
             self.metrics.bump(gw.tier, "completed")
-            self.cache.put(resp.digest, eps=gw.eps, delta=gw.delta,
+            if resp.plan is not None:
+                self._observe_latency(gw.metric, resp.plan.backend,
+                                      float(resp.seconds),
+                                      float(resp.plan.predicted_seconds))
+            # Fixed-point answers (components) are exact: cache them at
+            # ε = 0 so every future ε for the key HITs outright.
+            put_eps = (0.0 if metric_spec(gw.metric).fixed_point
+                       else gw.eps)
+            self.cache.put(resp.digest, eps=put_eps, delta=gw.delta,
                            k=gw.k, rule=gw.rule, tier=gw.tier,
+                           metric=self._cache_metric(gw),
                            payload=payload, checkpoint=resp.checkpoint)
         self.service.finished.clear()
+
+    @staticmethod
+    def _cache_metric(gw: _GwRequest) -> str:
+        """The metric component of a registry entry's cache key (hop
+        bounds fold in — ``hops`` is nonzero iff the metric is
+        bounded)."""
+        return f"{gw.metric}:{gw.hops}" if gw.hops else gw.metric
 
     def _run_refine(self, job: _RefineJob) -> None:
         t0 = time.monotonic()
@@ -395,7 +489,8 @@ class BCGateway:
             ex = self.service.executor_for(job.req.graph)
             res, ckpt = resume_approx(
                 ex, job.checkpoint, eps=job.req.eps, delta=job.req.delta,
-                topk=job.req.k, max_samples=job.req.max_samples)
+                topk=job.req.k, max_samples=job.req.max_samples,
+                metric=job.req.metric, hops=job.req.hops)
             ids = res.topk(job.req.k)
             now = time.monotonic()
             resp = BCResponse(
@@ -410,6 +505,8 @@ class BCGateway:
             self.cache.put(job.digest, eps=job.req.eps,
                            delta=job.req.delta, k=job.req.k,
                            rule=job.req.rule, tier=job.req.priority,
+                           metric=(f"{job.req.metric}:{job.req.hops}"
+                                   if job.req.hops else job.req.metric),
                            payload=payload, checkpoint=ckpt)
             gw.result = payload
             gw.status = "done"

@@ -71,16 +71,43 @@ def test_refine_requires_checkpoint():
 
 
 def test_key_mismatches_miss():
-    """Any differing key component — digest, δ, k, rule, tier — misses:
-    those change the answer, not just its accuracy."""
+    """Any differing key component — digest, δ, k, rule, tier, metric —
+    misses: those change the answer, not just its accuracy."""
     c = ResultCache()
     c.put("d1", eps=0.1, payload={}, checkpoint=_ckpt_stub(), **_KW)
     assert c.lookup("d2", eps=0.1, **_KW)[1] == MISS  # digest
     for field, other in [("delta", 0.05), ("k", 5),
-                         ("rule", "bernstein"), ("tier", "batch")]:
+                         ("rule", "bernstein"), ("tier", "batch"),
+                         ("metric", "closeness")]:
         kw = {**_KW, field: other}
         assert c.lookup("d1", eps=0.1, **kw)[1] == MISS, field
     assert c.lookup(None, eps=0.1, **_KW)[1] == MISS  # digest-less graph
+
+
+def test_metric_keyed_entries_never_collide():
+    """Same (digest, ε, δ, k, rule, tier) under different metrics are
+    different analytics: each metric keeps its own entry, its own
+    tightest-ε rule and its own refine path."""
+    c = ResultCache()
+    for m in ("betweenness", "closeness", "khop:2", "khop:3"):
+        c.put("d1", eps=0.1, payload={"metric": m},
+              checkpoint=_ckpt_stub(), **_KW, metric=m)
+    assert len(c) == 4  # no shared slots across metrics (or hop bounds)
+    for m in ("betweenness", "closeness", "khop:2", "khop:3"):
+        entry, kind = c.lookup("d1", eps=0.1, **_KW, metric=m)
+        assert kind == HIT and entry.payload == {"metric": m}, m
+    # tightest-ε-wins holds per metric: a tight closeness put does not
+    # shadow (or get shadowed by) the betweenness entry
+    c.put("d1", eps=0.01, payload={"metric": "closeness", "tight": True},
+          checkpoint=_ckpt_stub(), **_KW, metric="closeness")
+    entry, kind = c.lookup("d1", eps=0.1, **_KW, metric="closeness")
+    assert kind == HIT and entry.payload.get("tight")
+    entry, kind = c.lookup("d1", eps=0.05, **_KW, metric="betweenness")
+    assert kind == REFINE  # betweenness still at ε=0.1, refines
+    # and the default-metric key is betweenness: omitting the kwarg
+    # resolves to the same entry
+    entry, kind = c.lookup("d1", eps=0.1, **_KW)
+    assert kind == HIT and entry.payload == {"metric": "betweenness"}
 
 
 def test_put_keeps_tightest_entry():

@@ -214,11 +214,126 @@ def test_graphs_and_metrics_endpoints():
 
         st, m = _get(base, "/v1/metrics")
         assert st == 200
-        assert set(m) == {"tiers", "totals", "cache", "queue_depth"}
+        assert set(m) == {"tiers", "totals", "cache", "queue_depth",
+                          "admission_correction"}
         assert m["cache"]["entries"] == 0
+        assert m["admission_correction"] == {}  # nothing observed yet
         assert set(m["queue_depth"]) == {"interactive", "normal", "batch"}
     finally:
         srv.close()
+
+
+# ----------------------------------------------------- metric-generic wire
+def test_metrics_through_the_wire_and_cache_isolation():
+    """One upload serves betweenness, closeness, khop and components
+    through the same POST endpoint; identical parameters under
+    different metrics never share a cache entry."""
+    srv = _server(horizon_s=100.0)
+    try:
+        base = srv.url
+        docs = {}
+        for payload in ({"graph": "web", "eps": 0.1, "seed": 3},
+                        {"graph": "web", "eps": 0.1, "seed": 3,
+                         "metric": "closeness"},
+                        {"graph": "web", "eps": 0.1, "seed": 3,
+                         "metric": "khop", "hops": 2},
+                        {"graph": "web", "metric": "components"}):
+            st, doc, _ = _post(base, payload)
+            assert st == 202, doc
+            key = (payload.get("metric", "betweenness"),
+                   payload.get("hops", 0))
+            docs[key] = _poll_done(base, doc["rid"])
+        results = {k: d["result"] for k, d in docs.items()}
+        lams = [tuple(r["lam"]) for r in results.values()]
+        assert len(set(lams)) == len(lams)  # four distinct analytics
+
+        # repeats hit their OWN per-metric entries, byte-identical
+        for payload, key in ((
+                {"graph": "web", "eps": 0.1, "seed": 3},
+                ("betweenness", 0)), (
+                {"graph": "web", "eps": 0.1, "seed": 3,
+                 "metric": "closeness"}, ("closeness", 0))):
+            st, doc, _ = _post(base, payload)
+            assert st == 200 and doc["cached"]
+            assert doc["result"] == results[key]
+
+        # components cached as exact (ε = 0): any tighter ε still HITs
+        st, doc, _ = _post(base, {"graph": "web", "metric": "components",
+                                  "eps": 0.001})
+        assert st == 200 and doc["cached"]
+        assert doc["result"] == results[("components", 0)]
+
+        # distinct hop bounds are distinct keys: hops=3 misses
+        st, doc, _ = _post(base, {"graph": "web", "eps": 0.1, "seed": 3,
+                                  "metric": "khop", "hops": 3})
+        assert st == 202, doc
+        assert _poll_done(base, doc["rid"])["result"] != \
+            results[("khop", 2)]
+
+        # bad metric / hops draw 400 at the door
+        assert _post(base, {"graph": "web", "metric": "nope"})[0] == 400
+        assert _post(base, {"graph": "web", "metric": "khop"})[0] == 400
+        assert _post(base, {"graph": "web", "hops": 2})[0] == 400
+    finally:
+        srv.close()
+
+
+def test_slow_solver_tightens_admission():
+    """The EWMA admission correction: after the gateway observes runs
+    slower than predicted, the same submission that admitted before is
+    priced past the horizon and refused."""
+    svc = BCService({"web": _graph()}, checkpoints=True)
+    pred = float(svc.request_plan(
+        BCRequest(rid=0, graph="web", eps=0.2)).predicted_seconds)
+    backend = svc.request_plan(
+        BCRequest(rid=0, graph="web", eps=0.2)).backend
+    gw = BCGateway(svc, GatewayConfig(horizon_s=pred * 10))
+    doc = gw.submit({"graph": "web", "eps": 0.2})
+    assert doc["http_status"] == 202  # uncorrected price fits the horizon
+
+    # solver measured 100x slower than the model's prediction
+    gw._observe_latency("betweenness", backend, seconds=pred * 100,
+                        predicted=pred)
+    doc = gw.submit({"graph": "web", "eps": 0.21})
+    assert doc["http_status"] == 429, doc  # corrected price trips the gate
+    m = gw.metrics_doc()
+    assert m["admission_correction"][f"betweenness/{backend}"] \
+        == pytest.approx(100.0)
+    # the correction is per-metric: closeness is still priced raw
+    doc = gw.submit({"graph": "web", "eps": 0.2, "metric": "closeness"})
+    assert doc["http_status"] == 202, doc
+
+
+def test_poll_streams_progress_history():
+    """While a job runs, GET /v1/bc/{rid} carries the estimator's
+    epoch-by-epoch (τ, halfwidth) history — the streaming partial
+    result — with a stable JSON shape."""
+    svc = BCService({"web": _graph()}, n_slots=1)
+    gw = BCGateway(svc, GatewayConfig(horizon_s=1000.0))
+    doc = gw.submit({"graph": "web", "eps": 0.004, "delta": 0.1})
+    assert doc["http_status"] == 202
+    rid = doc["rid"]
+    seen = None
+    for _ in range(200):
+        if not gw._work_once():  # one tick + finished-drain, inline
+            break
+        st = gw.get(rid)
+        if st["status"] == "running" and "progress" in st:
+            seen = st["progress"]
+            json.dumps(st)  # the whole doc must be wire-serializable
+            assert set(seen) == {"epochs"}
+            taus = [e["tau"] for e in seen["epochs"]]
+            assert taus == sorted(taus) and all(
+                isinstance(t, int) for t in taus)
+            for e in seen["epochs"]:
+                assert set(e) == {"tau", "halfwidth"}
+                assert e["halfwidth"] is None or (
+                    isinstance(e["halfwidth"], float)
+                    and e["halfwidth"] >= 0.0)
+    assert seen is not None, "no running poll carried progress"
+    gw.drain()
+    assert gw.get(rid)["status"] == "done"
+    assert "progress" not in gw.get(rid)  # final answer supersedes it
 
 
 def test_error_paths():

@@ -35,7 +35,12 @@ serving legs) fails CI instead of producing a hollow artifact.
   byte-identical payload, the looser-entry refine must flag
   ``refining=true`` and land bitwise-equal to a from-scratch tight run,
   and the overload burst must reject (or degrade) without starving the
-  interactive tier.
+  interactive tier. Plus the ``metrics`` record merged in by
+  ``benchmarks/bc_metrics.py``: one graph upload must serve ≥ 3 distinct
+  metrics through the gateway, each repeat a byte-identical cache hit
+  with its executed plan recorded, the metric-keyed cache must be
+  collision-free, and the mixed-metric fused leg must not regress
+  against unfused.
 
 Usage: ``python tools/check_bench.py BENCH_approx.json BENCH_serve.json``
 (file kind is sniffed from the record, not the name).
@@ -281,6 +286,69 @@ def check_serve(rec: dict) -> list:
                           f"concurrency {c} (speedup {s:.2f} < 0.9)")
     errors += _check_mixed_tier(rec.get("mixed_tier"))
     errors += _check_gateway(rec.get("gateway"))
+    errors += _check_metrics(rec.get("metrics"))
+    return errors
+
+
+def _check_metrics(mrec) -> list:
+    """The metric-generic serving record: one upload, many analytics."""
+    if not mrec:
+        return ["serve: metrics record missing (run benchmarks/"
+                "bc_metrics.py after bc_gateway)"]
+    errors = []
+    gw = mrec.get("gateway") or {}
+    per = gw.get("per_metric") or {}
+    if len(per) < 3:
+        errors.append(f"serve.metrics: need >= 3 metrics through the "
+                      f"gateway, got {sorted(per)}")
+    base_metrics = {k.split(":")[0] for k in per}
+    if "betweenness" not in base_metrics or len(base_metrics) < 3:
+        errors.append(f"serve.metrics: expected betweenness plus >= 2 "
+                      f"other metrics, got {sorted(base_metrics)}")
+    for key, p in per.items():
+        where = f"serve.metrics.gateway[{key}]"
+        if not p.get("cache_hit", False):
+            errors.append(f"{where}: identical repeat was not a cache hit")
+        if not p.get("cache_identical", False):
+            errors.append(f"{where}: cached payload differs from the "
+                          f"cold run's")
+        errors += _check_plan(p.get("plan"), f"{where}.plan")
+    if not gw.get("collision_free", False):
+        errors.append("serve.metrics.gateway: metric-keyed cache entries "
+                      "collided (one metric's hit returned another's λ)")
+    if gw.get("n_uploads", 0) != 1:
+        errors.append(f"serve.metrics.gateway: expected exactly one graph "
+                      f"upload, got {gw.get('n_uploads')}")
+    fz = mrec.get("fused") or {}
+    legs = fz.get("legs") or {}
+    for leg in ("unfused", "fused"):
+        r = legs.get(leg)
+        where = f"serve.metrics.fused.{leg}"
+        if not r:
+            errors.append(f"{where}: leg missing")
+            continue
+        if not r.get("sources_per_sec", 0) > 0:
+            errors.append(f"{where}: sources_per_sec missing or zero")
+        if not r.get("all_converged", False):
+            errors.append(f"{where}: not all requests converged")
+        plans = r.get("plans", [])
+        if not plans:
+            errors.append(f"{where}: executed BCPlans missing")
+        elif leg == "fused":
+            # only the fused leg carries per-request plans — unfused
+            # requests are sized by the graph capacity plan. Default-
+            # metric plans omit the key (wire-format stability).
+            recorded = {p.get("metric", "betweenness") for p in plans}
+            if not recorded >= {"betweenness", "closeness"}:
+                errors.append(f"{where}: plans do not record the mixed "
+                              f"metrics (got {sorted(recorded)})")
+        for i, p in enumerate(plans):
+            errors += _check_plan(p, f"{where}.plans[{i}]")
+    # fusion across metrics must pay (0.9 tolerates host noise)
+    if legs and fz.get("mixed_speedup", 0) < 0.9:
+        errors.append(f"serve.metrics.fused: mixed-metric fused throughput "
+                      f"regressed (speedup {fz.get('mixed_speedup', 0):.2f} "
+                      f"< 0.9)")
     return errors
 
 
